@@ -1,0 +1,73 @@
+"""Shared benchmark scale settings.
+
+Paper scale (100 clients × 30000 samples × 10 epochs × 10 rounds) is CPU-
+prohibitive; benchmarks run a proportionally reduced federation (same
+code paths, same formulas) and report both the measured numbers and the
+paper-scale extrapolation of the *exact* communication formulas.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.core import tm
+from repro.data import partition, synthetic
+
+
+@dataclasses.dataclass(frozen=True)
+class Scale:
+    n_clients: int = 20
+    n_train: int = 80
+    n_test: int = 40
+    n_conf: int = 40
+    rounds: int = 5
+    local_epochs: int = 3
+    side: int = 12               # 12×12 synthetic images
+    pool: int = 6000
+
+
+PAPER_TM = {
+    # dataset → (clauses, s, T) per paper Table 2
+    "synthmnist": (300, 10.0, 1000),
+    "synthfashion": (500, 10.0, 1000),
+    "synthfemnist": (500, 10.0, 1000),
+}
+
+BENCH_TM = {
+    # reduced clause counts at bench scale (same ratios)
+    "synthmnist": (48, 5.0, 40),
+    "synthfashion": (64, 5.0, 40),
+    "synthfemnist": (64, 5.0, 40),
+}
+
+
+def make_fed_dataset(name: str, experiment: int, scale: Scale,
+                     seed: int = 0):
+    x, y, dcfg = synthetic.make_dataset(name, scale.pool,
+                                        jax.random.PRNGKey(seed),
+                                        side=scale.side)
+    data = partition.partition(
+        x, y, dcfg.n_classes, n_clients=scale.n_clients,
+        experiment=experiment, key=jax.random.PRNGKey(seed + 1),
+        n_train=scale.n_train, n_test=scale.n_test, n_conf=scale.n_conf)
+    return data, dcfg
+
+
+def bench_tm_config(name: str, dcfg, scale: Scale) -> tm.TMConfig:
+    m, s, T = BENCH_TM[name]
+    return tm.TMConfig(n_classes=dcfg.n_classes, n_clauses=m,
+                       n_features=dcfg.n_features, n_states=63, s=s, T=T)
+
+
+def paper_scale_comm_mb(name: str, n_classes: int) -> dict:
+    """Exact paper-scale communication formulas (Table 4/5 columns)."""
+    m, _, _ = PAPER_TM[name]
+    clients, rounds, bpw = 100, 10, 4
+    tpfl_up = clients * rounds * (m * bpw + 4) / 1e6
+    tpfl_down_max = n_classes * rounds * m * bpw / 1e6
+    fedtm_up = clients * rounds * n_classes * m * bpw / 1e6
+    return {"tpfl_upload_mb": round(tpfl_up, 3),
+            "tpfl_download_mb_max": round(tpfl_down_max, 3),
+            "fedtm_upload_mb": round(fedtm_up, 3),
+            "tpfl_per_model_upload_mb": round(tpfl_up / clients, 4)}

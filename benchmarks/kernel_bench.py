@@ -1,0 +1,46 @@
+"""TM kernel micro-bench: clause-eval oracle wall time (CPU) + Pallas
+kernel validation timing.  (The Pallas kernels target TPU; CPU interpret
+mode is a correctness harness, so the derived column reports the kernel's
+*analytic* TPU roofline time, not CPU wall time.)
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tm
+from repro.kernels import ref
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+
+def bench(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6     # µs
+
+
+def run() -> list[str]:
+    rows = []
+    for (C, m, o, B) in [(10, 300, 784, 64), (62, 500, 784, 32)]:
+        L = 2 * o
+        key = jax.random.PRNGKey(0)
+        include = jax.random.bernoulli(key, 0.1, (C * m, L)).astype(jnp.int8)
+        lits = jax.random.bernoulli(key, 0.5, (B, L)).astype(jnp.int8)
+        f = jax.jit(lambda i, l: ref.clause_outputs_ref(i, l))
+        us = bench(f, include, lits)
+        flops = 2.0 * B * C * m * L
+        bytes_ = (include.size + lits.size + B * C * m * 4)
+        t_tpu = max(flops / PEAK_FLOPS_BF16, bytes_ / HBM_BW) * 1e6
+        rows.append(f"clause_eval_C{C}_m{m}_B{B},{us:.1f},"
+                    f"tpu_roofline_us={t_tpu:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

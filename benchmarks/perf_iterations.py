@@ -1,0 +1,87 @@
+"""§Perf driver: run the hillclimb matrix (3 chosen pairs × knob settings)
+as dryrun subprocesses (env toggles must be set before jax imports).
+
+Pairs (chosen per the assignment criteria):
+  * deepseek-v3-671b × train_4k — most collective-bound baseline
+  * xlstm-350m       × train_4k — worst roofline fraction (recurrent
+                                   resharding pathology)
+  * jamba-1.5-large-398b × train_4k — largest model; hybrid MoE+Mamba,
+                                   closest to the paper's routing story
+
+Each experiment = (tag, env overrides, extra dryrun args).  Artifacts land
+as dryrun_<arch>_<shape>_<mesh>_<tag>.json for EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+ART = ROOT / "benchmarks" / "artifacts"
+
+EXPERIMENTS: dict[str, list[tuple[str, dict, list]]] = {
+    "deepseek-v3-671b": [
+        ("noflash", {"REPRO_NO_FLASH_VJP": "1"}, []),
+        ("moe_ep", {"REPRO_SHARD_MOE": "1"}, []),
+        ("optbf16", {}, ["--opt-dtype", "bf16"]),
+        ("moe_ep_optbf16", {"REPRO_SHARD_MOE": "1"},
+         ["--opt-dtype", "bf16"]),
+    ],
+    "xlstm-350m": [
+        ("r_repl", {"REPRO_XLSTM_R_REPLICATED": "1"}, []),
+        ("chunkwise", {"REPRO_MLSTM_CHUNKWISE": "1"}, []),
+        ("chunkwise_r_repl", {"REPRO_MLSTM_CHUNKWISE": "1",
+                              "REPRO_XLSTM_R_REPLICATED": "1"}, []),
+    ],
+    "granite-moe-3b-a800m": [
+        ("tp_nofsdp", {"REPRO_MOE_TP_NO_FSDP": "1"}, []),
+        ("tp_nofsdp_optbf16", {"REPRO_MOE_TP_NO_FSDP": "1"},
+         ["--opt-dtype", "bf16"]),
+    ],
+    "jamba-1.5-large-398b": [
+        ("noflash", {"REPRO_NO_FLASH_VJP": "1"}, []),
+        ("moe_ep", {"REPRO_SHARD_MOE": "1"}, []),
+        ("optbf16", {}, ["--opt-dtype", "bf16"]),
+    ],
+}
+
+
+def run_one(arch: str, tag: str, env: dict, extra: list,
+            shape: str = "train_4k") -> dict | None:
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--tag", tag, *extra]
+    full_env = {**os.environ, "PYTHONPATH": str(ROOT / "src"), **env}
+    print(f"→ {arch} {shape} [{tag}] env={env} {extra}", flush=True)
+    r = subprocess.run(cmd, env=full_env, capture_output=True, text=True,
+                       cwd=ROOT)
+    if r.returncode != 0:
+        print(r.stdout[-2000:], r.stderr[-2000:])
+        return None
+    mesh_id = arch.replace(".", "_")
+    f = ART / f"dryrun_{mesh_id}_{shape}_16x16_{tag}.json"
+    if not f.exists():
+        f = ART / f"dryrun_{arch}_{shape}_16x16_{tag}.json"
+    return json.loads(f.read_text()) if f.exists() else None
+
+
+def main() -> None:
+    results = {}
+    for arch, exps in EXPERIMENTS.items():
+        for tag, env, extra in exps:
+            r = run_one(arch, tag, env, extra)
+            if r:
+                rf = r["roofline"]
+                results[f"{arch}:{tag}"] = rf
+                print(f"   comp={rf['compute_s']:.3e} "
+                      f"mem={rf['memory_s']:.3e} "
+                      f"coll={rf['collective_s']:.3e} "
+                      f"peak={r['memory']['peak_bytes_per_device']/1e9:.1f}GB",
+                      flush=True)
+    (ART / "perf_iterations.json").write_text(json.dumps(results, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""§Roofline: aggregate the dry-run artifacts into the per-(arch × shape ×
+mesh) roofline table (markdown + JSON).  Reads benchmarks/artifacts/
+dryrun_*.json produced by repro.launch.dryrun.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parent / "artifacts"
+
+
+def load() -> list[dict]:
+    rows = []
+    for f in sorted(ART.glob("dryrun_*.json")):
+        # baseline table only: skip perf-iteration artifacts (…_<tag>.json)
+        if not (f.name.endswith("_16x16.json")
+                or f.name.endswith("_2x16x16.json")):
+            continue
+        rows.append(json.loads(f.read_text()))
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    return f"{x:.2e}"
+
+
+def table(rows: list[dict], mesh: str = "16x16") -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "bound | model GFLOPs | useful ratio | peak GB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rf['compute_s'])} | "
+            f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+            f"{rf['bottleneck']} | "
+            f"{rf.get('model_flops_global', 0)/1e9:.1f} | "
+            f"{rf.get('useful_flops_ratio', 0):.3f} | "
+            f"{r['memory']['peak_bytes_per_device']/1e9:.2f} |")
+    return hdr + "\n".join(lines)
+
+
+def run() -> dict:
+    rows = load()
+    n16 = sum(1 for r in rows if r["mesh"] == "16x16")
+    n512 = sum(1 for r in rows if r["mesh"] == "2x16x16")
+    out = {"n_single_pod": n16, "n_multi_pod": n512, "rows": len(rows)}
+    print(f"roofline: {n16} single-pod + {n512} multi-pod artifacts")
+    md = "## Single-pod (16×16 = 256 chips)\n\n" + table(rows, "16x16") \
+        + "\n\n## Multi-pod (2×16×16 = 512 chips)\n\n" \
+        + table(rows, "2x16x16") + "\n"
+    (ART / "roofline_table.md").write_text(md)
+    (ART / "roofline_summary.json").write_text(json.dumps(out, indent=2))
+    return out
+
+
+if __name__ == "__main__":
+    run()

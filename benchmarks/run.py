@@ -1,0 +1,70 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines per the harness contract,
+then the per-table JSON artifacts land in benchmarks/artifacts/.
+
+  PYTHONPATH=src python -m benchmarks.run            # all benches
+  PYTHONPATH=src python -m benchmarks.run --quick    # reduced scale
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks import (ablation_multiclass, common, convergence,  # noqa: E402
+                        kernel_bench, roofline, table4_tpfl,
+                        table5_comparison)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    scale = common.Scale(n_clients=10, n_train=40, n_test=20, n_conf=20,
+                         rounds=2, local_epochs=1) if args.quick \
+        else common.Scale()
+
+    print("name,us_per_call,derived")
+    for row in kernel_bench.run():
+        print(row)
+
+    t0 = time.time()
+    rows4 = table4_tpfl.run(scale=scale)
+    print(f"table4_tpfl,{(time.time()-t0)*1e6/max(len(rows4),1):.0f},"
+          f"rows={len(rows4)}")
+
+    t0 = time.time()
+    rows5 = table5_comparison.run(scale=scale)
+    best = max(rows5, key=lambda r: r["accuracy"])
+    print(f"table5_comparison,{(time.time()-t0)*1e6/max(len(rows5),1):.0f},"
+          f"best={best['method']}:{best['accuracy']}")
+
+    t0 = time.time()
+    conv = convergence.run(scale=common.Scale(
+        rounds=2 if args.quick else 3,
+        n_clients=scale.n_clients, n_train=scale.n_train,
+        n_test=scale.n_test, n_conf=scale.n_conf,
+        local_epochs=scale.local_epochs))
+    print(f"convergence,{(time.time()-t0)*1e6:.0f},"
+          f"exp5_first_round_max={conv['claim_exp5_first_round_is_max']}")
+
+    t0 = time.time()
+    abl = ablation_multiclass.run(scale=common.Scale(
+        rounds=2 if args.quick else 3,
+        n_clients=scale.n_clients, n_train=scale.n_train,
+        n_test=scale.n_test, n_conf=scale.n_conf,
+        local_epochs=scale.local_epochs))
+    print(f"ablation_multiclass,{(time.time()-t0)*1e6/3:.0f},"
+          f"best_j={max(abl, key=lambda r: r['accuracy'])['top_classes']}")
+
+    rf = roofline.run()
+    print(f"roofline,0,artifacts={rf['rows']}")
+
+
+if __name__ == "__main__":
+    main()

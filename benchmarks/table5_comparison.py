@@ -1,0 +1,66 @@
+"""Paper Table 5: TPFL vs FedAvg / FedProx / IFCA / FLIS / FedTM under the
+fully non-IID setup (experiment 5), accuracy + per-model upload cost.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from benchmarks import common
+from repro.core import baselines, federation
+
+ART = Path(__file__).resolve().parent / "artifacts"
+
+
+def run(dataset: str = "synthmnist", scale: common.Scale | None = None,
+        seed: int = 0) -> list[dict]:
+    scale = scale or common.Scale()
+    data, dcfg = common.make_fed_dataset(dataset, 5, scale, seed)
+    tm_cfg = common.bench_tm_config(dataset, dcfg, scale)
+    rows = []
+
+    def add(name, accs, up_mb, down_mb, t0):
+        per_model = up_mb / scale.n_clients / scale.rounds
+        rows.append({"method": name,
+                     "accuracy": round(accs[-1], 4),
+                     "acc_per_round": [round(a, 4) for a in accs],
+                     "upload_mb_total": round(up_mb, 5),
+                     "download_mb_total": round(down_mb, 5),
+                     "upload_mb_per_model_round": round(per_model, 6),
+                     "wall_s": round(time.time() - t0, 1)})
+        print(f"table5 {name}: acc={rows[-1]['accuracy']} "
+              f"up/model/round={per_model*1000:.3f}KB", flush=True)
+
+    # TPFL
+    t0 = time.time()
+    fed_cfg = federation.FedConfig(n_clients=scale.n_clients,
+                                   rounds=scale.rounds,
+                                   local_epochs=scale.local_epochs)
+    _, hist = federation.run(data, tm_cfg, fed_cfg, jax.random.PRNGKey(1))
+    up, down = federation.total_comm_mb(hist)
+    add("tpfl", [float(h.mean_accuracy) for h in hist], up, down, t0)
+
+    bcfg = baselines.BaselineConfig(
+        n_clients=scale.n_clients, rounds=scale.rounds,
+        local_epochs=scale.local_epochs, ifca_k=min(10, dcfg.n_classes))
+
+    for name in ("fedavg", "fedprox", "ifca", "flis"):
+        t0 = time.time()
+        h = baselines.BASELINES[name](data, bcfg, jax.random.PRNGKey(2),
+                                      dcfg.n_features, dcfg.n_classes)
+        add(name, h.accuracy, h.upload_mb, h.download_mb, t0)
+
+    t0 = time.time()
+    h = baselines.run_fedtm(data, tm_cfg, bcfg, jax.random.PRNGKey(3))
+    add("fedtm", h.accuracy, h.upload_mb, h.download_mb, t0)
+
+    ART.mkdir(exist_ok=True)
+    (ART / "table5_comparison.json").write_text(json.dumps(rows, indent=2))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""End-to-end driver: the paper's full experiment at laptop scale —
+TPFL vs FedAvg vs FedTM on fully non-IID synthetic FEMNIST (62 classes),
+multi-round, with exact communication metering.
+
+  PYTHONPATH=src python examples/federated_training.py [--rounds 5]
+"""
+import argparse
+import time
+
+import jax
+
+from repro.core import baselines, federation, tm
+from repro.data import partition, synthetic
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--clients", type=int, default=12)
+    ap.add_argument("--dataset", default="synthfemnist",
+                    choices=synthetic.DATASETS)
+    args = ap.parse_args()
+
+    key = jax.random.PRNGKey(0)
+    x, y, dcfg = synthetic.make_dataset(args.dataset, 8000, key, side=12)
+    data = partition.partition(
+        x, y, dcfg.n_classes, n_clients=args.clients, experiment=5,
+        key=jax.random.PRNGKey(1), n_train=80, n_test=40, n_conf=40)
+    print(f"{args.dataset}: {dcfg.n_classes} classes, "
+          f"{args.clients} clients, fully non-IID (experiment 5)")
+
+    tm_cfg = tm.TMConfig(n_classes=dcfg.n_classes, n_clauses=48,
+                         n_features=dcfg.n_features, s=5.0, T=40)
+
+    t0 = time.time()
+    fed_cfg = federation.FedConfig(n_clients=args.clients,
+                                   rounds=args.rounds, local_epochs=2)
+    _, hist = federation.run(data, tm_cfg, fed_cfg, jax.random.PRNGKey(2))
+    up, down = federation.total_comm_mb(hist)
+    print(f"\nTPFL   acc/round: "
+          f"{[round(float(h.mean_accuracy), 3) for h in hist]}")
+    print(f"TPFL   comm: up {up:.4f} MB / down {down:.4f} MB "
+          f"({time.time()-t0:.0f}s)")
+
+    bcfg = baselines.BaselineConfig(n_clients=args.clients,
+                                    rounds=args.rounds, local_epochs=2)
+    t0 = time.time()
+    h = baselines.run_fedavg(data, bcfg, jax.random.PRNGKey(3),
+                             dcfg.n_features, dcfg.n_classes)
+    print(f"\nFedAvg acc/round: {[round(a, 3) for a in h.accuracy]}")
+    print(f"FedAvg comm: up {h.upload_mb:.4f} MB ({time.time()-t0:.0f}s)")
+
+    t0 = time.time()
+    h = baselines.run_fedtm(data, tm_cfg, bcfg, jax.random.PRNGKey(4))
+    print(f"\nFedTM  acc/round: {[round(a, 3) for a in h.accuracy]}")
+    print(f"FedTM  comm: up {h.upload_mb:.4f} MB ({time.time()-t0:.0f}s)")
+
+    print("\n→ TPFL uploads one class-weight vector per client-round; "
+          "FedTM uploads all classes; FedAvg ships the full DL model.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,253 @@
+"""The paper's five baselines (Table 3/5), reimplemented in JAX.
+
+* FedAvg  (McMahan et al. 2017)          — single global model, full averaging.
+* FedProx (Li et al. 2018, µ=0.1)        — FedAvg + proximal local objective.
+* IFCA    (Ghosh et al. 2020)            — k global models, loss-minimizing
+                                            cluster choice, within-cluster avg.
+* FLIS-DC (Morafah et al. 2023, flavour) — clusters from inference similarity
+                                            on a shared probe set (no fixed k).
+* FedTM   (Qi et al. 2023, flavour)      — TM with *full* (all-classes) weight
+                                            averaging, no personalization.
+
+DL baselines run on the repo MLP (`core/mlp.py`); FedTM runs on the same TM
+as TPFL so the TPFL-vs-FedTM delta isolates the paper's contribution
+(confidence clustering + selective per-class upload).  Communication is
+metered from the true parameter byte counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mlp, tm
+from repro.data.partition import ClientData
+
+
+@dataclasses.dataclass(frozen=True)
+class BaselineConfig:
+    n_clients: int = 100
+    rounds: int = 10
+    local_epochs: int = 10
+    lr: float = 0.05
+    batch: int = 32
+    n_hidden: int = 128
+    prox_mu: float = 0.1       # FedProx (paper §6.6: 0.1)
+    ifca_k: int = 10
+    flis_threshold: float = 0.9
+    flis_probe: int = 64
+
+
+class History(NamedTuple):
+    accuracy: list[float]            # mean client accuracy per round
+    upload_mb: float                 # totals over all rounds
+    download_mb: float
+
+
+def _client_keys(key: jax.Array, n: int, r: int) -> jax.Array:
+    return jax.random.split(jax.random.fold_in(key, r), n)
+
+
+# ---------------------------------------------------------------------------
+# FedAvg / FedProx
+# ---------------------------------------------------------------------------
+
+def run_fedavg(data: ClientData, cfg: BaselineConfig, key: jax.Array,
+               n_features: int, n_classes: int,
+               prox: bool = False) -> History:
+    k_init, k_train = jax.random.split(key)
+    global_params = mlp.init(k_init, n_features, cfg.n_hidden, n_classes)
+    pbytes = mlp.n_bytes(global_params)
+    mu = cfg.prox_mu if prox else 0.0
+
+    def local(p_global, xt, yt, k):
+        ref = p_global if prox else None
+        return mlp.local_train(p_global, xt, yt, k, epochs=cfg.local_epochs,
+                               batch=cfg.batch, lr=cfg.lr,
+                               prox_mu=mu, prox_ref=ref)
+
+    accs = []
+    for r in range(cfg.rounds):
+        ks = _client_keys(k_train, cfg.n_clients, r)
+        stacked = jax.vmap(local, in_axes=(None, 0, 0, 0))(
+            global_params, data.x_train, data.y_train, ks)
+        global_params = mlp.tree_mean(stacked)
+        acc = jax.vmap(lambda x, y: mlp.accuracy(global_params, x, y))(
+            data.x_test, data.y_test).mean()
+        accs.append(float(acc))
+    total = cfg.rounds * cfg.n_clients * pbytes / 1e6
+    return History(accs, total, total)
+
+
+def run_fedprox(data: ClientData, cfg: BaselineConfig, key: jax.Array,
+                n_features: int, n_classes: int) -> History:
+    return run_fedavg(data, cfg, key, n_features, n_classes, prox=True)
+
+
+# ---------------------------------------------------------------------------
+# IFCA
+# ---------------------------------------------------------------------------
+
+def run_ifca(data: ClientData, cfg: BaselineConfig, key: jax.Array,
+             n_features: int, n_classes: int) -> History:
+    k_init, k_train = jax.random.split(key)
+    models = jax.vmap(
+        lambda k: mlp.init(k, n_features, cfg.n_hidden, n_classes))(
+        jax.random.split(k_init, cfg.ifca_k))     # stacked (k, ...)
+    pbytes = mlp.n_bytes(jax.tree.map(lambda a: a[0], models))
+
+    def pick(models, xt, yt):
+        # client chooses the cluster model with lowest local loss
+        losses = jax.vmap(lambda p: mlp.loss_fn(p, xt, yt))(models)
+        return jnp.argmin(losses)
+
+    accs = []
+    for r in range(cfg.rounds):
+        ks = _client_keys(k_train, cfg.n_clients, r)
+        choice = jax.vmap(pick, in_axes=(None, 0, 0))(
+            models, data.x_train, data.y_train)          # (n,)
+
+        def local(models, j, xt, yt, k):
+            p = jax.tree.map(lambda a: a[j], models)
+            return mlp.local_train(p, xt, yt, k, epochs=cfg.local_epochs,
+                                   batch=cfg.batch, lr=cfg.lr)
+
+        trained = jax.vmap(local, in_axes=(None, 0, 0, 0, 0))(
+            models, choice, data.x_train, data.y_train, ks)
+
+        onehot = jax.nn.one_hot(choice, cfg.ifca_k)       # (n, k)
+        counts = onehot.sum(0)
+
+        def agg(new, old):
+            s = jnp.einsum("n...,nk->k...", new, onehot)
+            mean = s / jnp.maximum(counts, 1).reshape(
+                (-1,) + (1,) * (new.ndim - 1))
+            return jnp.where(
+                (counts > 0).reshape((-1,) + (1,) * (new.ndim - 1)),
+                mean, old)
+
+        models = jax.tree.map(agg, trained, models)
+
+        def client_acc(models, j, x, y):
+            return mlp.accuracy(jax.tree.map(lambda a: a[j], models), x, y)
+
+        acc = jax.vmap(client_acc, in_axes=(None, 0, 0, 0))(
+            models, choice, data.x_test, data.y_test).mean()
+        accs.append(float(acc))
+    up = cfg.rounds * cfg.n_clients * pbytes / 1e6
+    down = cfg.rounds * cfg.n_clients * cfg.ifca_k * pbytes / 1e6  # k models down
+    return History(accs, up, down)
+
+
+# ---------------------------------------------------------------------------
+# FLIS (dynamic-clustering flavour)
+# ---------------------------------------------------------------------------
+
+def _similarity_clusters(sim: np.ndarray, threshold: float) -> np.ndarray:
+    """Connected components of the thresholded similarity graph."""
+    n = sim.shape[0]
+    labels = -np.ones(n, dtype=np.int64)
+    cur = 0
+    for i in range(n):
+        if labels[i] >= 0:
+            continue
+        stack = [i]
+        labels[i] = cur
+        while stack:
+            u = stack.pop()
+            for v in range(n):
+                if labels[v] < 0 and sim[u, v] >= threshold:
+                    labels[v] = cur
+                    stack.append(v)
+        cur += 1
+    return labels
+
+
+def run_flis(data: ClientData, cfg: BaselineConfig, key: jax.Array,
+             n_features: int, n_classes: int) -> History:
+    k_init, k_probe, k_train = jax.random.split(key, 3)
+    global_params = mlp.init(k_init, n_features, cfg.n_hidden, n_classes)
+    pbytes = mlp.n_bytes(global_params)
+    # shared unlabeled probe set (server-side, standard FLIS assumption)
+    probe = data.x_conf.reshape(-1, n_features)
+    idx = jax.random.choice(k_probe, probe.shape[0], (cfg.flis_probe,),
+                            replace=False)
+    probe = probe[idx]
+
+    stacked = jax.vmap(lambda k: mlp.init(k, n_features, cfg.n_hidden,
+                                          n_classes))(
+        jax.random.split(k_init, cfg.n_clients))
+    cluster_of = np.zeros(cfg.n_clients, dtype=np.int64)
+    accs = []
+    for r in range(cfg.rounds):
+        ks = _client_keys(k_train, cfg.n_clients, r)
+        stacked = jax.vmap(lambda p, xt, yt, k: mlp.local_train(
+            p, xt, yt, k, epochs=cfg.local_epochs, batch=cfg.batch,
+            lr=cfg.lr))(stacked, data.x_train, data.y_train, ks)
+
+        # inference similarity on the probe set
+        preds = jax.vmap(lambda p: jax.nn.softmax(mlp.apply(p, probe)))(
+            stacked)                                     # (n, P, C)
+        flat = preds.reshape(cfg.n_clients, -1)
+        flat = flat / jnp.linalg.norm(flat, axis=1, keepdims=True)
+        sim = np.asarray(flat @ flat.T)
+        cluster_of = _similarity_clusters(sim, cfg.flis_threshold)
+
+        onehot = jax.nn.one_hot(jnp.asarray(cluster_of),
+                                int(cluster_of.max()) + 1)
+        counts = onehot.sum(0)
+
+        def agg(a):
+            s = jnp.einsum("n...,nk->k...", a, onehot)
+            return s / jnp.maximum(counts, 1).reshape(
+                (-1,) + (1,) * (a.ndim - 1))
+
+        cluster_models = jax.tree.map(agg, stacked)
+        stacked = jax.tree.map(
+            lambda cm: cm[jnp.asarray(cluster_of)], cluster_models)
+
+        acc = jax.vmap(mlp.accuracy)(stacked, data.x_test,
+                                     data.y_test).mean()
+        accs.append(float(acc))
+    total = cfg.rounds * cfg.n_clients * pbytes / 1e6
+    return History(accs, total, total)
+
+
+# ---------------------------------------------------------------------------
+# FedTM (full-model TM averaging, no personalization)
+# ---------------------------------------------------------------------------
+
+def run_fedtm(data: ClientData, tm_cfg: tm.TMConfig, cfg: BaselineConfig,
+              key: jax.Array) -> History:
+    k_init, k_train = jax.random.split(key)
+    params = jax.vmap(lambda k: tm.init_params(tm_cfg, k))(
+        jax.random.split(k_init, cfg.n_clients))
+    wbytes = tm_cfg.n_classes * tm_cfg.n_clauses * 4   # all-classes weights
+
+    accs = []
+    for r in range(cfg.rounds):
+        ks = _client_keys(k_train, cfg.n_clients, r)
+        params = jax.vmap(lambda p, xt, yt, k: tm.train(
+            p, xt, yt, k, tm_cfg, epochs=cfg.local_epochs))(
+            params, data.x_train, data.y_train, ks)
+        # full (C, m) weight averaging across every client — no clustering
+        w_global = jnp.round(params.weights.astype(jnp.float32)
+                             .mean(axis=0)).astype(jnp.int32)
+        params = params._replace(
+            weights=jnp.broadcast_to(w_global, params.weights.shape))
+        acc = jax.vmap(lambda p, x, y: tm.accuracy(p, x, y, tm_cfg))(
+            params, data.x_test, data.y_test).mean()
+        accs.append(float(acc))
+    total = cfg.rounds * cfg.n_clients * wbytes / 1e6
+    return History(accs, total, total)
+
+
+BASELINES: dict[str, Callable] = {
+    "fedavg": run_fedavg,
+    "fedprox": run_fedprox,
+    "ifca": run_ifca,
+    "flis": run_flis,
+}

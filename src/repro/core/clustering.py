@@ -1,0 +1,42 @@
+"""Confidence-based cluster aggregation (paper Alg. 2, Phases B+C).
+
+The aggregator keeps at most C clusters — cluster k collects the class-k
+weight vectors of every client whose maximum confidence was class k, and
+averages them.  Implemented as a one-hot segment-mean so it vmaps/pjits;
+on a device mesh the same computation lowers to a *masked* all-reduce
+(see repro.fl.masked_collectives), which is the TPU-native form of the
+paper's parameter-server aggregation.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class ClusterResult(NamedTuple):
+    cluster_weights: jnp.ndarray  # (C, m) per-cluster averaged vectors
+    counts: jnp.ndarray           # (C,)  |K_k| members per cluster
+    assignment: jnp.ndarray       # (n_clients,) cluster id per client
+
+
+def aggregate(uploads: jnp.ndarray, assignment: jnp.ndarray,
+              n_clusters: int,
+              prev: jnp.ndarray | None = None) -> ClusterResult:
+    """uploads: (n_clients, m) — each client's W[c_max] vector.
+
+    Empty clusters keep ``prev`` (or zero when there is no history), per
+    Alg. 2: a cluster is only (re)initialized when a client contributes.
+    """
+    # one_hot (not eye-indexing): out-of-range ids (−1 = "not shared",
+    # from the §7 threshold extension) contribute nothing
+    import jax
+    onehot = jax.nn.one_hot(assignment, n_clusters,
+                            dtype=uploads.dtype)               # (n, C)
+    sums = onehot.T @ uploads                                      # (C, m)
+    counts = onehot.sum(axis=0)                                    # (C,)
+    mean = sums / jnp.maximum(counts[:, None], 1)
+    if prev is None:
+        prev = jnp.zeros_like(mean)
+    cluster_weights = jnp.where(counts[:, None] > 0, mean, prev)
+    return ClusterResult(cluster_weights, counts, assignment)

@@ -1,0 +1,28 @@
+"""Per-class confidence scores — the quantity TPFL clusters on.
+
+Two providers with one contract `(model, D_conf) → (C,) scores`:
+
+* TM clients (the paper): aggregate clause-vote margin on D_conf
+  (Alg. 1 step 6) — re-exported from :mod:`repro.core.tm`.
+* NN clients (framework generalization, DESIGN.md §4): mean per-class
+  logit margin `logit_c − max_{c'≠c} logit_{c'}` over D_conf — the
+  differentiable analogue of the TM vote margin.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.tm import confidence_scores as tm_confidence  # noqa: F401
+
+
+def logit_margin_confidence(logits: jnp.ndarray) -> jnp.ndarray:
+    """logits: (B, C) → (C,) summed one-vs-rest margins (NN analogue)."""
+    top = logits.max(axis=-1, keepdims=True)
+    second = jnp.sort(logits, axis=-1)[:, -2][:, None]
+    margin = jnp.where(logits == top, logits - second, logits - top)
+    return margin.sum(axis=0)
+
+
+def cluster_assignment(conf: jnp.ndarray) -> jnp.ndarray:
+    """c_max = argmax_c conf[c]  (paper §4.2): cluster id == class id."""
+    return jnp.argmax(conf, axis=-1)

@@ -1,0 +1,155 @@
+"""TPFL federation driver — Algorithms 1 & 2 of the paper, end to end.
+
+One TPFL round (Fig. 2):
+  Phase A (client, Alg. 1): local TM training on D_train, per-class
+    confidence on D_conf, upload ``(c_max, W[c_max])``.
+  Phase B (aggregator): route the upload to cluster k = c_max.
+  Phase C (aggregator): per-cluster average of the received vectors.
+  Phase D (aggregator→clients): send cluster k's averaged vector back to
+    cluster k's members only; clients evaluate on D_test.
+
+The client population is a single vmapped ``TMParams`` pytree (leading
+axis = clients), so a full round is one jitted program.  Communication is
+metered exactly (§6.7 accounting: upload per client = one weight vector +
+class id; download per paper's Fig. 5 = one broadcast per non-empty
+cluster; we also report the per-client download).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import clustering, tm
+from repro.data.partition import ClientData
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    n_clients: int = 100
+    rounds: int = 10
+    local_epochs: int = 10
+    weighted_confidence: bool = False   # Alg. 1 uses unweighted margins
+    bytes_per_weight: int = 4           # int32 clause weights on the wire
+    top_classes: int = 1                # j>1 = the paper's §7 future work:
+                                        # share the j most-confident class
+                                        # vectors → soft multi-cluster
+                                        # membership (comm scales with j)
+    conf_threshold: float | None = None  # §7: only share classes whose
+                                        # confidence beats the threshold
+
+
+class RoundMetrics(NamedTuple):
+    mean_accuracy: jnp.ndarray      # paper metric: mean over all clients
+    per_client_accuracy: jnp.ndarray
+    assignment: jnp.ndarray         # (n_clients,) cluster ids
+    cluster_counts: jnp.ndarray     # (C,)
+    upload_bytes: int
+    download_bytes_broadcast: int   # paper Fig.-5 accounting
+    download_bytes_per_client: int
+
+
+class TPFLState(NamedTuple):
+    client_params: tm.TMParams      # leading axis = clients
+    cluster_weights: jnp.ndarray    # (C, m) aggregator memory
+
+
+def init_state(tm_cfg: tm.TMConfig, fed_cfg: FedConfig,
+               key: jax.Array) -> TPFLState:
+    keys = jax.random.split(key, fed_cfg.n_clients)
+    params = jax.vmap(lambda k: tm.init_params(tm_cfg, k))(keys)
+    cw = jnp.zeros((tm_cfg.n_classes, tm_cfg.n_clauses), jnp.float32)
+    return TPFLState(params, cw)
+
+
+def _phase_a(state: TPFLState, data: ClientData, key: jax.Array,
+             tm_cfg: tm.TMConfig, fed_cfg: FedConfig):
+    """Local training + confidence + selective upload (Alg. 1).
+
+    ``top_classes`` j > 1 implements the paper's §7 future work: each
+    client shares the weight vectors of its j most-confident classes and
+    joins j clusters.  Returns c_max (n, j) and uploads (n, j, m); with
+    ``conf_threshold`` set, below-threshold slots are flagged invalid
+    (class id = -1) and skipped by the aggregator.
+    """
+    keys = jax.random.split(key, fed_cfg.n_clients)
+    j = fed_cfg.top_classes
+
+    def client(params, xt, yt, xc, k):
+        params = tm.train(params, xt, yt, k, tm_cfg,
+                          epochs=fed_cfg.local_epochs)
+        conf = tm.confidence_scores(params, xc, tm_cfg,
+                                    weighted=fed_cfg.weighted_confidence)
+        vals, c_top = jax.lax.top_k(conf, j)                 # (j,)
+        if fed_cfg.conf_threshold is not None:
+            c_top = jnp.where(vals >= fed_cfg.conf_threshold, c_top, -1)
+        upload = params.weights[jnp.clip(c_top, 0)].astype(jnp.float32)
+        return params, c_top, upload                         # (j,), (j, m)
+
+    return jax.vmap(client)(state.client_params, data.x_train, data.y_train,
+                            data.x_conf, keys)
+
+
+def _phase_d(params: tm.TMParams, assignment: jnp.ndarray,
+             cluster_weights: jnp.ndarray) -> tm.TMParams:
+    """Each client overwrites its shared classes with the cluster avg.
+
+    assignment: (n, j) class/cluster ids (−1 = not shared)."""
+    new_w = jnp.round(cluster_weights[jnp.clip(assignment, 0)]
+                      ).astype(jnp.int32)                    # (n, j, m)
+
+    def upd(wc, cs, nw):
+        def one(wc, c_nw):
+            c, nwv = c_nw
+            return jnp.where(c >= 0, wc.at[c].set(nwv), wc), None
+        wc, _ = jax.lax.scan(one, wc, (cs, nw))
+        return wc
+
+    w = jax.vmap(upd)(params.weights, assignment, new_w)
+    return params._replace(weights=w)
+
+
+def run_round(state: TPFLState, data: ClientData, key: jax.Array,
+              tm_cfg: tm.TMConfig, fed_cfg: FedConfig
+              ) -> tuple[TPFLState, RoundMetrics]:
+    params, c_top, uploads = _phase_a(state, data, key, tm_cfg, fed_cfg)
+    j = fed_cfg.top_classes
+    res = clustering.aggregate(uploads.reshape(-1, tm_cfg.n_clauses),
+                               c_top.reshape(-1), tm_cfg.n_classes,
+                               prev=state.cluster_weights)          # B + C
+    params = _phase_d(params, c_top, res.cluster_weights)            # D
+
+    acc = jax.vmap(lambda p, x, y: tm.accuracy(p, x, y, tm_cfg))(
+        params, data.x_test, data.y_test)
+
+    m = tm_cfg.n_clauses
+    bpw = fed_cfg.bytes_per_weight
+    up = fed_cfg.n_clients * j * (m * bpw + 4)       # j vectors + class ids
+    nonempty = int((res.counts > 0).sum())
+    down_bc = nonempty * m * bpw                     # per-cluster broadcast
+    down_pc = fed_cfg.n_clients * j * m * bpw        # per-client accounting
+    assignment = c_top[:, 0] if j == 1 else c_top
+    metrics = RoundMetrics(acc.mean(), acc, assignment, res.counts,
+                           up, down_bc, down_pc)
+    return TPFLState(params, res.cluster_weights), metrics
+
+
+def run(data: ClientData, tm_cfg: tm.TMConfig, fed_cfg: FedConfig,
+        key: jax.Array) -> tuple[TPFLState, list[RoundMetrics]]:
+    k_init, k_rounds = jax.random.split(key)
+    state = init_state(tm_cfg, fed_cfg, k_init)
+    history = []
+    for r in range(fed_cfg.rounds):
+        state, metrics = run_round(
+            state, data, jax.random.fold_in(k_rounds, r), tm_cfg, fed_cfg)
+        history.append(metrics)
+    return state, history
+
+
+def total_comm_mb(history: list[RoundMetrics]) -> tuple[float, float]:
+    """(upload MB, download MB) over the federation — paper Table 4."""
+    up = sum(h.upload_bytes for h in history) / 1e6
+    down = sum(h.download_bytes_broadcast for h in history) / 1e6
+    return up, down

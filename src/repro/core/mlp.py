@@ -1,0 +1,87 @@
+"""Minimal MLP + SGD substrate for the DL baselines (FedAvg/FedProx/IFCA/FLIS).
+
+The paper's DL baselines use small CNN/MLP models on MNIST-family data; a
+one-hidden-layer MLP reproduces their qualitative behaviour (and their
+communication cost is metered from the true parameter byte count of this
+model).  Pure JAX, vmappable over a client population.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, jnp.ndarray]
+
+
+def init(key: jax.Array, n_features: int, n_hidden: int,
+         n_classes: int) -> Params:
+    k1, k2 = jax.random.split(key)
+    s1 = (2.0 / n_features) ** 0.5
+    s2 = (2.0 / n_hidden) ** 0.5
+    return {
+        "w1": jax.random.normal(k1, (n_features, n_hidden)) * s1,
+        "b1": jnp.zeros((n_hidden,)),
+        "w2": jax.random.normal(k2, (n_hidden, n_classes)) * s2,
+        "b2": jnp.zeros((n_classes,)),
+    }
+
+
+def apply(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.relu(x.astype(jnp.float32) @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def loss_fn(params: Params, x: jnp.ndarray, y: jnp.ndarray,
+            prox_mu: float = 0.0, prox_ref: Params | None = None
+            ) -> jnp.ndarray:
+    logits = apply(params, x)
+    ce = -jnp.take_along_axis(jax.nn.log_softmax(logits), y[:, None],
+                              axis=1).mean()
+    if prox_ref is not None:
+        # FedProx proximal term  (µ/2)·‖θ − θ_global‖²
+        sq = sum(jnp.sum((params[k] - prox_ref[k]) ** 2) for k in params)
+        ce = ce + 0.5 * prox_mu * sq
+    return ce
+
+
+def n_bytes(params: Params) -> int:
+    return sum(int(v.size) * 4 for v in params.values())
+
+
+@partial(jax.jit, static_argnames=("epochs", "batch", "prox_mu"))
+def local_train(params: Params, x: jnp.ndarray, y: jnp.ndarray,
+                key: jax.Array, *, epochs: int, batch: int, lr: float,
+                prox_mu: float = 0.0, prox_ref: Params | None = None
+                ) -> Params:
+    """Sequential minibatch SGD over `epochs` passes (one client)."""
+    n = x.shape[0]
+    steps_per_epoch = max(n // batch, 1)
+
+    def epoch(p, k):
+        perm = jax.random.permutation(k, n)
+        xb = x[perm][: steps_per_epoch * batch].reshape(
+            steps_per_epoch, batch, -1)
+        yb = y[perm][: steps_per_epoch * batch].reshape(
+            steps_per_epoch, batch)
+
+        def step(p, b):
+            g = jax.grad(loss_fn)(p, b[0], b[1], prox_mu, prox_ref)
+            return jax.tree.map(lambda w, gw: w - lr * gw, p, g), None
+
+        p, _ = jax.lax.scan(step, p, (xb, yb))
+        return p, None
+
+    params, _ = jax.lax.scan(epoch, params, jax.random.split(key, epochs))
+    return params
+
+
+def accuracy(params: Params, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return (apply(params, x).argmax(-1) == y).mean()
+
+
+def tree_mean(stacked: Any) -> Any:
+    """Average a client-stacked pytree along axis 0 (FedAvg aggregation)."""
+    return jax.tree.map(lambda a: a.mean(axis=0), stacked)

@@ -1,0 +1,53 @@
+"""Deterministic batching for both workload kinds.
+
+* :class:`TokenBatcher` — LM training batches (tokens/labels) from the
+  modality-appropriate stub stream, seeded per step (what the train
+  driver and smoke tests consume; swaps for a real tokenized corpus by
+  replacing `_draw`).
+* :class:`FederatedSampler` — per-round client minibatch order for the
+  TPFL federation (shuffled without replacement per local epoch).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import stubs
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenBatcher:
+    cfg: ModelConfig
+    batch: int
+    seq_len: int
+    seed: int = 0
+
+    def _draw(self, step: int) -> jnp.ndarray:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        return stubs.tokens_for(self.cfg, key, self.batch, self.seq_len + 1)
+
+    def __call__(self, step: int) -> dict[str, jnp.ndarray]:
+        toks = self._draw(step)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+@dataclasses.dataclass(frozen=True)
+class FederatedSampler:
+    n_samples: int
+    batch: int
+    seed: int = 0
+
+    def epoch_order(self, client: int, rnd: int, epoch: int) -> jnp.ndarray:
+        key = jax.random.fold_in(
+            jax.random.fold_in(
+                jax.random.fold_in(jax.random.PRNGKey(self.seed), client),
+                rnd), epoch)
+        return jax.random.permutation(key, self.n_samples)
+
+    def batches(self, client: int, rnd: int, epoch: int) -> jnp.ndarray:
+        order = self.epoch_order(client, rnd, epoch)
+        n = (self.n_samples // self.batch) * self.batch
+        return order[:n].reshape(-1, self.batch)

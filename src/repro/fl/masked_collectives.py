@@ -1,0 +1,46 @@
+"""TPU-native TPFL aggregation: cluster-masked reductions.
+
+The paper's aggregator is a parameter server (Alg. 2).  On a device mesh
+the same math is a *masked* reduction: every client contributes its upload
+into its cluster's slot of a (C, ·) accumulator and one collective
+computes all cluster means at once.  Two forms:
+
+* :func:`clustered_mean` — host/vmap form (one-hot segment mean), used by
+  the in-process federations.
+* :func:`clustered_mean_sharded` — `shard_map` form over a mesh axis:
+  clients live one-per-shard, the accumulator is reduced with a single
+  `lax.psum`, and each shard reads back only its own cluster's row.  This
+  is what `fed_train_step` lowers in the dry-run; its collective bytes
+  (C·m) versus FedAvg-on-TM's full-state all-reduce (C·m·(2o+1)) is the
+  paper's communication claim measured in the HLO.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def clustered_mean(vals: jnp.ndarray, assignment: jnp.ndarray,
+                   n_clusters: int) -> jnp.ndarray:
+    """vals: (n, ...) → (n_clusters, ...) per-cluster means (0 if empty)."""
+    onehot = jax.nn.one_hot(assignment, n_clusters, dtype=jnp.float32)
+    sums = jnp.einsum("n...,nk->k...", vals.astype(jnp.float32), onehot)
+    counts = onehot.sum(0)
+    return sums / jnp.maximum(counts.reshape((-1,) + (1,) * (vals.ndim - 1)),
+                              1.0)
+
+
+def clustered_mean_sharded(local_val: jnp.ndarray, my_cluster: jnp.ndarray,
+                           n_clusters: int, axis_name: str) -> jnp.ndarray:
+    """Inside shard_map: each shard holds one client's upload (m,) and its
+    cluster id; returns this client's new cluster-averaged vector.
+
+    One psum of a (C, m) accumulator — the masked all-reduce that replaces
+    the paper's server round-trip.
+    """
+    onehot = jax.nn.one_hot(my_cluster, n_clusters, dtype=jnp.float32)
+    contrib = onehot[:, None] * local_val.astype(jnp.float32)[None, :]
+    sums = jax.lax.psum(contrib, axis_name)            # (C, m)
+    counts = jax.lax.psum(onehot, axis_name)           # (C,)
+    means = sums / jnp.maximum(counts[:, None], 1.0)
+    return means[my_cluster]

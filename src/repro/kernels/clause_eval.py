@@ -1,0 +1,154 @@
+"""Pallas TPU kernels for Tsetlin-Machine clause evaluation.
+
+The TM hot-spot is the conjunctive clause evaluation: for every sample `b`
+and clause `j`, count how many *included* literals are violated
+(`included & literal==0`) — the clause fires iff the count is zero
+(paper §4.1).  On TPU this is a boolean-matmul-shaped reduction that maps
+straight onto the MXU: we cast the {0,1} operands to f32 and accumulate the
+violation counts as an f32 dot (exact for counts < 2^24).
+
+Two kernels:
+
+* :func:`clause_outputs_pallas` — tiled `(B, L) × (L, CM) → (B, CM)`
+  violation count with a k-loop over literal tiles, then `== 0`.
+  BlockSpecs keep one `(bt, lt)` literal tile and one `(ct, lt)`
+  include tile resident in VMEM per grid step; `bt, ct, lt` default to
+  MXU/VPU-aligned multiples of (8, 128).
+
+* :func:`fused_votes_pallas` — fuses clause eval with the Eq.-1 weighted
+  class vote: grid is `(B tiles, classes)`; each step loads the whole
+  `(m, L)` clause bank of one class into VMEM (m·L ≤ a few hundred KB for
+  paper-scale machines), computes fired clauses, and reduces
+  `votes = fired @ (polarity·weight)` without materializing the `(B, C, m)`
+  clause tensor in HBM.
+
+On this CPU-only container the kernels run under ``interpret=True``
+(exercised by the test suite against :mod:`repro.kernels.ref`); on real
+TPUs the same `pallas_call`s compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ceil_to(x: int, mult: int) -> int:
+    return (x + mult - 1) // mult * mult
+
+
+def _pad2(a: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    return jnp.pad(a, ((0, rows - a.shape[0]), (0, cols - a.shape[1])))
+
+
+# ---------------------------------------------------------------------------
+# Kernel 1: tiled violation-count matmul → clause outputs
+# ---------------------------------------------------------------------------
+
+def _clause_kernel(nlit_ref, inc_ref, out_ref):
+    """out[bt, ct] += nlit[bt, lt] @ inc[ct, lt]^T  (f32 accumulation)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    nlit = nlit_ref[...].astype(jnp.float32)
+    inc = inc_ref[...].astype(jnp.float32)
+    out_ref[...] += jax.lax.dot_general(
+        nlit, inc, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("predict", "bt", "ct", "lt", "interpret"))
+def clause_outputs_pallas(include: jnp.ndarray, lits: jnp.ndarray,
+                          predict: bool = False, bt: int = 8, ct: int = 128,
+                          lt: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """include: (CM, L) {0,1}; lits: (B, L) {0,1} → fired (B, CM) int32."""
+    CM, L = include.shape
+    B = lits.shape[0]
+    Bp, CMp, Lp = _ceil_to(B, bt), _ceil_to(CM, ct), _ceil_to(L, lt)
+    # pad: extra literals are zero in both operands → no violation contribution
+    nlit = _pad2((1 - lits).astype(jnp.int8), Bp, Lp)
+    # padded literal columns of real clauses must not count as violations:
+    # (1-lits) pads to 0 there, so include padding value is irrelevant; pad 0.
+    inc = _pad2(include.astype(jnp.int8), CMp, Lp)
+
+    grid = (Bp // bt, CMp // ct, Lp // lt)
+    viol = pl.pallas_call(
+        _clause_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, lt), lambda b, c, k: (b, k)),
+            pl.BlockSpec((ct, lt), lambda b, c, k: (c, k)),
+        ],
+        out_specs=pl.BlockSpec((bt, ct), lambda b, c, k: (b, c)),
+        out_shape=jax.ShapeDtypeStruct((Bp, CMp), jnp.float32),
+        interpret=interpret,
+        name="tm_clause_eval",
+    )(nlit, inc)
+
+    fired = (viol[:B, :CM] == 0).astype(jnp.int32)
+    if predict:
+        fired = fired * (include.sum(-1) > 0).astype(jnp.int32)[None, :]
+    return fired
+
+
+# ---------------------------------------------------------------------------
+# Kernel 2: fused clause eval + weighted class vote (Eq. 1)
+# ---------------------------------------------------------------------------
+
+def _votes_kernel(nlit_ref, inc_ref, wpol_ref, nonempty_ref, out_ref):
+    nlit = nlit_ref[...].astype(jnp.float32)          # (bt, L)
+    inc = inc_ref[0].astype(jnp.float32)              # (m, L)
+    viol = jax.lax.dot_general(                        # (bt, m)
+        nlit, inc, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    fired = (viol == 0.0).astype(jnp.float32)
+    fired = fired * nonempty_ref[0].astype(jnp.float32)  # (bt, m)·(1, m)
+    wpol = wpol_ref[0].astype(jnp.float32)            # (1, m)
+    out_ref[...] = jax.lax.dot_general(                # (bt, 1)
+        fired, wpol, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("predict", "bt", "interpret"))
+def fused_votes_pallas(include: jnp.ndarray, lits: jnp.ndarray,
+                       wpol: jnp.ndarray, predict: bool = True,
+                       bt: int = 8, interpret: bool = True) -> jnp.ndarray:
+    """include: (C, m, L); lits: (B, L); wpol: (C, m) → votes (B, C) int32."""
+    C, m, L = include.shape
+    B = lits.shape[0]
+    Bp, mp, Lp = _ceil_to(B, bt), _ceil_to(m, 128), _ceil_to(L, 128)
+
+    nlit = _pad2((1 - lits).astype(jnp.int8), Bp, Lp)
+    inc = jnp.pad(include.astype(jnp.int8),
+                  ((0, 0), (0, mp - m), (0, Lp - L)))
+    # padded clauses have empty includes → viol 0 → would fire: kill them via
+    # the nonempty mask (also implements the predict-mode empty-clause rule).
+    if predict:
+        ne = (include.sum(-1) > 0)
+    else:
+        ne = jnp.ones((C, m), dtype=bool)
+    ne = jnp.pad(ne.astype(jnp.int8), ((0, 0), (0, mp - m)))[:, None, :]
+    wp = jnp.pad(wpol.astype(jnp.float32), ((0, 0), (0, mp - m)))[:, None, :]
+
+    votes = pl.pallas_call(
+        _votes_kernel,
+        grid=(Bp // bt, C),
+        in_specs=[
+            pl.BlockSpec((bt, Lp), lambda b, c: (b, 0)),
+            pl.BlockSpec((1, mp, Lp), lambda b, c: (c, 0, 0)),
+            pl.BlockSpec((1, 1, mp), lambda b, c: (c, 0, 0)),
+            pl.BlockSpec((1, 1, mp), lambda b, c: (c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, 1), lambda b, c: (b, c)),
+        out_shape=jax.ShapeDtypeStruct((Bp, C), jnp.float32),
+        interpret=interpret,
+        name="tm_fused_votes",
+    )(nlit, inc, wp, ne)
+    return votes[:B].astype(jnp.int32)

@@ -1,0 +1,49 @@
+"""Jit'd public wrappers around the TM Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels are *targeted* at TPU and compiled there), False on TPU backends.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import clause_eval as _ce
+from repro.kernels import ta_update as _ta
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def clause_outputs(include: jnp.ndarray, lits: jnp.ndarray,
+                   predict: bool = False) -> jnp.ndarray:
+    """include: (C, m, L) or (CM, L); lits: (B, L) → fired int32.
+
+    Returns (B, C, m) when given a 3-D include mask, else (B, CM).
+    """
+    interp = _interpret_default()
+    if include.ndim == 3:
+        C, m, L = include.shape
+        out = _ce.clause_outputs_pallas(include.reshape(C * m, L), lits,
+                                        predict=predict, interpret=interp)
+        return out.reshape(lits.shape[0], C, m)
+    return _ce.clause_outputs_pallas(include, lits, predict=predict,
+                                     interpret=interp)
+
+
+def fused_votes(include: jnp.ndarray, lits: jnp.ndarray, wpol: jnp.ndarray,
+                predict: bool = True) -> jnp.ndarray:
+    """(C,m,L) × (B,L) × (C,m) → unclipped Eq.-1 votes (B, C)."""
+    return _ce.fused_votes_pallas(include, lits, wpol, predict=predict,
+                                  interpret=_interpret_default())
+
+
+def ta_update(ta: jnp.ndarray, lit: jnp.ndarray, fired: jnp.ndarray,
+              type1: jnp.ndarray, type2: jnp.ndarray,
+              u_inc: jnp.ndarray, u_dec: jnp.ndarray,
+              p_inc: float, p_dec: float, n_states: int) -> jnp.ndarray:
+    """Fused Type I/II TA transition; see ref.ta_update_ref."""
+    return _ta.ta_update_pallas(ta, lit, fired, type1, type2, u_inc, u_dec,
+                                p_inc=p_inc, p_dec=p_dec, n_states=n_states,
+                                interpret=_interpret_default())

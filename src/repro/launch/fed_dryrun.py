@@ -1,0 +1,77 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")
+
+"""Dry-run of the paper's technique ON THE MESH: one TPFL round vs one
+FedAvg-on-TM round, lowered+compiled for the production mesh at paper
+scale (C=10, m=300 clauses, o=784 features, 256 clients — one client per
+data-axis device).  The collective-bytes delta between the two programs
+is the paper's communication claim measured in the partitioned HLO.
+
+  PYTHONPATH=src python -m repro.launch.fed_dryrun [--multi-pod]
+"""
+
+import argparse  # noqa: E402
+import json      # noqa: E402
+import time      # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax       # noqa: E402
+
+from repro.core import federation, tm                     # noqa: E402
+from repro.launch import fed_train, hlo_analysis          # noqa: E402
+from repro.launch.mesh import ICI_BW, make_production_mesh  # noqa: E402
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts"
+
+
+def run(multi_pod: bool = False, n_clients: int = 256,
+        clauses: int = 300) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tm_cfg = tm.TMConfig(n_classes=10, n_clauses=clauses, n_features=784,
+                         n_states=127, s=10.0, T=1000)
+    fed_cfg = federation.FedConfig(n_clients=n_clients, rounds=1,
+                                   local_epochs=1)
+    params, cw, data, key = fed_train.abstract_fed_inputs(
+        tm_cfg, fed_cfg, mesh, n_train=64, n_test=32, n_conf=32)
+
+    out = {"mesh": "2x16x16" if multi_pod else "16x16",
+           "n_clients": n_clients, "clauses": clauses}
+    with jax.set_mesh(mesh):
+        for name, build, args in (
+            ("tpfl", fed_train.make_tpfl_round(tm_cfg, fed_cfg),
+             (params, cw, data, key)),
+            ("fedavg_tm", fed_train.make_fedavg_tm_round(tm_cfg, fed_cfg),
+             (params, data, key)),
+        ):
+            t0 = time.time()
+            compiled = jax.jit(build).lower(*args).compile()
+            coll = hlo_analysis.collective_bytes(compiled.as_text())
+            total = sum(coll.values())
+            out[name] = {
+                "collective_bytes_per_device": total,
+                "collective_s": total / ICI_BW,
+                "breakdown": coll,
+                "compile_s": round(time.time() - t0, 1),
+            }
+            print(f"{name:10s}: {total/1e6:.3f} MB/device collectives "
+                  f"({out[name]['compile_s']}s compile)", flush=True)
+
+    if out["tpfl"]["collective_bytes_per_device"]:
+        out["fedavg_over_tpfl"] = (
+            out["fedavg_tm"]["collective_bytes_per_device"]
+            / out["tpfl"]["collective_bytes_per_device"])
+        print(f"FedAvg-TM moves {out['fedavg_over_tpfl']:.1f}× the "
+              f"collective bytes of TPFL")
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    (ARTIFACTS / f"fed_dryrun_{out['mesh']}.json").write_text(
+        json.dumps(out, indent=2))
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--clients", type=int, default=256)
+    args = ap.parse_args()
+    run(multi_pod=args.multi_pod, n_clients=args.clients)

@@ -1,0 +1,109 @@
+"""Distributed TPFL: one federated round as a single pjit program.
+
+Clients are a stacked `TMParams` pytree sharded over the mesh's FSDP
+("data"/"pod") axes — each shard trains its slice of the client
+population locally; the confidence-clustered aggregation lowers to the
+masked collective of `repro.fl.masked_collectives`.  A FedAvg-on-TM
+round (full-state tree mean, no clustering) is provided as the
+communication baseline: the collective-bytes delta between the two
+lowered programs is the paper's Table-4/5 claim, measured in the HLO
+(EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import clustering, federation, tm
+from repro.data.partition import ClientData
+
+
+def make_tpfl_round(tm_cfg: tm.TMConfig,
+                    fed_cfg: federation.FedConfig) -> Callable:
+    """(client_params, cluster_weights, data, key) → (params, cw, metrics).
+
+    Pure-array in/out (jit/pjit-able; all Python ints stay abstract)."""
+
+    def round_fn(client_params: tm.TMParams, cluster_weights: jnp.ndarray,
+                 data: ClientData, key: jax.Array):
+        state = federation.TPFLState(client_params, cluster_weights)
+        params, c_top, uploads = federation._phase_a(
+            state, data, key, tm_cfg, fed_cfg)
+        res = clustering.aggregate(
+            uploads.reshape(-1, tm_cfg.n_clauses), c_top.reshape(-1),
+            tm_cfg.n_classes, prev=cluster_weights)
+        params = federation._phase_d(params, c_top, res.cluster_weights)
+        acc = jax.vmap(lambda p, x, y: tm.accuracy(p, x, y, tm_cfg))(
+            params, data.x_test, data.y_test)
+        return params, res.cluster_weights, {
+            "mean_accuracy": acc.mean(),
+            "assignment": res.assignment,
+            "cluster_counts": res.counts,
+        }
+
+    return round_fn
+
+
+def make_fedavg_tm_round(tm_cfg: tm.TMConfig,
+                         fed_cfg: federation.FedConfig) -> Callable:
+    """FedAvg over the *full* TM state (TA states + all class weights) —
+    the no-personalization baseline whose all-reduce moves C·m·(2o+1)
+    numbers per client instead of TPFL's m."""
+
+    def round_fn(client_params: tm.TMParams, data: ClientData,
+                 key: jax.Array):
+        keys = jax.random.split(key, fed_cfg.n_clients)
+        params = jax.vmap(lambda p, xt, yt, k: tm.train(
+            p, xt, yt, k, tm_cfg, epochs=fed_cfg.local_epochs))(
+            client_params, data.x_train, data.y_train, keys)
+        # full-model averaging — the global all-reduce TPFL avoids
+        ta_mean = jnp.round(params.ta_state.astype(jnp.float32).mean(0)
+                            ).astype(jnp.int32)
+        w_mean = jnp.round(params.weights.astype(jnp.float32).mean(0)
+                           ).astype(jnp.int32)
+        n = params.ta_state.shape[0]
+        params = tm.TMParams(
+            ta_state=jnp.broadcast_to(ta_mean, params.ta_state.shape),
+            weights=jnp.broadcast_to(w_mean, params.weights.shape))
+        acc = jax.vmap(lambda p, x, y: tm.accuracy(p, x, y, tm_cfg))(
+            params, data.x_test, data.y_test)
+        return params, {"mean_accuracy": acc.mean()}
+
+    return round_fn
+
+
+def abstract_fed_inputs(tm_cfg: tm.TMConfig, fed_cfg: federation.FedConfig,
+                        mesh, n_train: int = 64, n_test: int = 32,
+                        n_conf: int = 32):
+    """ShapeDtypeStructs for a mesh-wide federated round (dry-run)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.sharding import rules
+
+    n = fed_cfg.n_clients
+    o = tm_cfg.n_features
+    b = rules._fsdp_or_none(mesh, n)
+
+    def sds(shape, dtype, spec):
+        return jax.ShapeDtypeStruct(shape, dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    C, m, L = tm_cfg.n_classes, tm_cfg.n_clauses, tm_cfg.n_literals
+    params = tm.TMParams(
+        ta_state=sds((n, C, m, L), jnp.int32, P(b, None, None, None)),
+        weights=sds((n, C, m), jnp.int32, P(b, None, None)))
+    cw = sds((C, m), jnp.float32, P(None, None))
+
+    def dat(k, dt=jnp.uint8):
+        return sds((n, k, o) if dt == jnp.uint8 else (n, k), dt,
+                   P(b, None, None) if dt == jnp.uint8 else P(b, None))
+
+    data = ClientData(
+        x_train=dat(n_train), y_train=dat(n_train, jnp.int32),
+        x_test=dat(n_test), y_test=dat(n_test, jnp.int32),
+        x_conf=dat(n_conf), y_conf=dat(n_conf, jnp.int32),
+        mixtures=sds((n, C), jnp.float32, P(b, None)))
+    key = sds((2,), jnp.uint32, P(None))
+    return params, cw, data, key

@@ -1,0 +1,167 @@
+"""Post-SPMD HLO analysis: collective byte counting + roofline terms.
+
+``collective_bytes`` parses the *optimized* (partitioned) HLO text, so all
+shapes are per-device; summing result-shape bytes of every cross-replica
+op gives bytes-through-ICI per device, which is the quantity the roofline
+collective term divides by per-link bandwidth.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum bytes over every tensor in an HLO type string (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+_OP_RE = re.compile(
+    r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s/]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->.*\{\s*$")
+_WHILE_RE = re.compile(r"\bwhile\(.*body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_RE = re.compile(r"\b(?:call|fusion)\(.*?(?:to_apply|calls)="
+                      r"%?([\w.\-]+)")
+
+
+def _parse_computations(hlo_text: str):
+    """name → list of body lines; also returns the ENTRY name."""
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for raw in hlo_text.splitlines():
+        m = _COMP_RE.match(raw)
+        if m and not raw.startswith(" "):
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if raw.strip() == "}" and not raw.startswith("  "):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(raw.strip())
+    return comps, entry
+
+
+def collective_bytes(hlo_text: str, weighted: bool = True) -> dict[str, int]:
+    """Per-collective-kind result bytes from optimized (post-SPMD) HLO.
+
+    ``weighted=True`` multiplies ops inside `while` bodies by the loop's
+    ``known_trip_count`` (recursively), so collectives inside scanned layer
+    stacks / flash-attention loops are counted once **per iteration** —
+    without this, a 72-layer scanned model reports 1 layer's collectives.
+    Loops without a known trip count count once (conservative floor).
+    """
+    if not weighted:
+        out = {k: 0 for k in COLLECTIVES}
+        for line in hlo_text.splitlines():
+            m = _OP_RE.match(line.strip())
+            if m and "-done(" not in line:
+                out[m.group(2)] += _shape_bytes(m.group(1))
+        return out
+
+    comps, entry = _parse_computations(hlo_text)
+    memo: dict[str, dict[str, int]] = {}
+
+    def visit(name: str, stack: tuple = ()) -> dict[str, int]:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return {k: 0 for k in COLLECTIVES}
+        total = {k: 0 for k in COLLECTIVES}
+        for line in comps[name]:
+            m = _OP_RE.match(line)
+            if m and "-done(" not in line:
+                total[m.group(2)] += _shape_bytes(m.group(1))
+            w = _WHILE_RE.search(line)
+            if w:
+                t = _TRIP_RE.search(line)
+                trips = int(t.group(1)) if t else 1
+                sub = visit(w.group(1), stack + (name,))
+                for kk in total:
+                    total[kk] += trips * sub[kk]
+                continue
+            c = _CALL_RE.search(line)
+            if c:
+                sub = visit(c.group(1), stack + (name,))
+                for kk in total:
+                    total[kk] += sub[kk]
+        memo[name] = total
+        return total
+
+    if entry is None:
+        return collective_bytes(hlo_text, weighted=False)
+    return visit(entry)
+
+
+def roofline(cost: dict[str, Any], coll: dict[str, int], *,
+             peak_flops: float, hbm_bw: float, ici_bw: float,
+             model_flops: float | None = None,
+             chips: int = 1, arg_bytes: float = 0.0) -> dict[str, Any]:
+    """Three-term roofline from per-device cost analysis + collective bytes.
+
+    cost_analysis() of a partitioned module reports *per-device* FLOPs and
+    bytes, so each term divides by a single chip's peak — equivalent to
+    the global/(chips·peak) formulation.
+
+    XLA's cost analysis counts `while` bodies ONCE, so scanned layer
+    stacks under-report FLOPs/bytes.  We therefore also report analytic
+    floors — ``compute_s_analytic`` = 6·N·D (or 2·N·D) / (chips·peak) and
+    ``memory_s_floor`` = per-device argument bytes (params + optimizer +
+    cache must be read every step) / HBM bw — and derive the bottleneck
+    from the *effective* terms ``max(hlo, floor)``.  Collective bytes are
+    trip-count-weighted (see collective_bytes), so they need no floor.
+    """
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    cbytes = float(sum(coll.values()))
+    t_compute = flops / peak_flops
+    t_memory = bytes_accessed / hbm_bw
+    t_coll = cbytes / ici_bw
+    t_comp_analytic = (model_flops / (chips * peak_flops)
+                       if model_flops else 0.0)
+    t_mem_floor = arg_bytes / hbm_bw
+    terms = {"compute_s": max(t_compute, t_comp_analytic),
+             "memory_s": max(t_memory, t_mem_floor),
+             "collective_s": t_coll,
+             "compute_s_hlo": t_compute,
+             "compute_s_analytic": t_comp_analytic,
+             "memory_s_hlo": t_memory,
+             "memory_s_floor": t_mem_floor,
+             "hlo_flops_per_device": flops,
+             "hlo_bytes_per_device": bytes_accessed,
+             "collective_bytes_per_device": cbytes,
+             "collective_breakdown": coll}
+    dom = max(("compute_s", "memory_s", "collective_s"),
+              key=lambda k: terms[k])
+    terms["bottleneck"] = dom.replace("_s", "")
+    if model_flops is not None:
+        terms["model_flops_global"] = model_flops
+        terms["useful_flops_ratio"] = (
+            model_flops / (flops * chips) if flops else 0.0)
+    return terms

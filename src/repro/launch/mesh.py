@@ -1,0 +1,41 @@
+"""Production mesh construction (TPU v5e target).
+
+Functions, not module-level constants — importing this module never
+touches jax device state (the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any
+jax import; smoke tests and benches must keep seeing 1 device).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    from jax.sharding import AxisType
+    auto = (AxisType.Auto,) * len(axes)
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) > n:       # dry-run forces 512; single-pod uses 256
+        import numpy as np
+        return Mesh(np.asarray(devices[:n]).reshape(shape), axes,
+                    axis_types=auto)
+    return jax.make_mesh(shape, axes, axis_types=auto)
+
+
+def make_host_mesh() -> Mesh:
+    """Single-device mesh for CPU smoke runs (same axis names)."""
+    from jax.sharding import AxisType
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+# TPU v5e hardware constants (per chip) — §Roofline sources.
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW = 50e9                     # B/s per link

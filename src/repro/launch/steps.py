@@ -1,0 +1,146 @@
+"""jit-able train / prefill / serve steps + abstract input specs.
+
+``input_specs`` returns weak-type-correct `ShapeDtypeStruct`s (with
+NamedShardings attached) for every model input, so the dry-run lowers
+and compiles each (architecture × shape × mesh) combination without
+allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.sharding import rules
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def needs_window(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    """long_500k on pure-attention archs runs the sliding-window serve
+    variant (DESIGN.md long-context policy); 0 = native/full attention."""
+    if shape.name == "long_500k":
+        return cfg.long_window
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig,
+                    opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig()
+                    ) -> Callable:
+    def train_step(params, opt_state, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            transformer.lm_loss, has_aux=True)(
+            params, cfg, batch["tokens"], batch["labels"])
+        params, opt_state = adamw.update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, {"loss": loss, **parts}
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch):
+        logits, _ = transformer.forward(params, cfg,
+                                        tokens=batch["tokens"], remat=False)
+        return logits[:, -1]      # next-token logits
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, window: int = 0) -> Callable:
+    def serve_step(params, token, caches):
+        logits, caches = transformer.decode_step(params, cfg, token, caches,
+                                                 window=window)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def abstract_params(cfg: ModelConfig, mesh: Mesh) -> Any:
+    shapes = jax.eval_shape(partial(transformer.init, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    moe_sh = cfg.moe.sharding if cfg.moe else "ep"
+    specs = rules.param_specs(shapes, mesh, moe_sh)
+    return jax.tree.map(
+        lambda s, sp: _sds(s.shape, s.dtype, mesh, sp), shapes, specs)
+
+
+def abstract_opt_state(cfg: ModelConfig, mesh: Mesh, params_abs: Any,
+                       opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig()
+                       ) -> Any:
+    shapes = jax.eval_shape(lambda p: adamw.init(p, opt_cfg), params_abs)
+    moe_sh = cfg.moe.sharding if cfg.moe else "ep"
+
+    def like(tree):
+        specs = rules.param_specs(tree, mesh, moe_sh)
+        return jax.tree.map(
+            lambda s, sp: _sds(s.shape, s.dtype, mesh, sp), tree, specs)
+
+    return adamw.AdamWState(
+        step=_sds((), jnp.int32, mesh, P()),
+        m=like(shapes.m), v=like(shapes.v))
+
+
+def abstract_cache(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
+                   window: int = 0) -> Any:
+    shapes = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, batch, max_len, window))
+    specs = rules.cache_specs(shapes, mesh)
+    return jax.tree.map(
+        lambda s, sp: _sds(s.shape, s.dtype, mesh, sp), shapes, specs)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig()
+                ) -> dict[str, Any]:
+    """All abstract inputs for one (arch × shape × mesh) dry-run."""
+    bsp = rules.batch_spec(mesh, shape.global_batch)
+    params = abstract_params(cfg, mesh)
+    if shape.kind == "train":
+        tok = _sds((shape.global_batch, shape.seq_len), jnp.int32, mesh, bsp)
+        return {
+            "params": params,
+            "opt_state": abstract_opt_state(cfg, mesh, params, opt_cfg),
+            "batch": {"tokens": tok, "labels": tok},
+        }
+    if shape.kind == "prefill":
+        tok = _sds((shape.global_batch, shape.seq_len), jnp.int32, mesh, bsp)
+        return {"params": params, "batch": {"tokens": tok}}
+    # decode: one new token + a seq_len cache
+    window = needs_window(cfg, shape)
+    tok = _sds((shape.global_batch, 1), jnp.int32, mesh, bsp)
+    caches = abstract_cache(cfg, mesh, shape.global_batch, shape.seq_len,
+                            window)
+    return {"params": params, "token": tok, "caches": caches,
+            "window": window}

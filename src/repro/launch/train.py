@@ -1,0 +1,105 @@
+"""Runnable training driver (CPU-scale by default; mesh-ready).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --steps 20 \
+      --reduced                      # reduced variant, CPU
+  PYTHONPATH=src python -m repro.launch.train --arch xlstm-350m \
+      --steps 5 --seq 256 --batch 2  # full config, tiny shapes
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.launch import steps as steps_mod
+from repro.models import config as mcfg
+from repro.data import loader
+from repro.models import stubs, transformer
+from repro.optim import adamw, schedules
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced family variant (CPU-sized)")
+    ap.add_argument("--mtp-weight", type=float, default=0.0,
+                    help="DeepSeek-style multi-token-prediction aux loss")
+    ap.add_argument("--warmup", type=int, default=0,
+                    help="enable warmup+cosine LR schedule")
+    ap.add_argument("--save", default="", help="checkpoint path to write")
+    ap.add_argument("--restore", default="",
+                    help="checkpoint path to resume from")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = registry.get(args.arch)
+    if args.reduced:
+        cfg = mcfg.reduced(cfg)
+    print(f"arch={cfg.name} layers={len(cfg.layer_list())} "
+          f"d_model={cfg.d_model} vocab={cfg.vocab}")
+
+    key = jax.random.PRNGKey(args.seed)
+    params = transformer.init(key, cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"params: {n_params/1e6:.2f}M")
+
+    opt_cfg = adamw.AdamWConfig(lr=args.lr)
+    opt = adamw.init(params, opt_cfg)
+    if args.restore:
+        from repro.checkpoint import ckpt
+        state = ckpt.restore(args.restore, {"params": params, "opt": opt})
+        params, opt = state["params"], state["opt"]
+        print(f"restored from {args.restore} (step {int(opt.step)})")
+
+    sched = schedules.ScheduleConfig(
+        peak_lr=args.lr, warmup_steps=args.warmup,
+        total_steps=max(args.steps, 1)) if args.warmup else None
+
+    def mtp_train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, parts = transformer.lm_loss(p, cfg, batch["tokens"],
+                                              batch["labels"])
+            if args.mtp_weight:
+                loss = loss + transformer.mtp_loss(
+                    p, cfg, batch["tokens"], batch["labels"],
+                    weight=args.mtp_weight)
+            return loss, parts
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params)
+        lr = schedules.lr_at(opt_state.step + 1, sched) if sched else None
+        params, opt_state = adamw.update(params, grads, opt_state, opt_cfg,
+                                         lr=lr)
+        return params, opt_state, {"loss": loss, **parts}
+
+    step = jax.jit(mtp_train_step if (args.mtp_weight or sched)
+                   else steps_mod.make_train_step(cfg, opt_cfg))
+
+    batcher = loader.TokenBatcher(cfg, args.batch, args.seq,
+                                  seed=args.seed)
+    for i in range(args.steps):
+        batch = batcher(i)
+        t0 = time.time()
+        params, opt, metrics = step(params, opt, batch)
+        loss = float(metrics["loss"])
+        print(f"step {i:4d} loss={loss:.4f} "
+              f"ce={float(metrics['ce']):.4f} "
+              f"aux={float(metrics['aux']):.5f} "
+              f"dt={time.time()-t0:.2f}s", flush=True)
+
+    if args.save:
+        from repro.checkpoint import ckpt
+        ckpt.save(args.save, {"params": params, "opt": opt})
+        print(f"saved checkpoint → {args.save}")
+
+
+if __name__ == "__main__":
+    main()

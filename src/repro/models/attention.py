@@ -1,0 +1,465 @@
+"""Attention family: GQA/MQA (qk-norm, sliding window) and DeepSeek MLA.
+
+Training/prefill attention runs through a flash-style *blockwise* softmax
+(`_blockwise_attn`): an outer `lax.map` over query blocks and an inner
+`lax.scan` over KV blocks with running (max, denom, acc) statistics — the
+(T, S) score matrix is never materialized, which is what lets the 32k
+prefill and 4k×256 train shapes lower within per-device memory on the
+production mesh.  The HLO is two nested loops, so the lowered program
+stays small for the 512-device dry-run.
+
+Decode attends a single query over a KV cache:
+  * full cache     — (B, S, Hkv, Dh), append at `pos`;
+  * sliding window — ring buffer of size W, position-validity masked;
+  * MLA            — compressed latent cache (c_kv ‖ k_rope), the
+    *absorbed* formulation (W_UK folded into the query, W_UV into the
+    output) so decode FLOPs/bytes scale with kv_lora, not H·Dh.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import layers
+from repro.models.layers import apply_rope, dense_init, rmsnorm, rmsnorm_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention with a custom VJP
+# ---------------------------------------------------------------------------
+#
+# Plain AD through the online-softmax scans would store every per-step
+# (qb × kb) score block as scan residuals — i.e. silently materialize the
+# full (T, S) attention matrix per head for the backward pass (§Perf
+# iteration 1 measured this at hundreds of GB/device for train_4k).  The
+# custom VJP recomputes score blocks from (q, k, v, out, m·l stats) during
+# the backward sweep instead: FlashAttention's standard trade of FLOPs for
+# memory, expressed in pure JAX (lax.scan over blocks).
+
+import os as _os
+
+# §Perf toggle: REPRO_NO_FLASH_VJP=1 reverts to plain AD through the
+# online-softmax scans (the paper-faithful-but-naive baseline measured in
+# EXPERIMENTS.md §Perf iteration 1).
+_USE_FLASH_VJP = _os.environ.get("REPRO_NO_FLASH_VJP", "") != "1"
+
+
+def _blockwise_attn(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    q_block: int = 512, kv_block: int = 512) -> jnp.ndarray:
+    """q: (B,T,H,Dq); k: (B,S,Hkv,Dq); v: (B,S,Hkv,Dv) → (B,T,H,Dv)."""
+    if not _USE_FLASH_VJP:
+        out, _ = _flash_fwd_impl(q, k, v, bool(causal), int(window),
+                                 int(q_block), int(kv_block))
+        B, T, H, _ = q.shape
+        return out.reshape(B, -1, H, out.shape[-1])[:, :T].astype(v.dtype)
+    return _flash(q, k, v, bool(causal), int(window), int(q_block),
+                  int(kv_block))
+
+
+def _mask_block(q_pos, k_pos, S, causal, window):
+    mask = k_pos[None, :] < S
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    return mask
+
+
+def _flash_fwd_impl(q, k, v, causal, window, q_block, kv_block):
+    """Returns (out, lse) with lse = m + log l  (B, Tp, Hkv, G)."""
+    B, T, H, Dq = q.shape
+    S = k.shape[1]
+    Hkv = k.shape[2]
+    Dv = v.shape[-1]
+    G = H // Hkv
+    qb = min(q_block, T)
+    kb = min(kv_block, S)
+    nq, nk = -(-T // qb), -(-S // kb)
+    Tp, Sp = nq * qb, nk * kb
+    scale = Dq ** -0.5
+
+    qp = jnp.pad(q, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    # (B, nq, qb, Hkv, G, Dq) — grouped query heads share a KV head
+    qg = qp.reshape(B, nq, qb, Hkv, G, Dq).astype(jnp.float32) * scale
+
+    def q_block_fn(qi):
+        qblk = qg[:, qi]                                   # (B,qb,Hkv,G,Dq)
+        q_pos = qi * qb + jnp.arange(qb)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk = jax.lax.dynamic_slice_in_dim(kp, ki * kb, kb, axis=1)
+            vblk = jax.lax.dynamic_slice_in_dim(vp, ki * kb, kb, axis=1)
+            k_pos = ki * kb + jnp.arange(kb)
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", qblk,
+                           kblk.astype(jnp.float32))
+            mask = _mask_block(q_pos, k_pos, S, causal, window)
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqhgk,bkhd->bqhgd", p, vblk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, qb, Hkv, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, qb, Hkv, G), jnp.float32)
+        a0 = jnp.zeros((B, qb, Hkv, G, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return out, lse
+
+    out, lse = jax.lax.map(q_block_fn, jnp.arange(nq))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Tp, Hkv, G, Dv)
+    lse = lse.transpose(1, 0, 2, 3, 4).reshape(B, Tp, Hkv, G)
+    return out, lse
+
+
+from functools import partial as _partial  # noqa: E402
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, window, q_block, kv_block):
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, q_block, kv_block)
+    B, T, H, _ = q.shape
+    return out.reshape(B, -1, H, out.shape[-1])[:, :T].astype(v.dtype)
+
+
+def _flash_fwd(q, k, v, causal, window, q_block, kv_block):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, q_block, kv_block)
+    B, T, H, _ = q.shape
+    o = out.reshape(B, -1, H, out.shape[-1])[:, :T].astype(v.dtype)
+    return o, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, q_block, kv_block, res, do):
+    q, k, v, out, lse = res                      # out/lse padded+grouped f32
+    B, T, H, Dq = q.shape
+    S = k.shape[1]
+    Hkv = k.shape[2]
+    Dv = v.shape[-1]
+    G = H // Hkv
+    qb = min(q_block, T)
+    kb = min(kv_block, S)
+    nq, nk = -(-T // qb), -(-S // kb)
+    Tp, Sp = nq * qb, nk * kb
+    scale = Dq ** -0.5
+
+    qp = jnp.pad(q, ((0, 0), (0, Tp - T), (0, 0), (0, 0))) \
+        .reshape(B, nq, qb, Hkv, G, Dq).astype(jnp.float32)
+    kp = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, 0))) \
+        .reshape(B, nk, kb, Hkv, Dq).astype(jnp.float32)
+    vp = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0))) \
+        .reshape(B, nk, kb, Hkv, Dv).astype(jnp.float32)
+    dop = jnp.pad(do.astype(jnp.float32),
+                  ((0, 0), (0, Tp - T), (0, 0), (0, 0))) \
+        .reshape(B, nq, qb, Hkv, G, Dv)
+    outg = out.reshape(B, nq, qb, Hkv, G, Dv)
+    lseg = lse.reshape(B, nq, qb, Hkv, G)
+    # D_i = Σ_d do·o  (B, nq, qb, Hkv, G)
+    Dstat = (dop * outg).sum(-1)
+
+    def kv_step(dq, kj):
+        kblk, vblk = kp[:, kj], vp[:, kj]
+        k_pos = kj * kb + jnp.arange(kb)
+
+        def q_step(carry, qi):
+            dq, dkj, dvj = carry
+            qblk = qp[:, qi]
+            doblk = dop[:, qi]
+            q_pos = qi * qb + jnp.arange(qb)
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", qblk, kblk) * scale
+            mask = _mask_block(q_pos, k_pos, S, causal, window)
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            p = jnp.exp(s - lseg[:, qi][..., None])        # (B,qb,Hkv,G,kb)
+            dvj = dvj + jnp.einsum("bqhgk,bqhgd->bkhd", p, doblk)
+            dp = jnp.einsum("bqhgd,bkhd->bqhgk", doblk, vblk)
+            ds = p * (dp - Dstat[:, qi][..., None]) * scale
+            dq_blk = jnp.einsum("bqhgk,bkhd->bqhgd", ds, kblk)
+            dq = dq.at[:, qi].add(dq_blk)
+            dkj = dkj + jnp.einsum("bqhgk,bqhgd->bkhd", ds, qblk)
+            return (dq, dkj, dvj), None
+
+        dkj0 = jnp.zeros((B, kb, Hkv, Dq), jnp.float32)
+        dvj0 = jnp.zeros((B, kb, Hkv, Dv), jnp.float32)
+        (dq, dkj, dvj), _ = jax.lax.scan(q_step, (dq, dkj0, dvj0),
+                                         jnp.arange(nq))
+        return dq, (dkj, dvj)
+
+    dq0 = jnp.zeros((B, nq, qb, Hkv, G, Dq), jnp.float32)
+    dq, (dk, dv) = jax.lax.scan(kv_step, dq0, jnp.arange(nk))
+    dq = dq.reshape(B, Tp, H, Dq)[:, :T].astype(q.dtype)
+    dk = dk.transpose(1, 0, 2, 3, 4).reshape(B, Sp, Hkv, Dq)[:, :S] \
+        .astype(k.dtype)
+    dv = dv.transpose(1, 0, 2, 3, 4).reshape(B, Sp, Hkv, Dv)[:, :S] \
+        .astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def _decode_attn(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 valid: jnp.ndarray) -> jnp.ndarray:
+    """Single-step attention.  q: (B,H,Dq); k,v: (B,S,Hkv,D*);
+    valid: (B,S) bool → (B,H,Dv)."""
+    B, H, Dq = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, Dq).astype(jnp.float32) * Dq ** -0.5
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k.astype(jnp.float32))
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, -1).astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray        # (B, S_cache, Hkv, Dh)
+    v: jnp.ndarray
+    pos: jnp.ndarray      # (B,) next absolute position
+
+
+class QuantKVCache(NamedTuple):
+    """int8 KV cache (§Perf beyond-paper serving optimization).
+
+    Decode is memory-bound on KV streaming for every assigned arch;
+    storing K/V as int8 with one bf16 scale per (slot, head) halves the
+    bytes read per step (9/16 of bf16 including scales).  Quantization is
+    per-vector absmax; dequant happens on the fly in the attention read.
+    """
+    k_q: jnp.ndarray      # (B, S, Hkv, Dh) int8
+    v_q: jnp.ndarray
+    k_scale: jnp.ndarray  # (B, S, Hkv) bf16
+    v_scale: jnp.ndarray
+    pos: jnp.ndarray
+
+
+def _quantize(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (..., Dh) → int8 codes + per-vector scale."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.round(x.astype(jnp.float32) / scale[..., None])
+    return jnp.clip(q, -127, 127).astype(jnp.int8), \
+        scale.astype(jnp.bfloat16)
+
+
+def _dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+
+
+def gqa_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, dh = cfg.d_model, cfg.d_head
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * dh),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * dh),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * dh),
+        "wo": dense_init(ks[3], cfg.n_heads * dh, d),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(dh)
+        p["k_norm"] = rmsnorm_init(dh)
+    return p
+
+
+def _qkv(params: dict, x: jnp.ndarray, positions: jnp.ndarray,
+         cfg: ModelConfig):
+    B, T, _ = x.shape
+    dh = cfg.d_head
+    q = (x @ params["wq"]).reshape(B, T, cfg.n_heads, dh)
+    k = (x @ params["wk"]).reshape(B, T, cfg.n_kv_heads, dh)
+    v = (x @ params["wv"]).reshape(B, T, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_apply(params: dict, x: jnp.ndarray, positions: jnp.ndarray,
+              cfg: ModelConfig, window: int = 0) -> jnp.ndarray:
+    """Training / prefill forward.  x: (B, T, d)."""
+    q, k, v = _qkv(params, x, positions, cfg)
+    out = _blockwise_attn(q, k, v, causal=True,
+                          window=window or cfg.window)
+    B, T, _, _ = q.shape
+    return out.reshape(B, T, -1) @ params["wo"]
+
+
+def gqa_init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   window: int = 0,
+                   quantized: bool = False) -> KVCache | QuantKVCache:
+    s = min(window, max_len) if window else max_len
+    shape = (batch, s, cfg.n_kv_heads, cfg.d_head)
+    pos = jnp.zeros((batch,), jnp.int32)
+    if quantized:
+        sshape = shape[:-1]
+        return QuantKVCache(
+            k_q=jnp.zeros(shape, jnp.int8), v_q=jnp.zeros(shape, jnp.int8),
+            k_scale=jnp.zeros(sshape, jnp.bfloat16),
+            v_scale=jnp.zeros(sshape, jnp.bfloat16), pos=pos)
+    return KVCache(k=jnp.zeros(shape, layers.ACT_DTYPE),
+                   v=jnp.zeros(shape, layers.ACT_DTYPE), pos=pos)
+
+
+def gqa_decode(params: dict, x: jnp.ndarray,
+               cache: KVCache | QuantKVCache, cfg: ModelConfig,
+               window: int = 0) -> tuple[jnp.ndarray, KVCache | QuantKVCache]:
+    """One decode step.  x: (B, 1, d) → (B, 1, d), updated cache."""
+    B = x.shape[0]
+    pos = cache.pos                                    # (B,)
+    q, k, v = _qkv(params, x, pos[:, None], cfg)
+    quant = isinstance(cache, QuantKVCache)
+    S = (cache.k_q if quant else cache.k).shape[1]
+    w = min(window, S) if window else 0
+    slot = jnp.where(w > 0, pos % S, jnp.minimum(pos, S - 1))  # ring vs append
+
+    bidx = jnp.arange(B)
+    if quant:
+        kq, ks = _quantize(k[:, 0])
+        vq, vs = _quantize(v[:, 0])
+        cache = cache._replace(
+            k_q=cache.k_q.at[bidx, slot].set(kq),
+            v_q=cache.v_q.at[bidx, slot].set(vq),
+            k_scale=cache.k_scale.at[bidx, slot].set(ks),
+            v_scale=cache.v_scale.at[bidx, slot].set(vs))
+        kc = _dequantize(cache.k_q, cache.k_scale).astype(k.dtype)
+        vc = _dequantize(cache.v_q, cache.v_scale).astype(v.dtype)
+    else:
+        kc = cache.k.at[bidx, slot].set(k[:, 0])
+        vc = cache.v.at[bidx, slot].set(v[:, 0])
+        cache = KVCache(kc, vc, pos)
+
+    slots = jnp.arange(S)[None, :]
+    if w:
+        valid = slots < jnp.minimum(pos + 1, S)[:, None]
+    else:
+        valid = slots <= pos[:, None]
+    out = _decode_attn(q[:, 0], kc, vc, valid)
+    y = out.reshape(B, 1, -1) @ params["wo"]
+    return y, cache._replace(pos=pos + 1)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+class MLACache(NamedTuple):
+    c_kv: jnp.ndarray     # (B, S, kv_lora)
+    k_rope: jnp.ndarray   # (B, S, d_rope)
+    pos: jnp.ndarray
+
+
+def mla_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 5)
+    return {
+        "wq_a": dense_init(ks[0], d, m.q_lora),
+        "q_norm": rmsnorm_init(m.q_lora),
+        "wq_b": dense_init(ks[1], m.q_lora, H * (m.d_nope + m.d_rope)),
+        "wkv_a": dense_init(ks[2], d, m.kv_lora + m.d_rope),
+        "kv_norm": rmsnorm_init(m.kv_lora),
+        "wkv_b": dense_init(ks[3], m.kv_lora, H * (m.d_nope + m.d_v)),
+        "wo": dense_init(ks[4], H * m.d_v, d),
+    }
+
+
+def _mla_q(params: dict, x: jnp.ndarray, positions: jnp.ndarray,
+           cfg: ModelConfig):
+    m = cfg.mla
+    B, T, _ = x.shape
+    cq = rmsnorm(x @ params["wq_a"], params["q_norm"], cfg.norm_eps)
+    q = (cq @ params["wq_b"]).reshape(B, T, cfg.n_heads, m.d_nope + m.d_rope)
+    q_nope, q_rope = q[..., :m.d_nope], q[..., m.d_nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_kv_latent(params: dict, x: jnp.ndarray, positions: jnp.ndarray,
+                   cfg: ModelConfig):
+    m = cfg.mla
+    kv = x @ params["wkv_a"]                       # (B, T, kv_lora + d_rope)
+    c_kv = rmsnorm(kv[..., :m.kv_lora], params["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(kv[..., m.kv_lora:][:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0]   # shared single rope head
+    return c_kv, k_rope
+
+
+def mla_apply(params: dict, x: jnp.ndarray, positions: jnp.ndarray,
+              cfg: ModelConfig, window: int = 0) -> jnp.ndarray:
+    """Training / prefill forward (non-absorbed: materialize per-head K/V)."""
+    m = cfg.mla
+    B, T, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope = _mla_q(params, x, positions, cfg)
+    c_kv, k_rope = _mla_kv_latent(params, x, positions, cfg)
+    kvb = (c_kv @ params["wkv_b"]).reshape(B, T, H, m.d_nope + m.d_v)
+    k_nope, v = kvb[..., :m.d_nope], kvb[..., m.d_nope:]
+    # concat rope/nope parts → one standard attention with Dq=d_nope+d_rope
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, T, H, m.d_rope))],
+        axis=-1)
+    out = _blockwise_attn(q, k, v, causal=True, window=window or cfg.window)
+    return out.reshape(B, T, H * m.d_v) @ params["wo"]
+
+
+def mla_init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   window: int = 0) -> MLACache:
+    m = cfg.mla
+    return MLACache(
+        c_kv=jnp.zeros((batch, max_len, m.kv_lora), layers.ACT_DTYPE),
+        k_rope=jnp.zeros((batch, max_len, m.d_rope), layers.ACT_DTYPE),
+        pos=jnp.zeros((batch,), jnp.int32))
+
+
+def mla_decode(params: dict, x: jnp.ndarray, cache: MLACache,
+               cfg: ModelConfig, window: int = 0
+               ) -> tuple[jnp.ndarray, MLACache]:
+    """Absorbed decode: attend in the compressed latent space."""
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    pos = cache.pos
+    q_nope, q_rope = _mla_q(params, x, pos[:, None], cfg)      # (B,1,H,·)
+    c_kv_new, k_rope_new = _mla_kv_latent(params, x, pos[:, None], cfg)
+
+    bidx = jnp.arange(B)
+    S = cache.c_kv.shape[1]
+    slot = jnp.minimum(pos, S - 1)
+    c_kv = cache.c_kv.at[bidx, slot].set(c_kv_new[:, 0])
+    k_rope = cache.k_rope.at[bidx, slot].set(k_rope_new[:, 0])
+
+    wkv_b = params["wkv_b"].reshape(m.kv_lora, H, m.d_nope + m.d_v)
+    w_uk, w_uv = wkv_b[..., :m.d_nope], wkv_b[..., m.d_nope:]
+    # absorb W_UK into the query → score directly against the latent cache
+    q_abs = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))               # (B,H,kv_lora)
+    s = jnp.einsum("bhl,bsl->bhs", q_abs, c_kv.astype(jnp.float32))
+    s += jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                    k_rope.astype(jnp.float32))
+    s *= (m.d_nope + m.d_rope) ** -0.5
+    valid = jnp.arange(S)[None, :] <= pos[:, None]
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsl->bhl", p, c_kv.astype(jnp.float32))
+    o = jnp.einsum("bhl,lhd->bhd", o_lat, w_uv.astype(jnp.float32))
+    y = o.reshape(B, 1, H * m.d_v).astype(x.dtype) @ params["wo"]
+    return y, MLACache(c_kv, k_rope, pos + 1)

@@ -1,0 +1,93 @@
+"""Shared primitive layers: RMSNorm, RoPE, SwiGLU, embeddings.
+
+Plain init/apply function pairs over nested-dict params — everything is
+`jax.eval_shape`-safe so the dry-run can build abstract parameter trees
+without allocating 671B-parameter models.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+PARAM_DTYPE = jnp.bfloat16
+ACT_DTYPE = jnp.bfloat16
+
+
+def _normal(key, shape, scale):
+    return (jax.random.normal(key, shape, dtype=jnp.float32)
+            * scale).astype(PARAM_DTYPE)
+
+
+def dense_init(key: jax.Array, d_in: int, d_out: int) -> jnp.ndarray:
+    return _normal(key, (d_in, d_out), (1.0 / d_in) ** 0.5)
+
+
+def rmsnorm_init(d: int) -> jnp.ndarray:
+    return jnp.ones((d,), dtype=PARAM_DTYPE)
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2,
+                                       dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (B, T, H, Dh); positions: (B, T) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                         # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, T, d/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key: jax.Array, d_model: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff),
+        "up": dense_init(k2, d_model, d_ff),
+        "down": dense_init(k3, d_ff, d_model),
+    }
+
+
+def mlp_apply(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    g = jax.nn.silu(x @ params["gate"])
+    return ((g * (x @ params["up"])) @ params["down"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def embed_init(key: jax.Array, vocab: int, d_model: int) -> jnp.ndarray:
+    return _normal(key, (vocab, d_model), 0.02)
+
+
+def embed_apply(table: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    return table[tokens]        # activations inherit the param dtype
+
+
+def unembed(table_or_head: jnp.ndarray, x: jnp.ndarray,
+            transpose: bool) -> jnp.ndarray:
+    w = table_or_head.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    return xf @ (w.T if transpose else w)

@@ -1,0 +1,147 @@
+"""Mamba-1 selective-SSM mixer (Jamba's recurrent layer, arXiv:2403.19887).
+
+TPU adaptation (DESIGN.md §3): the CUDA selective-scan kernel keeps the
+(d_inner, d_state) state in SRAM while streaming time steps; the TPU-native
+equivalent is a *chunked associative scan* — an outer `lax.scan` over time
+chunks (carrying the (B, d_inner, N) state and bounding live memory) with a
+`lax.associative_scan` inside each chunk (exposing parallelism to the VPU).
+Each chunk body is `jax.checkpoint`ed so the backward pass recomputes the
+(B, Lc, d_inner, N) intermediates instead of storing them for all T.
+
+Decode is the exact recurrence: one state update per token, O(1) in
+sequence length — this is what makes `long_500k` native for Jamba.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+
+class MambaCache(NamedTuple):
+    h: jnp.ndarray       # (B, d_inner, N) SSM state
+    conv: jnp.ndarray    # (B, d_conv-1, d_inner) causal-conv tail
+    pos: jnp.ndarray     # (B,)
+
+
+def _dims(cfg: ModelConfig):
+    mc = cfg.mamba
+    d_inner = mc.expand * cfg.d_model
+    dt_rank = mc.dt_rank or -(-cfg.d_model // 16)
+    return mc, d_inner, dt_rank
+
+
+def mamba_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    mc, d_inner, dt_rank = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    a = jnp.tile(jnp.arange(1, mc.d_state + 1, dtype=jnp.float32)[None, :],
+                 (d_inner, 1))
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, 2 * d_inner),
+        "conv_w": (jax.random.normal(ks[1], (mc.d_conv, d_inner))
+                   * (1.0 / mc.d_conv) ** 0.5).astype(layers.PARAM_DTYPE),
+        "conv_b": jnp.zeros((d_inner,), layers.PARAM_DTYPE),
+        "x_proj": dense_init(ks[2], d_inner, dt_rank + 2 * mc.d_state),
+        "dt_proj": dense_init(ks[3], dt_rank, d_inner),
+        "dt_bias": jnp.full((d_inner,), -4.6, layers.PARAM_DTYPE),
+        "A_log": jnp.log(a),                       # f32, recurrence-critical
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[4], d_inner, cfg.d_model),
+    }
+
+
+def _conv_causal(xin: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 tail: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Depthwise causal conv over time.  xin: (B, T, d_inner)."""
+    K = w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((xin.shape[0], K - 1, xin.shape[2]), xin.dtype)
+    else:
+        pad = tail.astype(xin.dtype)
+    xp = jnp.concatenate([pad, xin], axis=1)       # (B, T+K-1, d)
+    out = sum(xp[:, i:i + xin.shape[1]] * w[i].astype(xin.dtype)
+              for i in range(K))
+    return jax.nn.silu(out + b.astype(xin.dtype))
+
+
+def _ssm_inputs(params: dict, xc: jnp.ndarray, cfg: ModelConfig):
+    """Per-token SSM tensors.  xc: (B, L, d_inner) (post-conv)."""
+    mc, _, dt_rank = _dims(cfg)
+    proj = xc @ params["x_proj"]
+    dt_r = proj[..., :dt_rank]
+    Bs = proj[..., dt_rank:dt_rank + mc.d_state].astype(jnp.float32)
+    Cs = proj[..., dt_rank + mc.d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus((dt_r @ params["dt_proj"]).astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"])                  # (d_inner, N)
+    decay = jnp.exp(dt[..., None] * A)             # (B, L, d_inner, N)
+    dBx = (dt * xc.astype(jnp.float32))[..., None] * Bs[:, :, None, :]
+    return decay, dBx, Cs
+
+
+def mamba_apply(params: dict, x: jnp.ndarray, cfg: ModelConfig,
+                chunk: int = 256) -> jnp.ndarray:
+    """Training / prefill forward.  x: (B, T, d_model)."""
+    B, T, _ = x.shape
+    _, d_inner, _ = _dims(cfg)
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc = _conv_causal(xin, params["conv_w"], params["conv_b"])
+
+    Lc = min(chunk, T)
+    n_chunks = -(-T // Lc)
+    Tp = n_chunks * Lc
+    xc_p = jnp.pad(xc, ((0, 0), (0, Tp - T), (0, 0)))
+    xc_c = xc_p.reshape(B, n_chunks, Lc, d_inner).transpose(1, 0, 2, 3)
+
+    @jax.checkpoint
+    def chunk_fn(h0, xck):
+        decay, dBx, Cs = _ssm_inputs(params, xck, cfg)
+
+        def comb(a, b):
+            return (a[0] * b[0], a[1] * b[0] + b[1])
+
+        cumA, hloc = jax.lax.associative_scan(comb, (decay, dBx), axis=1)
+        h = hloc + cumA * h0[:, None]               # (B, Lc, d_inner, N)
+        y = jnp.einsum("blds,bls->bld", h, Cs)
+        y = y + params["D"] * xck.astype(jnp.float32)
+        return h[:, -1], y
+
+    h0 = jnp.zeros((B, d_inner, cfg.mamba.d_state), jnp.float32)
+    _, ys = jax.lax.scan(chunk_fn, h0, xc_c)        # (n_chunks, B, Lc, d)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, Tp, d_inner)[:, :T]
+    y = (y.astype(x.dtype) * jax.nn.silu(z))
+    return y @ params["out_proj"]
+
+
+def mamba_init_cache(cfg: ModelConfig, batch: int) -> MambaCache:
+    mc, d_inner, _ = _dims(cfg)
+    return MambaCache(
+        h=jnp.zeros((batch, d_inner, mc.d_state), jnp.float32),
+        conv=jnp.zeros((batch, mc.d_conv - 1, d_inner), layers.ACT_DTYPE),
+        pos=jnp.zeros((batch,), jnp.int32))
+
+
+def mamba_decode(params: dict, x: jnp.ndarray, cache: MambaCache,
+                 cfg: ModelConfig) -> tuple[jnp.ndarray, MambaCache]:
+    """One token.  x: (B, 1, d_model)."""
+    B = x.shape[0]
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)              # (B, 1, d_inner)
+
+    window = jnp.concatenate([cache.conv, xin], axis=1)  # (B, K, d_inner)
+    w = params["conv_w"]
+    xc = jax.nn.silu((window * w.astype(window.dtype)[None]).sum(1)
+                     + params["conv_b"].astype(window.dtype))[:, None]
+    decay, dBx, Cs = _ssm_inputs(params, xc, cfg)
+    h = decay[:, 0] * cache.h + dBx[:, 0]
+    y = jnp.einsum("bds,bs->bd", h, Cs[:, 0])
+    y = y + params["D"] * xc[:, 0].astype(jnp.float32)
+    y = (y[:, None].astype(x.dtype) * jax.nn.silu(z))
+    out = y @ params["out_proj"]
+    return out, MambaCache(h=h, conv=window[:, 1:], pos=cache.pos + 1)

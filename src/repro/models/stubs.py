@@ -1,0 +1,49 @@
+"""Modality-frontend STUBS (the one sanctioned carve-out, per assignment).
+
+The audio codec (EnCodec) and vision tokenizer (VQ-GAN) are external
+frontends; this repo implements the decoder backbones that consume their
+token streams.  These stubs supply shape/distribution-correct stand-ins:
+
+* ``audio_tokens``   — EnCodec-style codebook ids (musicgen-large).
+* ``vq_image_tokens``— interleaved text + VQ-image spans within the fused
+  vocabulary (chameleon-34b): image spans are 1024-token blocks drawn from
+  the top 8192 ids (Chameleon reserves a contiguous VQ range).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def audio_tokens(key: jax.Array, cfg: ModelConfig, batch: int,
+                 seq: int) -> jnp.ndarray:
+    """EnCodec frame tokens (flattened codebook stream)."""
+    return jax.random.randint(key, (batch, seq), 0, cfg.vocab, jnp.int32)
+
+
+def vq_image_tokens(key: jax.Array, cfg: ModelConfig, batch: int,
+                    seq: int, image_span: int = 1024) -> jnp.ndarray:
+    """Early-fusion stream: text tokens with VQ image-token spans."""
+    k_txt, k_img, k_pos = jax.random.split(key, 3)
+    # reserved VQ range: top 8192 ids, or the top half for reduced vocabs
+    vq_lo = max(cfg.vocab - 8192, cfg.vocab // 2)
+    image_span = min(image_span, max(seq // 2, 1))
+    text = jax.random.randint(k_txt, (batch, seq), 0, vq_lo, jnp.int32)
+    img = jax.random.randint(k_img, (batch, seq), vq_lo, cfg.vocab,
+                             jnp.int32)
+    start = jax.random.randint(k_pos, (batch, 1), 0,
+                               max(seq - image_span, 1), jnp.int32)
+    pos = jnp.arange(seq)[None, :]
+    in_span = (pos >= start) & (pos < start + image_span)
+    return jnp.where(in_span, img, text)
+
+
+def tokens_for(cfg: ModelConfig, key: jax.Array, batch: int,
+               seq: int) -> jnp.ndarray:
+    if cfg.modality == "audio":
+        return audio_tokens(key, cfg, batch, seq)
+    if cfg.modality == "vlm":
+        return vq_image_tokens(key, cfg, batch, seq)
+    return jax.random.randint(key, (batch, seq), 0, cfg.vocab, jnp.int32)

@@ -1,0 +1,365 @@
+"""xLSTM mixers: mLSTM (matrix memory) and sLSTM (scalar memory with
+recurrent gating), per arXiv:2405.04517.
+
+Both are exponential-gated LSTMs with a running log-max stabilizer `m_t`.
+The mLSTM carries a per-head (dh × dh) matrix memory
+``C_t = f'·C_{t-1} + i'·v k^T`` (no hidden-to-gate recurrence → the time
+loop could be chunk-parallelized); the sLSTM's gates see `h_{t-1}` through
+per-head recurrent matrices, so it is inherently sequential.
+
+TPU mapping: outer `lax.scan` over time chunks with `jax.checkpoint`ed
+bodies (backward recomputes inside the chunk; only chunk-boundary states
+are stored — the same memory discipline as the Mamba mixer), inner exact
+`lax.scan` over steps.  The per-step compute is outer-product/matvec
+shaped, which the VPU handles; projections are MXU matmuls.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+class MLSTMCache(NamedTuple):
+    C: jnp.ndarray       # (B, H, dh, dh)
+    n: jnp.ndarray       # (B, H, dh)
+    m: jnp.ndarray       # (B, H)
+    conv: jnp.ndarray    # (B, K-1, d_inner)
+    pos: jnp.ndarray
+
+
+_CONV_K = 4
+_EXPAND = 2
+
+
+def _mdims(cfg: ModelConfig):
+    d_inner = _EXPAND * cfg.d_model
+    dh = d_inner // cfg.n_heads
+    return d_inner, dh
+
+
+def mlstm_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_inner, dh = _mdims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_inner),   # [xu ‖ gate branch]
+        "conv_w": (jax.random.normal(ks[1], (_CONV_K, d_inner)) * 0.5
+                   ).astype(layers.PARAM_DTYPE),
+        "conv_b": jnp.zeros((d_inner,), layers.PARAM_DTYPE),
+        "wq": dense_init(ks[2], d_inner, d_inner),
+        "wk": dense_init(ks[3], d_inner, d_inner),
+        "wv": dense_init(ks[4], d_inner, d_inner),
+        "w_gates": dense_init(ks[5], d_inner, 2 * cfg.n_heads),
+        "gate_b": jnp.concatenate([jnp.zeros((cfg.n_heads,)),
+                                   jnp.linspace(3.0, 6.0, cfg.n_heads)]
+                                  ).astype(jnp.float32),        # i, f biases
+        "h_norm": rmsnorm_init(d_inner),
+        "out_proj": dense_init(ks[6], d_inner, d),
+    }
+
+
+def _mlstm_qkvg(params: dict, x: jnp.ndarray, cfg: ModelConfig,
+                conv_tail: jnp.ndarray | None):
+    from repro.models.mamba import _conv_causal
+    B, T, _ = x.shape
+    d_inner, dh = _mdims(cfg)
+    H = cfg.n_heads
+    xu, xg = jnp.split(x @ params["in_proj"], 2, axis=-1)
+    xc = _conv_causal(xu, params["conv_w"], params["conv_b"], conv_tail)
+    q = (xc @ params["wq"]).reshape(B, T, H, dh)
+    k = (xc @ params["wk"]).reshape(B, T, H, dh) * dh ** -0.5
+    v = (xu @ params["wv"]).reshape(B, T, H, dh)
+    gates = (xc @ params["w_gates"]).astype(jnp.float32) \
+        + params["gate_b"]
+    i_t, f_t = gates[..., :H], gates[..., H:]        # (B, T, H) pre-acts
+    f_t = jax.nn.log_sigmoid(f_t)                    # log forget gate
+    return q, k, v, i_t, f_t, xg, xu
+
+
+def _mlstm_step(state, qkvif):
+    """Stabilized mLSTM recurrence for one step (all heads)."""
+    C, n, m = state
+    q, k, v, i_t, f_t = qkvif                        # (B,H,dh)·3, (B,H)·2
+    m_new = jnp.maximum(f_t + m, i_t)
+    ip = jnp.exp(i_t - m_new)[..., None]             # (B,H,1)
+    fp = jnp.exp(f_t + m - m_new)[..., None]
+    C = fp[..., None] * C + ip[..., None] * jnp.einsum("bhd,bhe->bhde", v, k)
+    n = fp * n + ip * k
+    num = jnp.einsum("bhde,bhe->bhd", C, q.astype(jnp.float32))
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", n, q.astype(jnp.float32)))
+    h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    return (C, n, m_new), h
+
+
+def _mlstm_chunkwise(q, k, v, i_t, f_t, chunk: int):
+    """Chunkwise-parallel mLSTM (§Perf beyond-paper optimization).
+
+    The sequential recurrence reads/writes the (B, H, dh, dh) matrix
+    memory every step → state traffic of T·dh² per head.  The chunkwise
+    form (xLSTM appendix / mlstm_kernels) computes intra-chunk terms as a
+    masked (L×L) quadratic — MXU matmuls — and touches C only at chunk
+    boundaries, cutting state HBM traffic by the chunk length while
+    staying exactly equivalent (same stabilized math).
+
+    q,k,v: (B,T,H,dh) f32 (k pre-scaled); i_t: (B,T,H) log-input gate;
+    f_t: (B,T,H) log-forget gate.  Returns h (B,T,H,dh) f32.
+    """
+    B, T, H, dh = q.shape
+    L = min(chunk, T)
+    n_chunks = -(-T // L)
+    Tp = n_chunks * L
+
+    def pad_c(a, fill=0.0):
+        pad = [(0, 0), (0, Tp - T)] + [(0, 0)] * (a.ndim - 2)
+        return jnp.pad(a, pad, constant_values=fill) \
+            .reshape((B, n_chunks, L) + a.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = pad_c(q), pad_c(k), pad_c(v)
+    # pad i with -inf so padded positions never contribute
+    ic = pad_c(i_t, -1e30)
+    fc = pad_c(f_t)                                   # logf; pad 0 is fine
+
+    tri = jnp.tril(jnp.ones((L, L), bool))            # s ≤ t
+    strict = jnp.tril(jnp.ones((L, L), bool), -1)     # unused pad safety
+
+    @jax.checkpoint
+    def chunk_fn(carry, xs):
+        C, n, m = carry                               # (B,H,dh,dh) (B,H,dh) (B,H)
+        qk, kk, vk, ik, fk = xs                       # (B,L,H,·)
+        b = jnp.cumsum(fk, axis=1)                    # (B,L,H) Σ logf ≤ t
+        btot = b[:, -1]                               # (B,H)
+
+        # --- stabilizers -------------------------------------------------
+        # intra exponent: b_t − b_s + a_s  (s ≤ t); inter exponent: b_t + m
+        g = b[:, :, None, :] - b[:, None, :, :] \
+            + ik[:, None, :, :]                       # (B,t,s,H)
+        g = jnp.where(tri[None, :, :, None], g, -1e30)
+        m_intra = g.max(axis=2)                       # (B,L,H)
+        m_inter = b + m[:, None, :]                   # (B,L,H)
+        m_comb = jnp.maximum(m_intra, m_inter)
+
+        D = jnp.exp(g - m_comb[:, :, None, :])        # (B,t,s,H)
+        s_qk = jnp.einsum("bthd,bshd->btsh", qk, kk)
+        w = s_qk * D
+        h_intra = jnp.einsum("btsh,bshd->bthd", w, vk)
+        inter_scale = jnp.exp(m_inter - m_comb)       # (B,L,H)
+        h_inter = jnp.einsum("bthe,bhde->bthd", qk, C) \
+            * inter_scale[..., None]
+        num = h_intra + h_inter
+
+        n_intra = jnp.einsum("btsh,bshd->bthd", D, kk)
+        n_t = n_intra + n[:, None] * inter_scale[..., None]
+        den = jnp.abs(jnp.einsum("bthd,bthd->bth", n_t, qk))
+        h = num / jnp.maximum(den, jnp.exp(-m_comb))[..., None]
+
+        # --- carry update -------------------------------------------------
+        m_next = jnp.maximum(btot + m,
+                             (btot[:, None] - b + ik).max(axis=1))  # (B,H)
+        w_s = jnp.exp(btot[:, None] - b + ik - m_next[:, None])     # (B,L,H)
+        C_new = jnp.exp(btot + m - m_next)[..., None, None] * C \
+            + jnp.einsum("bsh,bshd,bshe->bhde", w_s, vk, kk)
+        n_new = jnp.exp(btot + m - m_next)[..., None] * n \
+            + jnp.einsum("bsh,bshd->bhd", w_s, kk)
+        return (C_new, n_new, m_next), h
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    _, hs = jax.lax.scan(chunk_fn, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    # hs: (n_chunks, B, L, H, dh) → (B, T, H, dh)
+    return hs.swapaxes(0, 1).reshape(B, Tp, H, dh)[:, :T]
+
+
+def mlstm_apply(params: dict, x: jnp.ndarray, cfg: ModelConfig,
+                chunk: int = 64, impl: str | None = None) -> jnp.ndarray:
+    import os
+    if impl is None:
+        impl = "chunkwise" \
+            if os.environ.get("REPRO_MLSTM_CHUNKWISE") == "1" else "scan"
+        chunk = int(os.environ.get("REPRO_MLSTM_CHUNK", chunk))
+    B, T, _ = x.shape
+    d_inner, dh = _mdims(cfg)
+    H = cfg.n_heads
+    q, k, v, i_t, f_t, xg, _ = _mlstm_qkvg(params, x, cfg, None)
+
+    if impl == "chunkwise":
+        h = _mlstm_chunkwise(q.astype(jnp.float32), k.astype(jnp.float32),
+                             v.astype(jnp.float32), i_t, f_t, chunk)
+        h = h.reshape(B, T, H * dh)
+        h = rmsnorm(h.astype(x.dtype), params["h_norm"], cfg.norm_eps)
+        return (h * jax.nn.silu(xg)) @ params["out_proj"]
+
+    Lc = min(chunk, T)
+    n_chunks = -(-T // Lc)
+    Tp = n_chunks * Lc
+
+    def pad_c(a):  # (B, T, ...) → (n_chunks, B, Lc, ...)
+        a = jnp.pad(a, ((0, 0), (0, Tp - T)) + ((0, 0),) * (a.ndim - 2))
+        return a.reshape((B, n_chunks, Lc) + a.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc, ic, fc = map(pad_c, (q.astype(jnp.float32),
+                                     k.astype(jnp.float32),
+                                     v.astype(jnp.float32), i_t, f_t))
+
+    @jax.checkpoint
+    def chunk_fn(state, xs):
+        qk, kk, vk, ik, fk = xs
+
+        def step(s, t):
+            return _mlstm_step(s, (qk[:, t], kk[:, t], vk[:, t],
+                                   ik[:, t], fk[:, t]))
+
+        state, hs = jax.lax.scan(step, state, jnp.arange(Lc))
+        return state, hs                              # (Lc, B, H, dh)
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    _, hs = jax.lax.scan(chunk_fn, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    h = hs.reshape(n_chunks * Lc, B, H * dh).swapaxes(0, 1)[:, :T]
+    h = rmsnorm(h.astype(x.dtype), params["h_norm"], cfg.norm_eps)
+    return (h * jax.nn.silu(xg)) @ params["out_proj"]
+
+
+def mlstm_init_cache(cfg: ModelConfig, batch: int) -> MLSTMCache:
+    d_inner, dh = _mdims(cfg)
+    H = cfg.n_heads
+    return MLSTMCache(
+        C=jnp.zeros((batch, H, dh, dh), jnp.float32),
+        n=jnp.zeros((batch, H, dh), jnp.float32),
+        m=jnp.full((batch, H), -1e30, jnp.float32),
+        conv=jnp.zeros((batch, _CONV_K - 1, d_inner), layers.ACT_DTYPE),
+        pos=jnp.zeros((batch,), jnp.int32))
+
+
+def mlstm_decode(params: dict, x: jnp.ndarray, cache: MLSTMCache,
+                 cfg: ModelConfig) -> tuple[jnp.ndarray, MLSTMCache]:
+    B = x.shape[0]
+    d_inner, dh = _mdims(cfg)
+    H = cfg.n_heads
+    xu_now = jnp.split(x @ params["in_proj"], 2, axis=-1)[0]
+    q, k, v, i_t, f_t, xg, _ = _mlstm_qkvg(params, x, cfg, cache.conv)
+    state = (cache.C, cache.n, cache.m)
+    state, h = _mlstm_step(state, (q[:, 0].astype(jnp.float32),
+                                   k[:, 0].astype(jnp.float32),
+                                   v[:, 0].astype(jnp.float32),
+                                   i_t[:, 0], f_t[:, 0]))
+    h = h.reshape(B, 1, H * dh)
+    h = rmsnorm(h.astype(x.dtype), params["h_norm"], cfg.norm_eps)
+    y = (h * jax.nn.silu(xg)) @ params["out_proj"]
+    conv = jnp.concatenate([cache.conv, xu_now], axis=1)[:, 1:]
+    return y, MLSTMCache(C=state[0], n=state[1], m=state[2], conv=conv,
+                         pos=cache.pos + 1)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+class SLSTMCache(NamedTuple):
+    c: jnp.ndarray       # (B, H, dh)
+    n: jnp.ndarray
+    h: jnp.ndarray
+    m: jnp.ndarray       # (B, H)
+    pos: jnp.ndarray
+
+
+def slstm_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 4)
+    ff = -(-int(d * 4 / 3) // 8) * 8                 # post-MLP, factor 4/3
+    return {
+        "wx": dense_init(ks[0], d, 4 * d),           # i, f, z, o pre-acts
+        "r": (jax.random.normal(ks[1], (4, H, dh, dh))
+              * dh ** -0.5).astype(layers.PARAM_DTYPE),
+        "b": jnp.concatenate([jnp.zeros((d,)),
+                              jnp.ones((d,)) * 2.0,  # forget-gate bias
+                              jnp.zeros((2 * d,))]).astype(jnp.float32),
+        "h_norm": rmsnorm_init(d),
+        "up": dense_init(ks[2], d, 2 * ff),          # GLU up (gate ‖ lin)
+        "down": dense_init(ks[3], ff, d),
+    }
+
+
+def _slstm_step(params: dict, cfg: ModelConfig, state, wx_t):
+    """wx_t: (B, 4d) precomputed input pre-activations for one step."""
+    c, n, h, m = state
+    B = c.shape[0]
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    hh = h.reshape(B, H, dh)
+    rec = jnp.einsum("ghde,bhd->gbhe", params["r"].astype(jnp.float32), hh)
+    pre = wx_t.astype(jnp.float32).reshape(B, 4, H, dh).swapaxes(0, 1) \
+        + params["b"].reshape(4, 1, H, dh) + rec
+    i_t, f_t, z_t, o_t = pre[0], pre[1], pre[2], pre[3]
+    f_log = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(f_log + m[..., None], i_t)
+    ip = jnp.exp(i_t - m_new)
+    fp = jnp.exp(f_log + m[..., None] - m_new)
+    c = fp * c + ip * jnp.tanh(z_t)
+    n = fp * n + ip
+    h_new = jax.nn.sigmoid(o_t) * c / jnp.maximum(n, 1e-6)
+    return (c, n, h_new.reshape(B, -1), m_new.max(-1))
+
+
+def slstm_apply(params: dict, x: jnp.ndarray, cfg: ModelConfig,
+                chunk: int = 64) -> jnp.ndarray:
+    B, T, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    wx = x @ params["wx"]                            # (B, T, 4d)
+
+    Lc = min(chunk, T)
+    n_chunks = -(-T // Lc)
+    Tp = n_chunks * Lc
+    wx_c = jnp.pad(wx, ((0, 0), (0, Tp - T), (0, 0))) \
+        .reshape(B, n_chunks, Lc, 4 * d).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_fn(state, wxk):
+        def step(s, t):
+            s = _slstm_step(params, cfg, s, wxk[:, t])
+            return s, s[2]
+        return jax.lax.scan(step, state, jnp.arange(Lc))
+
+    c0 = jnp.zeros((B, H, dh), jnp.float32)
+    state0 = (c0, c0, jnp.zeros((B, d), jnp.float32),
+              jnp.full((B, H), -1e30, jnp.float32))
+    _, hs = jax.lax.scan(chunk_fn, state0, wx_c)     # (n_chunks, Lc, B, d)
+    h = hs.reshape(n_chunks * Lc, B, d).swapaxes(0, 1)[:, :T]
+    h = rmsnorm(h.astype(x.dtype), params["h_norm"], cfg.norm_eps)
+    g, u = jnp.split(h @ params["up"], 2, axis=-1)
+    return (jax.nn.gelu(g) * u) @ params["down"]
+
+
+def slstm_init_cache(cfg: ModelConfig, batch: int) -> SLSTMCache:
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return SLSTMCache(c=z, n=z, h=jnp.zeros((batch, cfg.d_model),
+                                            jnp.float32),
+                      m=jnp.full((batch, H), -1e30, jnp.float32),
+                      pos=jnp.zeros((batch,), jnp.int32))
+
+
+def slstm_decode(params: dict, x: jnp.ndarray, cache: SLSTMCache,
+                 cfg: ModelConfig) -> tuple[jnp.ndarray, SLSTMCache]:
+    wx = (x @ params["wx"])[:, 0]
+    state = (cache.c, cache.n, cache.h, cache.m)
+    c, n, h, m = _slstm_step(params, cfg, state, wx)
+    hn = rmsnorm(h[:, None].astype(x.dtype), params["h_norm"], cfg.norm_eps)
+    g, u = jnp.split(hn @ params["up"], 2, axis=-1)
+    y = (jax.nn.gelu(g) * u) @ params["down"]
+    return y, SLSTMCache(c=c, n=n, h=h, m=m, pos=cache.pos + 1)

@@ -1,0 +1,71 @@
+"""AdamW with optional gradient clipping — pure-pytree, sharding-agnostic
+(moment states inherit the parameter PartitionSpecs via tree mapping).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: Any = jnp.float32
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def init(params: Any, cfg: AdamWConfig = AdamWConfig()) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def _global_norm(tree: Any) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(params: Any, grads: Any, state: AdamWState,
+           cfg: AdamWConfig = AdamWConfig(),
+           lr: Any | None = None) -> tuple[Any, AdamWState]:
+    """``lr`` (scalar or traced) overrides cfg.lr — schedule hook."""
+    step = state.step + 1
+    if cfg.grad_clip:
+        gn = _global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr_eff = cfg.lr if lr is None else lr
+
+    def upd(p, g, m, v):
+        gf = g.astype(cfg.state_dtype)
+        m = cfg.b1 * m + (1 - cfg.b1) * gf
+        v = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) \
+            + cfg.weight_decay * p.astype(cfg.state_dtype)
+        return (p.astype(cfg.state_dtype) - lr_eff * delta).astype(p.dtype), \
+            m, v
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    outer = jax.tree.structure(params)
+    inner = jax.tree.structure((0, 0, 0))
+    new_p, new_m, new_v = jax.tree.transpose(outer, inner, out)
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)

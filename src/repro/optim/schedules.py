@@ -1,0 +1,32 @@
+"""Learning-rate schedules (warmup + cosine/linear decay), pure functions
+of the step counter so they jit inside the train step.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    end_lr_frac: float = 0.1
+    kind: str = "cosine"          # "cosine" | "linear" | "constant"
+
+
+def lr_at(step: jnp.ndarray, cfg: ScheduleConfig) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    end = cfg.peak_lr * cfg.end_lr_frac
+    if cfg.kind == "cosine":
+        decay = end + (cfg.peak_lr - end) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    elif cfg.kind == "linear":
+        decay = cfg.peak_lr + (end - cfg.peak_lr) * frac
+    else:
+        decay = jnp.asarray(cfg.peak_lr)
+    return jnp.where(step < cfg.warmup_steps, warm, decay)

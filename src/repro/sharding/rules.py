@@ -1,0 +1,230 @@
+"""PartitionSpec assignment for parameter trees, activations and caches.
+
+Scheme (MaxText-style 2-D FSDP×TP, extended with a pod axis):
+
+* mesh axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+  multi-pod.  The batch shards over ``fsdp_axes`` = ("pod","data"); tensor
+  dimensions shard over ``"model"``.
+* weight matrices shard **both** ways — the input/feature dim over the
+  FSDP axes, the head/ff/vocab dim over "model" — so per-device parameter
+  bytes scale with 1/(pods·data·model) (what lets 671B params + Adam
+  state compile on 256–512 chips).
+* MoE expert banks: ``("ep" sharding)`` expert axis over "model"
+  (expert parallelism) when E % model == 0, else the d_expert dim over
+  "model" (``"tp"``).
+* scalars / norm scales / small vectors: replicated.
+
+Rules are *name-pattern based* over the flattened param tree path, so new
+modules compose without touching this file as long as they follow the
+naming convention.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def fsdp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+    return "/".join(out)
+
+
+def param_spec(path: str, shape: tuple[int, ...], mesh: Mesh,
+               moe_sharding: str = "ep") -> P:
+    """Map one parameter (by tree path + shape) to a PartitionSpec.
+
+    Leading dim is treated as the scan axis when the path sits under
+    "segments".  Any axis whose size does not divide the mesh axis falls
+    back to replication (e.g. granite-moe's vocab 49155).
+    """
+    fsdp = fsdp_axes(mesh)
+    f0 = fsdp if len(fsdp) > 1 else (fsdp[0] if fsdp else None)
+    fsdp_size = 1
+    for a in fsdp:
+        fsdp_size *= mesh.shape[a]
+    m_size = mesh.shape.get("model", 1)
+    stacked = "segments" in path
+    lead: tuple = (None,) if stacked else ()
+    ndim_eff = len(shape) - (1 if stacked else 0)
+    eshape = shape[1:] if stacked else shape
+
+    def spec(*dims):
+        # divisibility guard per sharded dim
+        safe = []
+        for size, d in zip(eshape, dims):
+            if d == "model" and size % m_size != 0:
+                d = None
+            if d is not None and d == f0 and size % fsdp_size != 0:
+                d = None
+            safe.append(d)
+        return P(*lead, *safe)
+
+    f = f0
+
+    # ---- embeddings / head: (vocab, d) or (d, vocab) --------------------
+    if path.endswith("embed"):
+        return spec("model", f)            # vocab-sharded lookup table
+    if path.endswith("lm_head"):
+        # d replicated on purpose: FSDP-sharding the contraction dim makes
+        # SPMD all-gather the (B,T,d) activations over the batch axis at
+        # the unembed (§Perf: 2×12.9 GB/device/step measured); replicating
+        # d costs only V·d/model_size bytes per device.
+        return spec(None, "model")
+
+    # ---- MoE expert banks (E, d, f) / (E, f, d) --------------------------
+    if any(path.endswith(s) for s in ("ffn/gate", "ffn/up", "ffn/down")) \
+            and ndim_eff == 3:
+        if moe_sharding == "ep":
+            return spec("model", f, None)  # expert-parallel
+        import os
+        if os.environ.get("REPRO_MOE_TP_NO_FSDP") == "1":
+            # §Perf knob: FSDP-sharding d_model inside tp-MoE expert banks
+            # makes every expert einsum contract over a sharded dim (an
+            # all-reduce per layer); replicating d and sharding only
+            # d_expert trades small param bytes for that collective.
+            return spec(None, None, "model") \
+                if path.endswith(("ffn/gate", "ffn/up")) \
+                else spec(None, "model", None)
+        return spec(None, f, "model") if path.endswith(("ffn/gate", "ffn/up")) \
+            else spec(None, "model", f)
+    if path.endswith("router"):
+        return spec(f, None)
+
+    # ---- attention projections -------------------------------------------
+    if any(path.endswith(s) for s in
+           ("wq", "wk", "wv", "wq_b", "wkv_b", "up", "gate",
+            "in_proj", "x_proj", "wx", "w_gates")):
+        return spec(f, "model") if ndim_eff == 2 else spec(None)
+    if any(path.endswith(s) for s in
+           ("wo", "down", "out_proj", "dt_proj")):
+        return spec("model", f) if ndim_eff == 2 else spec(None)
+    if any(path.endswith(s) for s in ("wq_a", "wkv_a")):
+        return spec(f, "model")
+
+    # ---- xLSTM recurrent (4, H, dh, dh), Mamba A_log (d_inner, N) --------
+    if path.endswith("/r") and ndim_eff == 4:
+        import os
+        if os.environ.get("REPRO_XLSTM_R_REPLICATED") == "1":
+            # §Perf knob: the sLSTM recurrence re-shards (model→batch) on
+            # every time step when r is model-sharded; r is tiny (4·H·dh²)
+            # so replicating it removes the per-step collective chain.
+            return spec(None, None, None, None)
+        return spec(None, None, "model", None)
+    if path.endswith("A_log"):
+        return spec("model", None)
+    if path.endswith(("conv_w",)) and ndim_eff == 2:
+        return spec(None, "model")
+    if any(path.endswith(s) for s in ("conv_b", "dt_bias", "D")) \
+            and ndim_eff == 1:
+        return spec("model")
+
+    # ---- everything else (norm scales, biases, small vecs): replicated ---
+    return spec(*([None] * ndim_eff))
+
+
+def param_specs(params: Any, mesh: Mesh, moe_sharding: str = "ep") -> Any:
+    def one(path, leaf):
+        return param_spec(_path_str(path), leaf.shape, mesh, moe_sharding)
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def shardings(params: Any, mesh: Mesh, moe_sharding: str = "ep") -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, mesh, moe_sharding))
+
+
+# ---------------------------------------------------------------------------
+# Activations / batches / caches
+# ---------------------------------------------------------------------------
+
+def _fsdp_or_none(mesh: Mesh, batch: int):
+    """FSDP axes if the batch divides them, else replicate (e.g. the
+    batch-1 long_500k decode)."""
+    f = fsdp_axes(mesh)
+    total = 1
+    for a in f:
+        total *= mesh.shape[a]
+    if f and total and batch % total == 0:
+        return f if len(f) > 1 else f[0]
+    return None
+
+
+def batch_spec(mesh: Mesh, batch: int) -> P:
+    return P(_fsdp_or_none(mesh, batch), None)
+
+
+def cache_specs(caches: Any, mesh: Mesh) -> Any:
+    """Decode-cache PartitionSpecs, matched structurally per cache type.
+
+    Batch over the FSDP axes (when divisible); the *sequence* dim of
+    KV/latent caches shards over "model" (context parallelism — softmax
+    over a sharded length lowers to an all-reduce of max/sum, which is
+    how 32k×128 KV caches fit per-device); recurrent state features
+    shard over "model" when divisible.
+    """
+    from repro.models.attention import KVCache, MLACache, QuantKVCache
+    from repro.models.mamba import MambaCache
+    from repro.models.xlstm import MLSTMCache, SLSTMCache
+
+    msize = mesh.shape.get("model", 1)
+
+    def div(n):
+        return "model" if n % msize == 0 else None
+
+    def handle(c):
+        # leaves carry a leading stacked-layer axis from init_cache
+        if isinstance(c, KVCache):
+            b = _fsdp_or_none(mesh, c.k.shape[1])
+            kv = P(None, b, div(c.k.shape[2]), None, None)
+            return KVCache(k=kv, v=kv, pos=P(None, b))
+        if isinstance(c, QuantKVCache):
+            b = _fsdp_or_none(mesh, c.k_q.shape[1])
+            s_ax = div(c.k_q.shape[2])
+            kv = P(None, b, s_ax, None, None)
+            sc = P(None, b, s_ax, None)
+            return QuantKVCache(k_q=kv, v_q=kv, k_scale=sc, v_scale=sc,
+                                pos=P(None, b))
+        if isinstance(c, MLACache):
+            b = _fsdp_or_none(mesh, c.c_kv.shape[1])
+            s = div(c.c_kv.shape[2])
+            return MLACache(c_kv=P(None, b, s, None),
+                            k_rope=P(None, b, s, None), pos=P(None, b))
+        if isinstance(c, MambaCache):
+            b = _fsdp_or_none(mesh, c.h.shape[1])
+            return MambaCache(h=P(None, b, div(c.h.shape[2]), None),
+                              conv=P(None, b, None, div(c.conv.shape[3])),
+                              pos=P(None, b))
+        if isinstance(c, MLSTMCache):
+            b = _fsdp_or_none(mesh, c.C.shape[1])
+            dh = div(c.C.shape[3])
+            return MLSTMCache(C=P(None, b, None, dh, None),
+                              n=P(None, b, None, dh), m=P(None, b, None),
+                              conv=P(None, b, None, div(c.conv.shape[3])),
+                              pos=P(None, b))
+        if isinstance(c, SLSTMCache):
+            b = _fsdp_or_none(mesh, c.c.shape[1])
+            dh = div(c.c.shape[3])
+            return SLSTMCache(c=P(None, b, None, dh),
+                              n=P(None, b, None, dh),
+                              h=P(None, b, div(c.h.shape[2])),
+                              m=P(None, b, None), pos=P(None, b))
+        raise TypeError(type(c))
+
+    def is_cache(x):
+        return isinstance(x, (KVCache, QuantKVCache, MLACache, MambaCache,
+                              MLSTMCache, SLSTMCache))
+
+    return jax.tree.map(handle, caches, is_leaf=is_cache)

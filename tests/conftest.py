@@ -1,0 +1,15 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see the
+real single CPU device; only launch/dryrun.py forces 512 host devices.
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _x64_off():
+    jax.config.update("jax_enable_x64", False)
+    yield
+
+
+def seeds(n):
+    return [jax.random.PRNGKey(i) for i in range(n)]

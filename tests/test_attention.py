@@ -1,0 +1,158 @@
+"""Attention correctness: blockwise-vs-naive oracle, GQA grouping,
+sliding window, decode-cache ≡ prefill consistency, MLA absorbed decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention, transformer
+from repro.models.config import LayerSpec, MLAConfig, ModelConfig
+
+
+def naive_attn(q, k, v, causal=True, window=0):
+    """O(T²) oracle with GQA grouping."""
+    B, T, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, T, Hkv, G, D).astype(jnp.float32) * D ** -0.5
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, k.astype(jnp.float32))
+    i, j = jnp.arange(T)[:, None], jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= j <= i
+    if window:
+        mask &= i - j < window
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, T, H, -1)
+
+
+@pytest.mark.parametrize("T,H,Hkv,D", [(32, 4, 2, 16), (65, 8, 1, 8),
+                                       (128, 4, 4, 32)])
+@pytest.mark.parametrize("window", [0, 16])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_blockwise_matches_naive(T, H, Hkv, D, window, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (2, T, H, D))
+    k = jax.random.normal(ks[1], (2, T, Hkv, D))
+    v = jax.random.normal(ks[2], (2, T, Hkv, D))
+    ref = naive_attn(q, k, v, window=window)
+    out = attention._blockwise_attn(q, k, v, window=window,
+                                    q_block=16, kv_block=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_blockwise_block_size_invariance():
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (1, 48, 4, 8))
+    k = jax.random.normal(ks[1], (1, 48, 2, 8))
+    v = jax.random.normal(ks[2], (1, 48, 2, 8))
+    a = attention._blockwise_attn(q, k, v, q_block=8, kv_block=8)
+    b = attention._blockwise_attn(q, k, v, q_block=48, kv_block=48)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4,
+                               atol=2e-5)
+
+
+def _gqa_cfg(window=0):
+    return ModelConfig(
+        name="t", n_layers=1, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab=97, qk_norm=True, window=window,
+        segments=((1, (LayerSpec(),)),))
+
+
+@pytest.mark.parametrize("window", [0, 8])
+def test_gqa_decode_matches_prefill(window):
+    """Prefill T tokens via gqa_apply ≡ decoding them one at a time."""
+    cfg = _gqa_cfg(window)
+    p = attention.gqa_init(jax.random.PRNGKey(0), cfg)
+    p = jax.tree.map(lambda a: a.astype(jnp.float32), p)
+    T = 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, T, 64))
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (2, T))
+    full = attention.gqa_apply(p, x, pos, cfg, window=window)
+
+    cache = attention.gqa_init_cache(cfg, 2, T, window)
+    cache = jax.tree.map(lambda a: a.astype(jnp.float32)
+                         if a.dtype == jnp.bfloat16 else a, cache)
+    outs = []
+    for t in range(T):
+        y, cache = attention.gqa_decode(p, x[:, t:t + 1], cache, cfg,
+                                        window=window)
+        outs.append(y)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_sliding_window_cache_is_bounded():
+    cfg = _gqa_cfg(window=4)
+    cache = attention.gqa_init_cache(cfg, 2, max_len=100, window=4)
+    assert cache.k.shape[1] == 4      # ring buffer, not max_len
+
+
+@pytest.mark.parametrize("window", [0, 8])
+def test_quantized_kv_cache_close_to_full_precision(window):
+    """int8 KV cache (§Perf serving optimization) tracks the bf16 path."""
+    cfg = _gqa_cfg(window)
+    p = jax.tree.map(lambda a: a.astype(jnp.float32),
+                     attention.gqa_init(jax.random.PRNGKey(0), cfg))
+    T = 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, T, 64))
+    c_full = jax.tree.map(lambda a: a.astype(jnp.float32)
+                          if a.dtype == jnp.bfloat16 else a,
+                          attention.gqa_init_cache(cfg, 2, T, window))
+    c_q = attention.gqa_init_cache(cfg, 2, T, window, quantized=True)
+    assert c_q.k_q.dtype == jnp.int8
+    of, oq = [], []
+    for t in range(T):
+        yf, c_full = attention.gqa_decode(p, x[:, t:t + 1], c_full, cfg,
+                                          window=window)
+        yq, c_q = attention.gqa_decode(p, x[:, t:t + 1], c_q, cfg,
+                                       window=window)
+        of.append(yf)
+        oq.append(yq)
+    of = jnp.concatenate(of, 1)
+    oq = jnp.concatenate(oq, 1)
+    rel = float(jnp.abs(of - oq).max() / (jnp.abs(of).max() + 1e-9))
+    assert rel < 0.05, rel
+
+
+def _mla_cfg():
+    return ModelConfig(
+        name="t", n_layers=1, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab=97, attn_kind="mla",
+        mla=MLAConfig(q_lora=32, kv_lora=16, d_nope=16, d_rope=8, d_v=16),
+        segments=((1, (LayerSpec(),)),))
+
+
+def test_mla_absorbed_decode_matches_prefill():
+    cfg = _mla_cfg()
+    p = attention.mla_init(jax.random.PRNGKey(0), cfg)
+    p = jax.tree.map(lambda a: a.astype(jnp.float32), p)
+    T = 10
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, T, 64))
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (2, T))
+    full = attention.mla_apply(p, x, pos, cfg)
+
+    cache = attention.mla_init_cache(cfg, 2, T)
+    cache = jax.tree.map(lambda a: a.astype(jnp.float32)
+                         if a.dtype == jnp.bfloat16 else a, cache)
+    outs = []
+    for t in range(T):
+        y, cache = attention.mla_decode(p, x[:, t:t + 1], cache, cfg)
+        outs.append(y)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_mla_cache_is_compressed():
+    """The MLA cache stores kv_lora + d_rope per token, not H·(K+V)."""
+    cfg = _mla_cfg()
+    cache = attention.mla_init_cache(cfg, 1, 100)
+    per_tok = cache.c_kv.shape[-1] + cache.k_rope.shape[-1]
+    full_kv = cfg.n_heads * (cfg.mla.d_nope + cfg.mla.d_rope
+                             + cfg.mla.d_v)
+    assert per_tok < full_kv / 4

@@ -1,0 +1,84 @@
+"""Baseline methods: mechanics + comm accounting (Table 5 machinery)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines, mlp, tm
+from repro.data import partition, synthetic
+
+TM_CFG = tm.TMConfig(n_classes=10, n_clauses=16, n_features=100,
+                     n_states=63, s=5.0, T=16)
+BCFG = baselines.BaselineConfig(n_clients=6, rounds=2, local_epochs=1,
+                                ifca_k=3, batch=16)
+
+
+@pytest.fixture(scope="module")
+def data():
+    x, y, dcfg = synthetic.make_dataset("synthmnist", 1200,
+                                        jax.random.PRNGKey(0), side=10)
+    return partition.partition(x, y, dcfg.n_classes, n_clients=6,
+                               experiment=5, key=jax.random.PRNGKey(1),
+                               n_train=40, n_test=20, n_conf=20)
+
+
+def test_mlp_learns(data):
+    p = mlp.init(jax.random.PRNGKey(0), 100, 64, 10)
+    before = float(mlp.accuracy(p, data.x_train[0], data.y_train[0]))
+    p = mlp.local_train(p, data.x_train[0], data.y_train[0],
+                        jax.random.PRNGKey(1), epochs=20, batch=16, lr=0.1)
+    after = float(mlp.accuracy(p, data.x_train[0], data.y_train[0]))
+    assert after > max(before, 0.8)
+
+
+def test_fedprox_proximal_term_pulls_towards_ref():
+    p = mlp.init(jax.random.PRNGKey(0), 100, 16, 10)
+    ref = jax.tree.map(jnp.zeros_like, p)
+    x = jnp.zeros((8, 100))
+    y = jnp.zeros((8,), jnp.int32)
+    base = mlp.loss_fn(p, x, y)
+    prox = mlp.loss_fn(p, x, y, prox_mu=0.1, prox_ref=ref)
+    assert float(prox) > float(base)
+
+
+@pytest.mark.parametrize("fn_name", ["fedavg", "fedprox", "ifca", "flis"])
+def test_dl_baselines_run_and_meter_comm(fn_name, data):
+    fn = baselines.BASELINES[fn_name]
+    hist = fn(data, BCFG, jax.random.PRNGKey(2), 100, 10)
+    assert len(hist.accuracy) == BCFG.rounds
+    assert all(0.0 <= a <= 1.0 for a in hist.accuracy)
+    assert hist.upload_mb > 0
+    pbytes = mlp.n_bytes(mlp.init(jax.random.PRNGKey(0), 100,
+                                  BCFG.n_hidden, 10))
+    expect_up = BCFG.rounds * BCFG.n_clients * pbytes / 1e6
+    assert abs(hist.upload_mb - expect_up) < 1e-9
+    if fn_name == "ifca":
+        assert abs(hist.download_mb - expect_up * BCFG.ifca_k) < 1e-9
+
+
+def test_fedtm_runs_and_comm_is_all_classes(data):
+    hist = baselines.run_fedtm(data, TM_CFG, BCFG, jax.random.PRNGKey(3))
+    assert len(hist.accuracy) == BCFG.rounds
+    expect = BCFG.rounds * BCFG.n_clients * TM_CFG.n_classes \
+        * TM_CFG.n_clauses * 4 / 1e6
+    assert abs(hist.upload_mb - expect) < 1e-9
+
+
+def test_tpfl_uploads_factor_c_less_than_fedtm():
+    """TPFL uploads one class's vector; FedTM uploads all C — the paper's
+    communication claim, checked as an exact formula."""
+    from repro.core import federation
+    fed = federation.FedConfig(n_clients=6, rounds=2, local_epochs=1)
+    tpfl_up = fed.rounds * fed.n_clients * (TM_CFG.n_clauses * 4 + 4)
+    fedtm_up = fed.rounds * fed.n_clients * TM_CFG.n_classes \
+        * TM_CFG.n_clauses * 4
+    ratio = fedtm_up / tpfl_up
+    assert ratio > TM_CFG.n_classes * 0.9
+
+
+def test_similarity_clusters_connected_components():
+    sim = np.array([[1.0, 0.95, 0.0],
+                    [0.95, 1.0, 0.0],
+                    [0.0, 0.0, 1.0]])
+    lab = baselines._similarity_clusters(sim, 0.9)
+    assert lab[0] == lab[1] != lab[2]

@@ -1,0 +1,95 @@
+"""Synthetic data + Dirichlet partitioning tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import partition, synthetic
+
+
+@pytest.mark.parametrize("name", synthetic.DATASETS)
+def test_make_dataset_contract(name):
+    x, y, cfg = synthetic.make_dataset(name, 500, jax.random.PRNGKey(0),
+                                       side=10)
+    assert x.shape == (500, 100)
+    assert x.dtype == jnp.uint8
+    assert set(np.unique(np.asarray(x))) <= {0, 1}
+    assert int(y.max()) < cfg.n_classes
+
+
+def test_dataset_is_learnable_signal():
+    """Samples of the same class are closer than cross-class (on average)."""
+    x, y, cfg = synthetic.make_dataset("synthmnist", 600,
+                                       jax.random.PRNGKey(1), side=10)
+    x = np.asarray(x, dtype=np.float32)
+    y = np.asarray(y)
+    same, diff = [], []
+    for c in range(3):
+        a = x[y == c][:20]
+        b = x[y == (c + 1) % cfg.n_classes][:20]
+        if len(a) < 2 or len(b) < 1:
+            continue
+        same.append(np.abs(a[:10, None] - a[None, 10:20]).mean())
+        diff.append(np.abs(a[:10, None] - b[None, :10]).mean())
+    assert np.mean(same) < np.mean(diff)
+
+
+def test_partition_shapes_and_determinism():
+    x, y, cfg = synthetic.make_dataset("synthmnist", 800,
+                                       jax.random.PRNGKey(0), side=10)
+    kw = dict(n_clients=6, experiment=3, key=jax.random.PRNGKey(5),
+              n_train=30, n_test=10, n_conf=10)
+    a = partition.partition(x, y, cfg.n_classes, **kw)
+    b = partition.partition(x, y, cfg.n_classes, **kw)
+    assert a.x_train.shape == (6, 30, 100)
+    assert a.x_conf.shape == (6, 10, 100)
+    assert (a.y_train == b.y_train).all()          # deterministic
+
+
+def test_experiment1_uniform_vs_experiment5_skewed():
+    x, y, cfg = synthetic.make_dataset("synthmnist", 3000,
+                                       jax.random.PRNGKey(0), side=10)
+
+    def entropy(exp):
+        cd = partition.partition(x, y, cfg.n_classes, n_clients=8,
+                                 experiment=exp, key=jax.random.PRNGKey(1),
+                                 n_train=100, n_test=10, n_conf=10)
+        ents = []
+        for i in range(8):
+            counts = np.bincount(np.asarray(cd.y_train[i]),
+                                 minlength=cfg.n_classes)
+            p = counts / counts.sum()
+            ents.append(-(p[p > 0] * np.log(p[p > 0])).sum())
+        return np.mean(ents)
+
+    assert entropy(1) > entropy(5) + 0.5
+
+
+def test_experiment_mix_fraction():
+    """Experiment 3 = 50% IID / 50% non-IID clients (paper Fig. 3)."""
+    mix = partition.client_mixtures(8, 10, 0.5, jax.random.PRNGKey(0))
+    maxp = np.asarray(mix.max(axis=1))
+    # IID half near-uniform (max prob ≈ 0.1), non-IID half spiked
+    assert (maxp[:4] < 0.25).all()
+    assert (maxp[4:] > 0.5).all()
+
+
+def test_labels_match_mixture():
+    x, y, cfg = synthetic.make_dataset("synthmnist", 2000,
+                                       jax.random.PRNGKey(0), side=10)
+    cd = partition.partition(x, y, cfg.n_classes, n_clients=4, experiment=5,
+                             key=jax.random.PRNGKey(2), n_train=200,
+                             n_test=10, n_conf=10)
+    for i in range(4):
+        top_mix = int(jnp.argmax(cd.mixtures[i]))
+        counts = np.bincount(np.asarray(cd.y_train[i]), minlength=10)
+        assert counts[top_mix] >= 0.4 * counts.sum()
+
+
+def test_booleanize():
+    f = jnp.array([[0.2, 0.7], [0.5, 0.4]])
+    assert (synthetic.booleanize(f) == jnp.array([[0, 1], [1, 0]])).all()
+    u8 = jnp.array([[10, 200]], dtype=jnp.uint8)
+    assert (synthetic.booleanize(u8) == jnp.array([[0, 1]])).all()
+    b = jnp.array([[0, 1]], dtype=jnp.uint8)
+    assert (synthetic.booleanize(b) == b).all()

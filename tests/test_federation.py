@@ -1,0 +1,134 @@
+"""TPFL federation (Algorithms 1 & 2) system tests."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import clustering, federation, tm
+from repro.data import partition, synthetic
+
+TM_CFG = tm.TMConfig(n_classes=10, n_clauses=20, n_features=100,
+                     n_states=63, s=5.0, T=20)
+
+
+def _data(n_clients=8, experiment=5, seed=0):
+    x, y, dcfg = synthetic.make_dataset("synthmnist", 1500,
+                                        jax.random.PRNGKey(seed), side=10)
+    return partition.partition(
+        x, y, dcfg.n_classes, n_clients=n_clients, experiment=experiment,
+        key=jax.random.PRNGKey(seed + 1), n_train=40, n_test=20, n_conf=20)
+
+
+def test_cluster_aggregate_mean_and_counts():
+    uploads = jnp.array([[1.0, 2.0], [3.0, 4.0], [5.0, 6.0]])
+    assign = jnp.array([0, 0, 2])
+    res = clustering.aggregate(uploads, assign, n_clusters=3)
+    assert jnp.allclose(res.cluster_weights[0], jnp.array([2.0, 3.0]))
+    assert jnp.allclose(res.cluster_weights[2], jnp.array([5.0, 6.0]))
+    assert res.counts.tolist() == [2, 0, 1]
+
+
+def test_cluster_aggregate_permutation_invariant():
+    key = jax.random.PRNGKey(0)
+    uploads = jax.random.normal(key, (12, 7))
+    assign = jax.random.randint(key, (12,), 0, 4)
+    perm = jax.random.permutation(jax.random.PRNGKey(1), 12)
+    a = clustering.aggregate(uploads, assign, 4)
+    b = clustering.aggregate(uploads[perm], assign[perm], 4)
+    assert jnp.allclose(a.cluster_weights, b.cluster_weights, atol=1e-5)
+    assert (a.counts == b.counts).all()
+
+
+def test_empty_cluster_keeps_previous_weights():
+    prev = jnp.full((3, 2), 7.0)
+    uploads = jnp.array([[1.0, 1.0]])
+    res = clustering.aggregate(uploads, jnp.array([0]), 3, prev=prev)
+    assert jnp.allclose(res.cluster_weights[1], 7.0)
+    assert jnp.allclose(res.cluster_weights[0], 1.0)
+
+
+def test_tpfl_round_mechanics():
+    data = _data()
+    fed = federation.FedConfig(n_clients=8, rounds=1, local_epochs=1)
+    state, hist = federation.run(data, TM_CFG, fed, jax.random.PRNGKey(0))
+    h = hist[0]
+    # cluster ids live in [0, C); counts sum to n_clients
+    assert int(h.assignment.min()) >= 0
+    assert int(h.assignment.max()) < TM_CFG.n_classes
+    assert int(h.cluster_counts.sum()) == 8
+    # at most C clusters (paper: #clusters ≤ #classes)
+    assert int((h.cluster_counts > 0).sum()) <= TM_CFG.n_classes
+
+
+def test_tpfl_comm_accounting_exact():
+    data = _data()
+    fed = federation.FedConfig(n_clients=8, rounds=2, local_epochs=1)
+    _, hist = federation.run(data, TM_CFG, fed, jax.random.PRNGKey(0))
+    m, bpw = TM_CFG.n_clauses, fed.bytes_per_weight
+    for h in hist:
+        assert h.upload_bytes == 8 * (m * bpw + 4)
+        nonempty = int((h.cluster_counts > 0).sum())
+        assert h.download_bytes_broadcast == nonempty * m * bpw
+        assert h.download_bytes_per_client == 8 * m * bpw
+
+
+def test_tpfl_upload_is_one_class_slice_only():
+    """The paper's headline saving: upload = m weights, not C·m."""
+    fed = federation.FedConfig(n_clients=8, rounds=1, local_epochs=1)
+    full_model = TM_CFG.n_classes * TM_CFG.n_clauses * fed.bytes_per_weight
+    upload = TM_CFG.n_clauses * fed.bytes_per_weight + 4
+    assert upload < full_model / (TM_CFG.n_classes - 1)
+
+
+def test_multiclass_sharing_more_upload_more_clusters():
+    """§7 future-work extension: top_classes=2 doubles upload and lets a
+    client join two clusters; accuracy stays in a sane band."""
+    data = _data()
+    fed1 = federation.FedConfig(n_clients=8, rounds=1, local_epochs=1)
+    fed2 = federation.FedConfig(n_clients=8, rounds=1, local_epochs=1,
+                                top_classes=2)
+    _, h1 = federation.run(data, TM_CFG, fed1, jax.random.PRNGKey(0))
+    _, h2 = federation.run(data, TM_CFG, fed2, jax.random.PRNGKey(0))
+    assert h2[0].upload_bytes == 2 * h1[0].upload_bytes
+    assert h2[0].assignment.shape == (8, 2)
+    assert int(h2[0].cluster_counts.sum()) == 16     # 2 memberships each
+    assert abs(float(h2[0].mean_accuracy)
+               - float(h1[0].mean_accuracy)) < 0.3
+
+
+def test_confidence_threshold_skips_unconfident_shares():
+    """§7: with an absurdly high threshold nothing is shared — cluster
+    counts are zero and weights pass through Phase D unchanged."""
+    data = _data()
+    fed = federation.FedConfig(n_clients=8, rounds=1, local_epochs=1,
+                               conf_threshold=1e9)
+    _, hist = federation.run(data, TM_CFG, fed, jax.random.PRNGKey(0))
+    assert int(hist[0].cluster_counts.sum()) == 0
+
+
+@pytest.mark.slow
+def test_tpfl_accuracy_improves_under_noniid():
+    data = _data(n_clients=10, experiment=5, seed=3)
+    fed = federation.FedConfig(n_clients=10, rounds=3, local_epochs=2)
+    _, hist = federation.run(data, TM_CFG, fed, jax.random.PRNGKey(4))
+    accs = [float(h.mean_accuracy) for h in hist]
+    assert accs[-1] > 0.7
+    assert accs[-1] >= accs[0] - 0.05   # no collapse across rounds
+
+
+def test_phase_d_overwrites_only_cmax_class():
+    data = _data()
+    fed = federation.FedConfig(n_clients=8, rounds=1, local_epochs=1)
+    k = jax.random.PRNGKey(0)
+    state = federation.init_state(TM_CFG, fed, k)
+    params, c_max, uploads = federation._phase_a(state, data, k, TM_CFG, fed)
+    res = clustering.aggregate(uploads.reshape(-1, TM_CFG.n_clauses),
+                               c_max.reshape(-1), TM_CFG.n_classes,
+                               prev=state.cluster_weights)
+    newp = federation._phase_d(params, c_max, res.cluster_weights)
+    for i in range(4):
+        c = int(c_max[i, 0])
+        others = [cc for cc in range(TM_CFG.n_classes) if cc != c]
+        # non-c_max classes untouched
+        assert (newp.weights[i, others] == params.weights[i, others]).all()
+        assert jnp.allclose(newp.weights[i, c],
+                            jnp.round(res.cluster_weights[c]))

@@ -1,0 +1,135 @@
+"""AdamW, sharding rules, confidence helpers, HLO collective parser."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import confidence
+from repro.launch import hlo_analysis
+from repro.optim import adamw
+from repro.sharding import rules
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0)
+    state = adamw.init(params, cfg)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    for _ in range(100):
+        g = jax.grad(loss)(params)
+        params, state = adamw.update(params, g, state, cfg)
+    assert float(loss(params)) < 1e-2
+    assert int(state.step) == 100
+
+
+def test_adamw_grad_clip():
+    params = {"w": jnp.zeros(3)}
+    cfg = adamw.AdamWConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0)
+    state = adamw.init(params, cfg)
+    g = {"w": jnp.array([100.0, 0.0, 0.0])}
+    p2, _ = adamw.update(params, g, state, cfg)
+    # clipped to unit norm → first-step Adam update magnitude ≈ lr
+    assert float(jnp.abs(p2["w"]).max()) < 1.5
+
+
+def test_adamw_preserves_tree_structure():
+    params = {"a": {"b": jnp.ones((2, 3))}, "c": [jnp.ones(4)]}
+    state = adamw.init(params)
+    g = jax.tree.map(jnp.ones_like, params)
+    p2, s2 = adamw.update(params, g, state)
+    assert jax.tree.structure(p2) == jax.tree.structure(params)
+    assert jax.tree.structure(s2.m) == jax.tree.structure(params)
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+
+def _fake_mesh(shape=(2, 2), axes=("data", "model")):
+    devs = np.array(jax.devices() * (shape[0] * shape[1]))[
+        :shape[0] * shape[1]].reshape(shape)
+    return Mesh(devs, axes)
+
+
+def test_param_spec_patterns():
+    mesh = _fake_mesh()
+    assert rules.param_spec("embed", (64, 32), mesh) == P("model", "data")
+    # lm_head keeps d replicated on purpose (see rules.py §Perf note)
+    assert rules.param_spec("lm_head", (32, 64), mesh) == P(None, "model")
+    s = rules.param_spec("segments/0/mixer/wq", (4, 32, 64), mesh)
+    assert s == P(None, "data", "model")
+    s = rules.param_spec("segments/0/mixer/wo", (4, 64, 32), mesh)
+    assert s == P(None, "model", "data")
+    # MoE expert bank, expert-parallel
+    s = rules.param_spec("segments/0/ffn/gate", (4, 8, 32, 16), mesh, "ep")
+    assert s == P(None, "model", "data", None)
+    # norm scales replicated
+    s = rules.param_spec("segments/0/norm1", (4, 32), mesh)
+    assert s == P(None, None)
+
+
+def test_param_spec_divisibility_guard():
+    mesh = _fake_mesh()
+    # vocab 49155 not divisible by 2 → replicated on that dim
+    assert rules.param_spec("embed", (49155, 32), mesh) == P(None, "data")
+    # lm_head: d replicated by design; non-divisible vocab also replicated
+    assert rules.param_spec("lm_head", (32, 49155), mesh) == P(None, None)
+
+
+def test_batch_spec_fallback_for_tiny_batch():
+    mesh = _fake_mesh()
+    assert rules.batch_spec(mesh, 8) == P("data", None)
+    assert rules.batch_spec(mesh, 1) == P(None, None)   # long_500k case
+
+
+# ---------------------------------------------------------------------------
+# Confidence (NN analogue)
+# ---------------------------------------------------------------------------
+
+def test_logit_margin_confidence_prefers_dominant_class():
+    logits = jnp.array([[5.0, 1.0, 0.0],
+                        [4.0, 2.0, 0.0],
+                        [0.0, 0.5, 0.2]])
+    conf = confidence.logit_margin_confidence(logits)
+    assert int(jnp.argmax(conf)) == 0
+    assert int(confidence.cluster_assignment(conf)) == 0
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parser
+# ---------------------------------------------------------------------------
+
+def test_collective_bytes_parser():
+    hlo = """
+  %ag = bf16[8,128]{1,0} all-gather(%x), replica_groups={}
+  %ar.1 = f32[16]{0} all-reduce(%y), to_apply=%add
+  %p = (f32[4,4]{1,0}, f32[4,4]{1,0}) all-to-all(%a, %b)
+  %cp = f32[2,2]{1,0} collective-permute(%z)
+  %notacoll = f32[999]{0} add(%a, %b)
+"""
+    out = hlo_analysis.collective_bytes(hlo)
+    assert out["all-gather"] == 8 * 128 * 2
+    assert out["all-reduce"] == 16 * 4
+    assert out["all-to-all"] == 2 * 16 * 4
+    assert out["collective-permute"] == 4 * 4
+
+
+def test_roofline_terms_and_bottleneck():
+    cost = {"flops": 197e12, "bytes accessed": 819e9 * 2}
+    coll = {"all-reduce": int(50e9 * 3)}
+    rf = hlo_analysis.roofline(cost, coll, peak_flops=197e12, hbm_bw=819e9,
+                               ici_bw=50e9, model_flops=197e12 * 256,
+                               chips=256)
+    assert abs(rf["compute_s"] - 1.0) < 1e-9
+    assert abs(rf["memory_s"] - 2.0) < 1e-9
+    assert abs(rf["collective_s"] - 3.0) < 1e-9
+    assert rf["bottleneck"] == "collective"
+    assert abs(rf["useful_flops_ratio"] - 1.0) < 1e-9

@@ -1,0 +1,112 @@
+"""Tsetlin Machine unit + property(seed-swept) tests."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import tm
+
+
+def _cfg(**kw):
+    base = dict(n_classes=4, n_clauses=20, n_features=16, n_states=63,
+                s=3.0, T=15)
+    base.update(kw)
+    return tm.TMConfig(**base)
+
+
+def _blocky_data(n, key, n_classes=4, n_features=16):
+    """class c ⇔ bits [4c, 4c+4) set (plus noise)."""
+    ky, kn = jax.random.split(key)
+    y = jax.random.randint(ky, (n,), 0, n_classes)
+    x = (jax.random.uniform(kn, (n, n_features)) < 0.05).astype(jnp.int32)
+    idx = jnp.arange(n_features)[None, :]
+    on = (idx >= 4 * y[:, None]) & (idx < 4 * y[:, None] + 4)
+    return jnp.where(on, 1, x), y
+
+
+def test_init_shapes_and_bounds():
+    cfg = _cfg()
+    p = tm.init_params(cfg, jax.random.PRNGKey(0))
+    assert p.ta_state.shape == (4, 20, 32)
+    assert p.weights.shape == (4, 20)
+    assert int(p.ta_state.min()) >= 1
+    assert int(p.ta_state.max()) <= 2 * cfg.n_states
+
+
+def test_literals():
+    x = jnp.array([[1, 0, 1]])
+    lits = tm.literals(x)
+    assert (lits == jnp.array([[1, 0, 1, 0, 1, 0]])).all()
+
+
+def test_clause_outputs_are_boolean_and_empty_clause_convention():
+    cfg = _cfg()
+    p = tm.init_params(cfg, jax.random.PRNGKey(1))
+    # force one clause fully excluded (empty)
+    ta = p.ta_state.at[0, 0].set(1)
+    p = p._replace(ta_state=ta)
+    x, _ = _blocky_data(8, jax.random.PRNGKey(2))
+    learn = tm.clause_outputs(p, tm.literals(x), cfg, predict=False)
+    pred = tm.clause_outputs(p, tm.literals(x), cfg, predict=True)
+    assert set(jnp.unique(learn).tolist()) <= {0, 1}
+    assert (learn[:, 0, 0] == 1).all()     # empty fires while learning
+    assert (pred[:, 0, 0] == 0).all()      # and not during inference
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_learning_improves_accuracy(seed):
+    cfg = _cfg()
+    p = tm.init_params(cfg, jax.random.PRNGKey(seed))
+    x, y = _blocky_data(200, jax.random.PRNGKey(seed + 10))
+    xt, yt = _blocky_data(100, jax.random.PRNGKey(seed + 20))
+    before = float(tm.accuracy(p, xt, yt, cfg))
+    p = tm.train(p, x, y, jax.random.PRNGKey(seed + 30), cfg, epochs=5)
+    after = float(tm.accuracy(p, xt, yt, cfg))
+    assert after > max(before, 0.8), (before, after)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_ta_states_stay_bounded_after_training(seed):
+    cfg = _cfg()
+    p = tm.init_params(cfg, jax.random.PRNGKey(seed))
+    x, y = _blocky_data(100, jax.random.PRNGKey(seed))
+    p = tm.train(p, x, y, jax.random.PRNGKey(seed), cfg, epochs=2)
+    assert int(p.ta_state.min()) >= 1
+    assert int(p.ta_state.max()) <= 2 * cfg.n_states
+    assert int(p.weights.min()) >= 0
+
+
+def test_votes_clipped_at_threshold():
+    cfg = _cfg(T=5)
+    p = tm.init_params(cfg, jax.random.PRNGKey(0))
+    # saturate weights to force large raw votes
+    p = p._replace(weights=jnp.full_like(p.weights, 1000),
+                   ta_state=jnp.full_like(p.ta_state, 1))  # all excluded
+    x, _ = _blocky_data(4, jax.random.PRNGKey(1))
+    _, votes = tm.forward(p, x, cfg)
+    assert int(jnp.abs(votes).max()) <= cfg.T
+
+
+def test_confidence_tracks_data_skew():
+    """A client trained only on class 0 should be most confident in 0."""
+    cfg = _cfg()
+    p = tm.init_params(cfg, jax.random.PRNGKey(0))
+    x, y = _blocky_data(300, jax.random.PRNGKey(1))
+    keep = y == 0
+    x0 = jnp.where(keep[:, None], x, x[0][None])   # mostly class-0 samples
+    y0 = jnp.zeros_like(y)
+    p = tm.train(p, x0, y0, jax.random.PRNGKey(2), cfg, epochs=3)
+    xc, _ = _blocky_data(80, jax.random.PRNGKey(3))
+    conf = tm.confidence_scores(p, xc, cfg)
+    assert int(jnp.argmax(conf)) == 0
+
+
+def test_kernel_path_equals_jnp_path():
+    """cfg.use_kernel=True must be bit-identical (same uniforms)."""
+    cfg_a = _cfg()
+    cfg_b = _cfg(use_kernel=True)
+    p = tm.init_params(cfg_a, jax.random.PRNGKey(0))
+    x, y = _blocky_data(50, jax.random.PRNGKey(1))
+    pa = tm.train(p, x, y, jax.random.PRNGKey(2), cfg_a, epochs=1)
+    pb = tm.train(p, x, y, jax.random.PRNGKey(2), cfg_b, epochs=1)
+    assert (pa.ta_state == pb.ta_state).all()
+    assert (pa.weights == pb.weights).all()

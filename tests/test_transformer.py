@@ -1,0 +1,155 @@
+"""Full-model consistency: decode-with-cache ≡ parallel forward, segment
+scanning ≡ layer semantics, loss plumbing, reduced-config contract."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import config as mcfg
+from repro.models import transformer
+from repro.models.config import LayerSpec, ModelConfig
+
+
+def _f32(tree):
+    return jax.tree.map(lambda a: a.astype(jnp.float32)
+                        if a.dtype == jnp.bfloat16 else a, tree)
+
+
+@pytest.mark.parametrize("arch", ["yi_6b", "deepseek_v3_671b",
+                                  "jamba_1_5_large_398b", "xlstm_350m"])
+def test_decode_matches_forward(arch):
+    """Greedy per-token decode must reproduce the parallel forward logits."""
+    cfg = mcfg.reduced(registry.get(arch))
+    params = _f32(transformer.init(jax.random.PRNGKey(0), cfg))
+    T = 10
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, T), 0, cfg.vocab)
+    full, _ = transformer.forward(params, cfg, tokens=toks, remat=False)
+
+    caches = _f32(transformer.init_cache(cfg, 2, T))
+    outs = []
+    for t in range(T):
+        lg, caches = transformer.decode_step(params, cfg, toks[:, t:t + 1],
+                                             caches)
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=5e-2, atol=5e-2)
+    # and the argmax (what serving actually uses) matches almost always
+    agree = (dec.argmax(-1) == full.argmax(-1)).mean()
+    assert float(agree) > 0.9
+
+
+def test_segment_scan_equals_unrolled():
+    """(2, [spec]) scanned segments ≡ the same 2 layers listed explicitly."""
+    base = dict(name="t", d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                vocab=101)
+    spec = LayerSpec(mixer="attn", ffn="dense")
+    cfg_scan = ModelConfig(n_layers=2, segments=((2, (spec,)),), **base)
+    cfg_unroll = ModelConfig(n_layers=2, segments=((1, (spec, spec)),),
+                             **base)
+    p = _f32(transformer.init(jax.random.PRNGKey(0), cfg_scan))
+    # rebuild the unrolled params from the stacked ones
+    stacked = p["segments"][0][0]
+    p_unroll = dict(p)
+    p_unroll["segments"] = [tuple(
+        jax.tree.map(lambda a, i=i: a[i:i + 1], stacked) for i in range(2))]
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 101)
+    a, _ = transformer.forward(p, cfg_scan, tokens=toks, remat=False)
+    b, _ = transformer.forward(p_unroll, cfg_unroll, tokens=toks,
+                               remat=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_tied_embeddings_path():
+    cfg = ModelConfig(name="t", n_layers=1, d_model=32, n_heads=4,
+                      n_kv_heads=4, d_ff=64, vocab=53,
+                      segments=((1, (LayerSpec(),)),), tie_embeddings=True)
+    p = transformer.init(jax.random.PRNGKey(0), cfg)
+    assert "lm_head" not in p
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 6), 0, 53)
+    logits, _ = transformer.forward(p, cfg, tokens=toks)
+    assert logits.shape == (1, 6, cfg.padded_vocab)   # vocab pads to 128
+    assert int(logits.argmax(-1).max()) < 53          # pads masked to −inf
+
+
+def test_lm_loss_uniform_at_init_scale():
+    cfg = ModelConfig(name="t", n_layers=1, d_model=32, n_heads=4,
+                      n_kv_heads=4, d_ff=64, vocab=64,
+                      segments=((1, (LayerSpec(),)),))
+    p = transformer.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 64)
+    loss, parts = transformer.lm_loss(p, cfg, toks, toks)
+    # near-uniform logits at init → CE ≈ ln(vocab)
+    assert abs(float(parts["ce"]) - float(jnp.log(64.0))) < 1.0
+
+
+def test_ce_from_logits_valid_mask_broadcasts():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 512))
+    labels = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 512)
+    plain = transformer._ce_from_logits(logits, labels)
+    masked = transformer._ce_from_logits(logits, labels,
+                                         jnp.ones((1, 16)))
+    np.testing.assert_allclose(float(plain), float(masked), rtol=1e-6)
+
+
+def test_mtp_loss_positive_and_masks_tail():
+    from repro.configs import registry
+    cfg = mcfg.reduced(registry.get("deepseek_v3_671b"))
+    p = transformer.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    labels = jnp.roll(toks, -1, axis=1)
+    l1 = transformer.mtp_loss(p, cfg, toks, labels, depth=1, weight=0.3)
+    # ≈ 0.3 · ln(V) at init (uniform logits)
+    assert 0.2 * float(jnp.log(cfg.vocab)) < float(l1) \
+        < 0.45 * float(jnp.log(cfg.vocab))
+
+
+def test_remat_does_not_change_values():
+    cfg = mcfg.reduced(registry.get("yi_6b"))
+    p = transformer.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    a, _ = transformer.forward(p, cfg, tokens=toks, remat=True)
+    b, _ = transformer.forward(p, cfg, tokens=toks, remat=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_reduced_preserves_family_structure():
+    for arch in registry.ARCHS:
+        full = registry.get(arch)
+        red = mcfg.reduced(full)
+        full_mixers = {s.mixer for s in full.layer_list()}
+        red_mixers = {s.mixer for s in red.layer_list()}
+        assert red_mixers <= full_mixers
+        assert (red.moe is None) == (full.moe is None)
+        assert red.attn_kind == full.attn_kind
+
+
+def test_param_count_matches_manual():
+    cfg = ModelConfig(name="t", n_layers=1, d_model=8, n_heads=2,
+                      n_kv_heads=2, d_ff=16, vocab=11,
+                      segments=((1, (LayerSpec(),)),))
+    assert cfg.padded_vocab == 128          # vocab pads to a 128 multiple
+    n = cfg.param_count()
+    dh = 4
+    expect = (128 * 8           # embed (padded vocab)
+              + 8 * 128         # lm_head (padded vocab)
+              + 8                # final norm
+              + 8 + 8            # block norms
+              + 8 * 2 * dh * 2 + 8 * 2 * dh * 2   # wq wk wv wo (2 heads)
+              + 3 * 8 * 16)      # mlp
+    assert n == expect
+
+
+def test_active_params_moe():
+    cfg = registry.get("deepseek_v3_671b")
+    total = cfg.param_count()
+    active = cfg.active_param_count()
+    assert active < total * 0.12        # 37B active of 671B ≈ 5.5%
+    # sanity: published numbers ±25%
+    assert 5.0e11 < total < 8.5e11, total
+    assert 2.7e10 < active < 5.5e10, active
