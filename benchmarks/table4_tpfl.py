@@ -1,10 +1,13 @@
 """Paper Table 4 / Fig. 4 / Fig. 5: TPFL accuracy + communication under the
-5 experimental setups, per dataset.
+5 experimental setups, per dataset — run through the federated runtime.
 
 Validated claims (trends; absolute MNIST numbers are gated on real data —
 DESIGN.md §2): accuracy rises with non-IID severity, upload cost is flat
 (one weight vector per client·round), download cost grows with the number
-of populated clusters.  Paper-scale comm columns use the exact formulas.
+of populated clusters.  Communication columns are metered byte-exact from
+the wire codec's actual encoded buffers (``float32`` reproduces the
+paper's §6.7 arithmetic; ``int8``/``int4`` show the quantized-uplink
+variants); paper-scale columns use the exact formulas.
 """
 from __future__ import annotations
 
@@ -16,13 +19,14 @@ import jax
 
 from benchmarks import common
 from repro.core import federation
+from repro.fl.runtime import CodecConfig, RuntimeConfig
 
 ART = Path(__file__).resolve().parent / "artifacts"
 
 
 def run(datasets=("synthmnist", "synthfashion"),
         experiments=(1, 3, 5), scale: common.Scale | None = None,
-        seed: int = 0) -> list[dict]:
+        seed: int = 0, codecs=("float32", "int8")) -> list[dict]:
     scale = scale or common.Scale()
     rows = []
     for name in datasets:
@@ -32,26 +36,31 @@ def run(datasets=("synthmnist", "synthfashion"),
             fed_cfg = federation.FedConfig(
                 n_clients=scale.n_clients, rounds=scale.rounds,
                 local_epochs=scale.local_epochs)
-            t0 = time.time()
-            _, hist = federation.run(data, tm_cfg, fed_cfg,
-                                     jax.random.PRNGKey(seed + 7))
-            up, down = federation.total_comm_mb(hist)
-            rows.append({
-                "dataset": name, "experiment": exp,
-                "accuracy": round(float(hist[-1].mean_accuracy), 4),
-                "acc_per_round": [round(float(h.mean_accuracy), 4)
-                                  for h in hist],
-                "upload_mb": round(up, 5),
-                "download_mb": round(down, 5),
-                "clusters_final": int((hist[-1].cluster_counts > 0).sum()),
-                "paper_scale": common.paper_scale_comm_mb(
-                    name, dcfg.n_classes),
-                "wall_s": round(time.time() - t0, 1),
-            })
-            print(f"table4 {name} exp{exp}: acc={rows[-1]['accuracy']} "
-                  f"up={rows[-1]['upload_mb']}MB "
-                  f"down={rows[-1]['download_mb']}MB "
-                  f"({rows[-1]['wall_s']}s)", flush=True)
+            for codec in codecs:
+                rt_cfg = RuntimeConfig(codec=CodecConfig(codec))
+                t0 = time.time()
+                _, hist = federation.run(data, tm_cfg, fed_cfg,
+                                         jax.random.PRNGKey(seed + 7),
+                                         runtime_cfg=rt_cfg)
+                up, down = federation.total_comm_mb(hist)
+                rows.append({
+                    "dataset": name, "experiment": exp, "codec": codec,
+                    "accuracy": round(float(hist[-1].mean_accuracy), 4),
+                    "acc_per_round": [round(float(h.mean_accuracy), 4)
+                                      for h in hist],
+                    "upload_mb": round(up, 5),
+                    "download_mb": round(down, 5),
+                    "clusters_final": int((hist[-1].cluster_counts
+                                           > 0).sum()),
+                    "paper_scale": common.paper_scale_comm_mb(
+                        name, dcfg.n_classes),
+                    "wall_s": round(time.time() - t0, 1),
+                })
+                print(f"table4 {name} exp{exp} [{codec}]: "
+                      f"acc={rows[-1]['accuracy']} "
+                      f"up={rows[-1]['upload_mb']}MB "
+                      f"down={rows[-1]['download_mb']}MB "
+                      f"({rows[-1]['wall_s']}s)", flush=True)
     ART.mkdir(exist_ok=True)
     (ART / "table4_tpfl.json").write_text(json.dumps(rows, indent=2))
     return rows

@@ -64,6 +64,15 @@ def init_state(tm_cfg: tm.TMConfig, fed_cfg: FedConfig,
     return TPFLState(params, cw)
 
 
+def _strategy(tm_cfg: tm.TMConfig, fed_cfg: FedConfig):
+    from repro.fl.runtime.strategy import TPFLStrategy
+    return TPFLStrategy(
+        tm_cfg, local_epochs=fed_cfg.local_epochs,
+        top_classes=fed_cfg.top_classes,
+        conf_threshold=fed_cfg.conf_threshold,
+        weighted_confidence=fed_cfg.weighted_confidence)
+
+
 def _phase_a(state: TPFLState, data: ClientData, key: jax.Array,
              tm_cfg: tm.TMConfig, fed_cfg: FedConfig):
     """Local training + confidence + selective upload (Alg. 1).
@@ -73,23 +82,19 @@ def _phase_a(state: TPFLState, data: ClientData, key: jax.Array,
     joins j clusters.  Returns c_max (n, j) and uploads (n, j, m); with
     ``conf_threshold`` set, below-threshold slots are flagged invalid
     (class id = -1) and skipped by the aggregator.
+
+    The per-client body lives in ``runtime.strategy.TPFLStrategy`` — the
+    runtime engine and this in-process driver share one implementation.
     """
+    strat = _strategy(tm_cfg, fed_cfg)
     keys = jax.random.split(key, fed_cfg.n_clients)
-    j = fed_cfg.top_classes
 
-    def client(params, xt, yt, xc, k):
-        params = tm.train(params, xt, yt, k, tm_cfg,
-                          epochs=fed_cfg.local_epochs)
-        conf = tm.confidence_scores(params, xc, tm_cfg,
-                                    weighted=fed_cfg.weighted_confidence)
-        vals, c_top = jax.lax.top_k(conf, j)                 # (j,)
-        if fed_cfg.conf_threshold is not None:
-            c_top = jnp.where(vals >= fed_cfg.conf_threshold, c_top, -1)
-        upload = params.weights[jnp.clip(c_top, 0)].astype(jnp.float32)
-        return params, c_top, upload                         # (j,), (j, m)
+    def client(params, d, k):
+        params, up = strat.client_step(params, state.cluster_weights, d, k)
+        return params, up.slots, up.vecs                    # (j,), (j, m)
 
-    return jax.vmap(client)(state.client_params, data.x_train, data.y_train,
-                            data.x_conf, keys)
+    return jax.vmap(client, in_axes=(0, 0, 0))(
+        state.client_params, data, keys)
 
 
 def _phase_d(params: tm.TMParams, assignment: jnp.ndarray,
@@ -97,18 +102,11 @@ def _phase_d(params: tm.TMParams, assignment: jnp.ndarray,
     """Each client overwrites its shared classes with the cluster avg.
 
     assignment: (n, j) class/cluster ids (−1 = not shared)."""
-    new_w = jnp.round(cluster_weights[jnp.clip(assignment, 0)]
-                      ).astype(jnp.int32)                    # (n, j, m)
+    from repro.fl.runtime.strategy import TPFLStrategy
 
-    def upd(wc, cs, nw):
-        def one(wc, c_nw):
-            c, nwv = c_nw
-            return jnp.where(c >= 0, wc.at[c].set(nwv), wc), None
-        wc, _ = jax.lax.scan(one, wc, (cs, nw))
-        return wc
-
-    w = jax.vmap(upd)(params.weights, assignment, new_w)
-    return params._replace(weights=w)
+    return jax.vmap(
+        lambda p, a: TPFLStrategy.apply_broadcast(p, a, cluster_weights))(
+        params, assignment)
 
 
 def run_round(state: TPFLState, data: ClientData, key: jax.Array,
@@ -137,15 +135,40 @@ def run_round(state: TPFLState, data: ClientData, key: jax.Array,
 
 
 def run(data: ClientData, tm_cfg: tm.TMConfig, fed_cfg: FedConfig,
-        key: jax.Array) -> tuple[TPFLState, list[RoundMetrics]]:
-    k_init, k_rounds = jax.random.split(key)
-    state = init_state(tm_cfg, fed_cfg, k_init)
-    history = []
-    for r in range(fed_cfg.rounds):
-        state, metrics = run_round(
-            state, data, jax.random.fold_in(k_rounds, r), tm_cfg, fed_cfg)
-        history.append(metrics)
-    return state, history
+        key: jax.Array, runtime_cfg=None
+        ) -> tuple[TPFLState, list[RoundMetrics]]:
+    """Run the federation through the runtime engine.
+
+    With the default ``runtime_cfg`` (sync barrier, full participation,
+    float32 codec) this reproduces the legacy in-process loop exactly —
+    same per-round assignment, accuracy, and byte totals (now metered
+    from real encoded buffers rather than arithmetic).  Pass a
+    :class:`repro.fl.runtime.RuntimeConfig` to run the same federation
+    under partial participation, dropout, stragglers, quantized codecs,
+    or async buffered aggregation.
+    """
+    from repro.fl.runtime import Engine, RuntimeConfig
+
+    if runtime_cfg is None:
+        runtime_cfg = RuntimeConfig()
+    # fed_cfg.rounds is authoritative — callers pass runtime_cfg for the
+    # scenario knobs (scheduler/codec/aggregation), not the round count
+    runtime_cfg = dataclasses.replace(runtime_cfg, rounds=fed_cfg.rounds)
+    engine = Engine(_strategy(tm_cfg, fed_cfg), data, runtime_cfg)
+    end, reports = engine.run(key)
+    j = fed_cfg.top_classes
+    history = [
+        RoundMetrics(
+            mean_accuracy=rep.mean_accuracy,
+            per_client_accuracy=rep.per_client_accuracy,
+            assignment=rep.assignment[:, 0] if j == 1 else rep.assignment,
+            cluster_counts=rep.cluster_counts,
+            upload_bytes=rep.upload_bytes,
+            download_bytes_broadcast=rep.download_bytes_broadcast,
+            download_bytes_per_client=rep.download_bytes_per_client)
+        for rep in reports
+    ]
+    return TPFLState(end.client_state, end.server), history
 
 
 def total_comm_mb(history: list[RoundMetrics]) -> tuple[float, float]:

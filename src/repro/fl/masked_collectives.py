@@ -30,6 +30,24 @@ def clustered_mean(vals: jnp.ndarray, assignment: jnp.ndarray,
                               1.0)
 
 
+def clustered_weighted_mean(vals: jnp.ndarray, assignment: jnp.ndarray,
+                            weights: jnp.ndarray,
+                            n_clusters: int) -> jnp.ndarray:
+    """Per-cluster *weighted* mean — the async-runtime form.
+
+    vals: (n, ...), assignment: (n,) (−1 = masked out), weights: (n,)
+    staleness discounts (0 also masks).  Returns (n_clusters, ...) of
+    Σ wᵢ·vᵢ / Σ wᵢ per cluster (0 where no weight landed).  With all
+    weights 1 this reduces to :func:`clustered_mean`.
+    """
+    onehot = jax.nn.one_hot(assignment, n_clusters, dtype=jnp.float32)
+    onehot = onehot * weights.astype(jnp.float32)[:, None]       # (n, C)
+    sums = jnp.einsum("n...,nk->k...", vals.astype(jnp.float32), onehot)
+    total = onehot.sum(0)
+    return sums / jnp.maximum(total.reshape((-1,) + (1,) * (vals.ndim - 1)),
+                              1e-9)
+
+
 def clustered_mean_sharded(local_val: jnp.ndarray, my_cluster: jnp.ndarray,
                            n_clusters: int, axis_name: str) -> jnp.ndarray:
     """Inside shard_map: each shard holds one client's upload (m,) and its

@@ -1,0 +1,26 @@
+"""Federated runtime: scheduler, strategies, wire codec, round engine.
+
+The subsystem that replaces the monolithic ``federation.run`` loop:
+
+* :mod:`repro.fl.runtime.scheduler` — K-of-N client sampling (uniform /
+  weighted / round-robin) with dropout and straggler-staleness injection.
+* :mod:`repro.fl.runtime.strategy` — the ``Strategy`` protocol unifying
+  sync/async TPFL and the FedAvg / FedProx / IFCA baselines behind one
+  ``client_step / aggregate / broadcast`` surface.
+* :mod:`repro.fl.runtime.codec` — quantized (int8/int4) + sparse-delta
+  wire encoding of the uploaded vectors, with byte-exact metering
+  (``len(buffer)``, not arithmetic).
+* :mod:`repro.fl.runtime.engine` — the orchestrated round engine: sync
+  barrier or async buffered aggregation (fixed-capacity buffer, masked
+  validity, staleness-discounted averaging), jit-friendly static-K
+  gather/scatter of the sampled client sub-pytrees.
+* :mod:`repro.fl.runtime.checkpointing` — round-granular save/resume on
+  top of ``repro.checkpoint.ckpt``.
+"""
+from repro.fl.runtime.codec import CodecConfig          # noqa: F401
+from repro.fl.runtime.engine import (                   # noqa: F401
+    Engine, EngineState, RoundReport, RuntimeConfig)
+from repro.fl.runtime.scheduler import (                # noqa: F401
+    Participation, Scheduler, SchedulerConfig)
+from repro.fl.runtime.strategy import (                 # noqa: F401
+    FedAvgStrategy, IFCAStrategy, Strategy, TPFLStrategy, Upload)

@@ -1,0 +1,52 @@
+"""Round-granular checkpoint/resume for the federated engine.
+
+Thin layer over :mod:`repro.checkpoint.ckpt`: an :class:`EngineState` is
+one pytree (client population, server matrix, async buffer, round
+counter), so a checkpoint is a single msgpack tensor store named by the
+round it starts.  Because the engine keys round r with
+``fold_in(k_rounds, r)`` on the *absolute* round index, a resumed run is
+bit-identical to the uninterrupted one.
+
+    engine = Engine(strategy, data, cfg)
+    like = engine.init(jax.random.PRNGKey(0))     # structure template
+    state = checkpointing.restore(checkpointing.latest(d), like)
+    engine.run(key, state=state)
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+
+from repro.checkpoint import ckpt
+
+_PAT = re.compile(r"round_(\d+)\.msgpack$")
+
+
+def path_for(directory: str | pathlib.Path, round_idx: int) -> pathlib.Path:
+    return pathlib.Path(directory) / f"round_{round_idx:06d}.msgpack"
+
+
+def save(directory: str | pathlib.Path, state) -> pathlib.Path:
+    """Persist ``state``; the filename records the next round to run."""
+    path = path_for(directory, int(state.round_idx))
+    ckpt.save(path, state)
+    return path
+
+
+def latest(directory: str | pathlib.Path) -> pathlib.Path | None:
+    """Newest checkpoint in ``directory`` (highest round), or None."""
+    d = pathlib.Path(directory)
+    if not d.is_dir():
+        return None
+    best, best_r = None, -1
+    for p in d.iterdir():
+        m = _PAT.search(p.name)
+        if m and int(m.group(1)) > best_r:
+            best, best_r = p, int(m.group(1))
+    return best
+
+
+def restore(path: str | pathlib.Path, like):
+    """Rebuild an :class:`EngineState` from ``path`` into the structure of
+    ``like`` (e.g. a fresh ``engine.init(...)`` state)."""
+    return ckpt.restore(path, like)

@@ -1,0 +1,191 @@
+"""Wire codec for federated uploads/broadcasts — real bytes, not formulas.
+
+Every vector that crosses the client↔aggregator boundary is encoded to an
+actual ``bytes`` buffer and decoded back before aggregation, so the
+communication numbers reported by the engine are ``len(buffer)`` of what
+would really be sent, and lossy codecs (int8/int4) really do perturb the
+aggregate the way they would in deployment.
+
+Formats (little-endian throughout; the codec config is shared out-of-band
+by both endpoints, so frames carry no codec/type tags):
+
+* ``float32`` dense — payload is the raw ``<f4`` vector: ``4·m`` bytes.
+  This is the legacy wire format; with it the engine's metered totals
+  reproduce the hand-computed §6.7 accounting exactly.
+* ``int8`` dense — ``scale <f4`` + ``m`` bytes.  Symmetric quantization
+  ``q = round(x / scale)``, ``scale = max|x| / 127``.
+* ``int4`` dense — ``scale <f4`` + ``ceil(m/2)`` bytes; two's-complement
+  nibbles packed two per byte, ``q ∈ [−7, 7]`` stored biased by +8.
+* sparse delta (any dtype, ``sparse=True``) — the encoder subtracts the
+  shared reference (the cluster vector the server last broadcast, which
+  both endpoints know), quantizes the *delta*, and sends only nonzero
+  entries: ``flag u1`` + [``scale <f4``] + ``count <u4`` +
+  ``count·(idx <u2 + value)``.  When the sparse frame would be larger
+  than the dense one the encoder falls back to dense (``flag = 0``).
+
+``encode`` → ``bytes``; ``decode`` → float32 numpy vector.  Round-trip is
+bit-exact for float32 and within one quantization step otherwise (the
+satellite test pins this).
+"""
+from __future__ import annotations
+
+import dataclasses
+import struct
+
+import numpy as np
+
+CODECS = ("float32", "int8", "int4")
+
+_QMAX = {"int8": 127, "int4": 7}
+
+
+@dataclasses.dataclass(frozen=True)
+class CodecConfig:
+    name: str = "float32"       # float32 | int8 | int4
+    sparse: bool = False        # sparse delta encoding vs shared reference
+
+    def __post_init__(self):
+        if self.name not in CODECS:
+            raise ValueError(f"unknown codec {self.name!r}; "
+                             f"choose from {CODECS}")
+
+
+# ---------------------------------------------------------------------------
+# dense payloads
+# ---------------------------------------------------------------------------
+
+def _quantize(vec: np.ndarray, qmax: int) -> tuple[np.ndarray, float]:
+    peak = float(np.max(np.abs(vec))) if vec.size else 0.0
+    scale = peak / qmax if peak > 0 else 1.0
+    q = np.clip(np.rint(vec / scale), -qmax, qmax).astype(np.int8)
+    return q, scale
+
+
+def _pack_int4(q: np.ndarray) -> bytes:
+    """q in [−7, 7] → biased nibbles [1, 15], two per byte."""
+    b = (q.astype(np.int16) + 8).astype(np.uint8)
+    if b.size % 2:
+        b = np.concatenate([b, np.zeros(1, np.uint8)])
+    return ((b[0::2] << 4) | b[1::2]).tobytes()
+
+
+def _unpack_int4(buf: bytes, m: int) -> np.ndarray:
+    b = np.frombuffer(buf, dtype=np.uint8)
+    out = np.empty(b.size * 2, np.int16)
+    out[0::2] = b >> 4
+    out[1::2] = b & 0x0F
+    return (out[:m] - 8).astype(np.float32)
+
+
+def _encode_dense(vec: np.ndarray, name: str) -> bytes:
+    if name == "float32":
+        return vec.astype("<f4").tobytes()
+    q, scale = _quantize(vec, _QMAX[name])
+    head = struct.pack("<f", scale)
+    if name == "int8":
+        return head + q.tobytes()
+    return head + _pack_int4(q)
+
+
+def _decode_dense(buf: bytes, m: int, name: str) -> np.ndarray:
+    if name == "float32":
+        return np.frombuffer(buf, dtype="<f4", count=m).astype(np.float32)
+    (scale,) = struct.unpack_from("<f", buf, 0)
+    if name == "int8":
+        q = np.frombuffer(buf, dtype=np.int8, count=m,
+                          offset=4).astype(np.float32)
+    else:
+        q = _unpack_int4(buf[4:], m)
+    return q * scale
+
+
+def _value_bytes(name: str, count: int) -> int:
+    if name == "float32":
+        return 4 * count
+    if name == "int8":
+        return count
+    return (count + 1) // 2
+
+
+# ---------------------------------------------------------------------------
+# public surface
+# ---------------------------------------------------------------------------
+
+def encode(vec: np.ndarray, cfg: CodecConfig,
+           ref: np.ndarray | None = None) -> bytes:
+    """Encode one float vector; ``ref`` is the shared delta reference
+    (ignored unless ``cfg.sparse``)."""
+    vec = np.asarray(vec, dtype=np.float32).ravel()
+    if not cfg.sparse:
+        return _encode_dense(vec, cfg.name)
+
+    delta = vec if ref is None else vec - np.asarray(ref, np.float32).ravel()
+    if cfg.name == "float32":
+        q, scale = delta, None
+        nz = np.nonzero(delta)[0]
+    else:
+        q, scale = _quantize(delta, _QMAX[cfg.name])
+        nz = np.nonzero(q)[0]
+    if nz.size > 0xFFFF or vec.size > 0xFFFF:
+        nz = None                         # u2 indices can't address it
+    if nz is not None:
+        sparse_cost = 5 + (0 if scale is None else 4) \
+            + 2 * nz.size + _value_bytes(cfg.name, nz.size)
+        dense_cost = 1 + len(_encode_dense(vec, cfg.name))
+        if sparse_cost < dense_cost:
+            parts = [b"\x01"]
+            if scale is not None:
+                parts.append(struct.pack("<f", scale))
+            parts.append(struct.pack("<I", nz.size))
+            parts.append(nz.astype("<u2").tobytes())
+            if cfg.name == "float32":
+                parts.append(delta[nz].astype("<f4").tobytes())
+            elif cfg.name == "int8":
+                parts.append(q[nz].tobytes())
+            else:
+                parts.append(_pack_int4(q[nz]))
+            return b"".join(parts)
+    return b"\x00" + _encode_dense(vec, cfg.name)
+
+
+def decode(buf: bytes, m: int, cfg: CodecConfig,
+           ref: np.ndarray | None = None) -> np.ndarray:
+    """Decode one frame produced by :func:`encode` back to float32 (m,)."""
+    if not cfg.sparse:
+        return _decode_dense(buf, m, cfg.name)
+
+    flag, buf = buf[0], buf[1:]
+    if flag == 0:
+        return _decode_dense(buf, m, cfg.name)
+    off = 0
+    scale = None
+    if cfg.name != "float32":
+        (scale,) = struct.unpack_from("<f", buf, off)
+        off += 4
+    (count,) = struct.unpack_from("<I", buf, off)
+    off += 4
+    idx = np.frombuffer(buf, dtype="<u2", count=count, offset=off
+                        ).astype(np.int64)
+    off += 2 * count
+    if cfg.name == "float32":
+        vals = np.frombuffer(buf, dtype="<f4", count=count, offset=off
+                             ).astype(np.float32)
+    elif cfg.name == "int8":
+        vals = np.frombuffer(buf, dtype=np.int8, count=count, offset=off
+                             ).astype(np.float32) * scale
+    else:
+        vals = _unpack_int4(buf[off:], count) * scale
+    delta = np.zeros(m, np.float32)
+    delta[idx] = vals
+    base = np.zeros(m, np.float32) if ref is None \
+        else np.asarray(ref, np.float32).ravel().copy()
+    return base + delta
+
+
+def roundtrip_tolerance(vec: np.ndarray, cfg: CodecConfig) -> float:
+    """Worst-case |decode(encode(x)) − x| for this codec on this vector
+    (half a quantization step, plus float slack)."""
+    if cfg.name == "float32":
+        return 0.0
+    peak = float(np.max(np.abs(np.asarray(vec)))) if np.size(vec) else 0.0
+    return 0.5 * peak / _QMAX[cfg.name] + 1e-5

@@ -1,0 +1,399 @@
+"""The orchestrated federated round engine.
+
+Replaces the monolithic ``federation.run`` loop with a composition of the
+scheduler (who participates), a :class:`~repro.fl.runtime.strategy.Strategy`
+(what a round means), the wire codec (what actually crosses the network,
+metered byte-exact), and round-granular checkpointing.
+
+Round anatomy (sync mode)
+-------------------------
+1. ``scheduler.sample`` picks K-of-N clients (K static → the gather of the
+   sampled client sub-pytree keeps the round a single compiled program),
+   plus dropout and straggler draws.
+2. The K clients run ``strategy.client_step`` (vmapped).  Per-client rng
+   keys are ``split(round_key, N)[idx]``, so any participation pattern
+   draws from the same per-client key stream as the full-population
+   legacy loop — full participation reproduces it bit-for-bit.
+3. Each surviving upload is *encoded to real bytes* by the codec (and
+   decoded back before aggregation, so lossy codecs perturb the math
+   exactly as they would in deployment).  A sync barrier treats uploads
+   that miss the deadline (staleness > 0) like drops.
+4. Per-slot masked mean aggregation (slot −1 contributes nothing; empty
+   slots keep their previous value, per Alg. 2).
+5. Broadcast: each surviving participant applies its slot's new server
+   row; dropped/straggling clients keep their pre-round state.  Download
+   bytes are metered from the encoded broadcast frames.
+
+Async buffered mode
+-------------------
+Uploads land in a fixed-capacity buffer with masked validity instead of a
+barrier; an entry matures at round ``r + staleness``.  As soon as
+``async_min_uploads`` matured entries are available the engine aggregates
+them with staleness-discounted weights (``discount ** staleness``) — the
+FedAsync-style weighted mean — and invalidates the consumed entries.  On
+overflow the oldest entry is evicted (counted in the round report).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import clustering
+from repro.data.partition import ClientData
+from repro.fl import masked_collectives
+from repro.fl.runtime import checkpointing
+from repro.fl.runtime.codec import CodecConfig, decode, encode
+from repro.fl.runtime.scheduler import (Participation, Scheduler,
+                                        SchedulerConfig)
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    rounds: int = 10
+    scheduler: SchedulerConfig = SchedulerConfig()
+    codec: CodecConfig = CodecConfig()
+    aggregation: str = "sync"         # sync | async
+    async_min_uploads: int = 4        # B — aggregate once B uploads matured
+    buffer_capacity: int = 64         # fixed-capacity async upload buffer
+    staleness_discount: float = 0.5   # matured weight = discount**staleness
+    checkpoint_dir: str | None = None
+    checkpoint_every: int = 0         # 0 = never
+
+    def __post_init__(self):
+        if self.aggregation not in ("sync", "async"):
+            raise ValueError(f"unknown aggregation {self.aggregation!r}")
+
+
+class EngineState(NamedTuple):
+    round_idx: jnp.ndarray      # () int32 — next round to run
+    client_state: Any           # strategy pytree, leading axis = clients
+    server: jnp.ndarray         # (n_slots, d) float32
+    buf_vecs: jnp.ndarray       # (cap, d) float32   async upload buffer
+    buf_slots: jnp.ndarray      # (cap,) int32       (−1 = empty)
+    buf_ready: jnp.ndarray      # (cap,) int32       round the entry matures
+    buf_weight: jnp.ndarray     # (cap,) float32     staleness discount
+    buf_valid: jnp.ndarray      # (cap,) bool        masked validity
+    buf_seq: jnp.ndarray        # (cap,) int32       insertion order
+
+
+class RoundReport(NamedTuple):
+    round_idx: int
+    mean_accuracy: jnp.ndarray
+    per_client_accuracy: jnp.ndarray   # (n,)
+    assignment: jnp.ndarray            # (n, j) int32, −1 = not shared
+    cluster_counts: jnp.ndarray        # (n_slots,)
+    participation: Participation
+    upload_bytes: int                  # Σ len(frame) actually sent up
+    download_bytes_broadcast: int      # one frame per populated slot
+    download_bytes_per_client: int     # Σ over receiving participants
+    aggregated_uploads: int            # uploads folded into the server
+    buffered_uploads: int              # async: still waiting in the buffer
+    evicted_uploads: int               # async: lost to buffer overflow
+
+
+class Engine:
+    """Round orchestrator for one strategy over one client population."""
+
+    def __init__(self, strategy, data: ClientData, cfg: RuntimeConfig,
+                 client_weights: jnp.ndarray | None = None):
+        self.strategy = strategy
+        self.data = data
+        self.cfg = cfg
+        self.n = int(data.x_train.shape[0])
+        self.scheduler = Scheduler(cfg.scheduler, self.n, client_weights)
+        # uniform full participation samples idx = arange(N): skip the
+        # identity gather/scatter so the legacy-default path copies
+        # nothing (the dominant configuration for every benchmark)
+        self._identity = (self.scheduler.k == self.n
+                          and cfg.scheduler.sampling == "uniform")
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def init(self, key: jax.Array) -> EngineState:
+        cs, server = self.strategy.init(key, self.n)
+        cap, d = self.cfg.buffer_capacity, self.strategy.vec_dim
+        return EngineState(
+            round_idx=jnp.zeros((), jnp.int32),
+            client_state=cs, server=server,
+            buf_vecs=jnp.zeros((cap, d), jnp.float32),
+            buf_slots=jnp.full((cap,), -1, jnp.int32),
+            buf_ready=jnp.zeros((cap,), jnp.int32),
+            buf_weight=jnp.zeros((cap,), jnp.float32),
+            buf_valid=jnp.zeros((cap,), bool),
+            buf_seq=jnp.zeros((cap,), jnp.int32))
+
+    def run(self, key: jax.Array, state: EngineState | None = None,
+            rounds: int | None = None
+            ) -> tuple[EngineState, list[RoundReport]]:
+        """Run ``cfg.rounds`` rounds — or ``rounds``, e.g. the remainder
+        of an interrupted run — continuing from ``state`` if given (one
+        restored by :func:`checkpointing.restore`).
+
+        The key chain (``k_init, k_rounds = split(key)``; round r uses
+        ``fold_in(k_rounds, r)`` with the *absolute* round index) matches
+        the legacy ``federation.run`` driver, so both fresh runs and
+        checkpoint-resumed runs reproduce it exactly.
+        """
+        k_init, k_rounds = jax.random.split(key)
+        if state is None:
+            state = self.init(k_init)
+        reports: list[RoundReport] = []
+        start = int(state.round_idx)
+        n_rounds = self.cfg.rounds if rounds is None else rounds
+        for r in range(start, start + n_rounds):
+            state, rep = self.run_round(state, jax.random.fold_in(k_rounds, r))
+            reports.append(rep)
+            every = self.cfg.checkpoint_every
+            if self.cfg.checkpoint_dir and every and (r + 1) % every == 0:
+                checkpointing.save(self.cfg.checkpoint_dir, state)
+        return state, reports
+
+    # -- one round ---------------------------------------------------------
+
+    def run_round(self, state: EngineState, round_key: jax.Array
+                  ) -> tuple[EngineState, RoundReport]:
+        r = int(state.round_idx)
+        part = self.scheduler.sample(r, round_key)
+
+        # (2) local work on the K sampled clients
+        new_sub, vecs, slots = self._train(state, part.idx, round_key)
+
+        # (3) the wire: encode → meter → decode
+        sync = self.cfg.aggregation == "sync"
+        arrive = np.asarray(part.active)
+        if sync:
+            arrive = arrive & (np.asarray(part.staleness) == 0)
+        dec, up_bytes = self._wire_uplink(state.server, vecs, slots,
+                                          np.asarray(part.active))
+
+        # (4) aggregation
+        if sync:
+            server, counts, n_agg, n_buf, n_evict, buf = \
+                self._aggregate_sync(state, dec, slots, arrive)
+        else:
+            server, counts, n_agg, n_buf, n_evict, buf = \
+                self._aggregate_async(state, dec, slots, part, r)
+
+        # (5) broadcast + scatter + evaluate.  A slot row is only pushed
+        # to clients when it actually received an aggregate this round —
+        # otherwise (async round below the B threshold, or a never-fed
+        # cluster) the zero-initialized/stale server row would overwrite
+        # the client's freshly trained weights.
+        recv = jnp.asarray(arrive)
+        applied = jnp.where(
+            recv[:, None] & (slots >= 0)
+            & (counts[jnp.clip(slots, 0)] > 0), slots, -1)
+        rx_server, down_bc, down_pc = self._wire_downlink(
+            server, counts, arrive, applied)
+        new_state, acc, assignment = self._apply(
+            state, part.idx, recv, new_sub, applied, server, rx_server,
+            buf)
+
+        rep = RoundReport(
+            round_idx=r, mean_accuracy=acc.mean(),
+            per_client_accuracy=acc, assignment=assignment,
+            cluster_counts=counts, participation=part,
+            upload_bytes=up_bytes, download_bytes_broadcast=down_bc,
+            download_bytes_per_client=down_pc, aggregated_uploads=n_agg,
+            buffered_uploads=n_buf, evicted_uploads=n_evict)
+        return new_state, rep
+
+    # -- pieces ------------------------------------------------------------
+
+    def _train(self, state: EngineState, idx: jnp.ndarray,
+               round_key: jax.Array):
+        """Gather the sampled sub-pytree (static K) and run client_step."""
+        keys = jax.random.split(round_key, self.n)
+        if self._identity:
+            sub_cs, sub_data = state.client_state, self.data
+        else:
+            keys = keys[idx]
+            sub_cs = jax.tree.map(lambda a: a[idx], state.client_state)
+            sub_data = jax.tree.map(lambda a: a[idx], self.data)
+        new_sub, upload = jax.vmap(
+            self.strategy.client_step, in_axes=(0, None, 0, 0))(
+            sub_cs, state.server, sub_data, keys)
+        return new_sub, upload.vecs, upload.slots      # (K,j,d), (K,j)
+
+    def _wire_uplink(self, server, vecs, slots, active):
+        """Encode every surviving upload to real bytes; decode what the
+        aggregator would see.  Frame = slot id (<i4) + encoded vector.
+        Slot −1 ("nothing shared", e.g. below ``conf_threshold``) sends
+        no frame, so selective sharing really does cut metered bytes.
+
+        Sparse-delta mode encodes against the aggregator's current slot
+        row, assuming reference sync (the server mirrors what clients
+        hold); with sparse partial participation that overstates the
+        achievable delta — see ROADMAP follow-ups for per-client
+        reference tracking."""
+        cfg = self.cfg.codec
+        np_slots = np.asarray(slots)
+        if cfg.name == "float32" and not cfg.sparse:
+            # dense float32 encode→decode is a bit-exact identity (pinned
+            # by the codec tests), so skip the host round-trip and meter
+            # the frames arithmetically — len(frame) = 4 + 4·d exactly.
+            # Keeps the default-config round free of per-frame Python.
+            sent = int((np_slots[active] >= 0).sum())
+            d = int(vecs.shape[2])
+            return vecs, sent * (4 + 4 * d)
+        np_vecs = np.asarray(vecs, np.float32)
+        np_server = np.asarray(server, np.float32)
+        dec = np.zeros_like(np_vecs)
+        total = 0
+        for c in range(np_vecs.shape[0]):
+            if not active[c]:
+                continue                    # lost mid-round: nothing sent
+            for j in range(np_vecs.shape[1]):
+                s = int(np_slots[c, j])
+                if s < 0:
+                    continue                # nothing shared in this slot
+                ref = np_server[s] if cfg.sparse else None
+                frame = encode(np_vecs[c, j], cfg, ref=ref)
+                total += 4 + len(frame)
+                dec[c, j] = decode(frame, np_vecs.shape[2], cfg, ref=ref)
+        return jnp.asarray(dec), total
+
+    def _wire_downlink(self, server, counts, arrive, applied):
+        """Run the broadcast through the wire too: every slot row is
+        encoded (dense — delta coding is upload-only), metered, and
+        decoded, and it is the *decoded* rows clients apply — a lossy
+        codec degrades the downlink exactly as it would in deployment.
+        ``down_bc`` is one frame per populated slot; ``down_pc`` is the
+        per-client accounting over the frames receiving participants
+        actually apply (legacy §6.7 accounting)."""
+        dense = CodecConfig(self.cfg.codec.name, sparse=False)
+        np_counts = np.asarray(counts)
+        if dense.name == "float32":
+            # bit-exact identity wire: meter arithmetically, skip the
+            # per-row host encode/decode (frame = 4·d bytes exactly)
+            rx_arr = server
+            frame_len = [4 * int(server.shape[1])] * int(server.shape[0])
+        else:
+            np_server = np.asarray(server, np.float32)
+            rx = np.zeros_like(np_server)
+            frame_len = []
+            for s in range(np_server.shape[0]):
+                frame = encode(np_server[s], dense)
+                frame_len.append(len(frame))
+                rx[s] = decode(frame, np_server.shape[1], dense)
+            rx_arr = jnp.asarray(rx)
+        down_bc = sum(frame_len[s] for s in range(len(frame_len))
+                      if np_counts[s] > 0)
+        if self.strategy.downloads == "all_slots":
+            down_pc = int(arrive.sum()) * sum(frame_len)
+        else:
+            down_pc = sum(frame_len[s]
+                          for s in np.asarray(applied).ravel() if s >= 0)
+        return rx_arr, down_bc, down_pc
+
+    def _aggregate_sync(self, state, dec, slots, arrive):
+        """Barrier aggregation — the exact Alg. 2 masked mean (weights
+        all 1), bit-identical to ``clustering.aggregate``."""
+        masked = jnp.where(jnp.asarray(arrive)[:, None], slots, -1)
+        res = clustering.aggregate(
+            dec.reshape(-1, self.strategy.vec_dim), masked.reshape(-1),
+            self.strategy.n_slots, prev=state.server)
+        n_agg = int((masked >= 0).sum())
+        buf = (state.buf_vecs, state.buf_slots, state.buf_ready,
+               state.buf_weight, state.buf_valid, state.buf_seq)
+        return res.cluster_weights, res.counts, n_agg, 0, 0, buf
+
+    def _aggregate_async(self, state, dec, slots, part: Participation, r):
+        """Buffered aggregation: insert this round's uploads, then fold in
+        every matured entry once ``async_min_uploads`` are available."""
+        cfg = self.cfg
+        vecs = np.asarray(state.buf_vecs).copy()
+        bslots = np.asarray(state.buf_slots).copy()
+        ready = np.asarray(state.buf_ready).copy()
+        weight = np.asarray(state.buf_weight).copy()
+        valid = np.asarray(state.buf_valid).copy()
+        seq = np.asarray(state.buf_seq).copy()
+
+        np_dec = np.asarray(dec)
+        np_slots = np.asarray(slots)
+        active = np.asarray(part.active)
+        stale = np.asarray(part.staleness)
+        evicted = 0
+        next_seq = int(seq[valid].max()) + 1 if valid.any() else 0
+        for c in range(np_dec.shape[0]):
+            if not active[c]:
+                continue
+            for j in range(np_dec.shape[1]):
+                if np_slots[c, j] < 0:
+                    continue
+                free = np.nonzero(~valid)[0]
+                if free.size:
+                    i = free[0]
+                else:       # overflow: evict the oldest *insertion*
+                    occupied = np.where(valid, seq, np.iinfo(np.int32).max)
+                    i = int(np.argmin(occupied))
+                    evicted += 1
+                vecs[i] = np_dec[c, j]
+                bslots[i] = np_slots[c, j]
+                ready[i] = r + int(stale[c])
+                weight[i] = cfg.staleness_discount ** int(stale[c])
+                valid[i] = True
+                seq[i] = next_seq
+                next_seq += 1
+
+        # an entry whose staleness discount rounds to zero weight can never
+        # contribute to the weighted mean — treat it as consumed noise so
+        # its slot isn't wrongly marked populated (and then broadcast)
+        mature = valid & (ready <= r)
+        contrib = mature & (weight > 0.0)
+        n_mature = int(mature.sum())
+        if n_mature >= cfg.async_min_uploads:
+            w = jnp.asarray(np.where(contrib, weight, 0.0), jnp.float32)
+            s = jnp.asarray(np.where(contrib, bslots, -1), jnp.int32)
+            mean = masked_collectives.clustered_weighted_mean(
+                jnp.asarray(vecs), s, w, self.strategy.n_slots)
+            counts = jax.nn.one_hot(
+                s, self.strategy.n_slots, dtype=jnp.float32).sum(0)
+            server = jnp.where(counts[:, None] > 0, mean, state.server)
+            valid = valid & ~mature
+            n_agg = int(contrib.sum())
+        else:
+            server = state.server
+            counts = jnp.zeros((self.strategy.n_slots,), jnp.float32)
+            n_agg = 0
+        buf = (jnp.asarray(vecs), jnp.asarray(bslots), jnp.asarray(ready),
+               jnp.asarray(weight), jnp.asarray(valid), jnp.asarray(seq))
+        return server, counts, n_agg, int(valid.sum()), evicted, buf
+
+    def _apply(self, state: EngineState, idx, recv, new_sub, applied,
+               server, rx_server, buf):
+        """Broadcast the applied slots to surviving participants, revert
+        the rest, scatter the sub-pytree back, evaluate everyone.
+
+        Clients apply ``rx_server`` — the codec-roundtripped broadcast —
+        while the aggregator's own memory stays full-precision."""
+        bc_sub = jax.vmap(self.strategy.apply_broadcast,
+                          in_axes=(0, 0, None))(new_sub, applied, rx_server)
+        old_sub = state.client_state if self._identity else \
+            jax.tree.map(lambda a: a[idx], state.client_state)
+
+        def keep(new, old):
+            m = recv.reshape((-1,) + (1,) * (new.ndim - 1))
+            return jnp.where(m, new, old)
+
+        merged = jax.tree.map(keep, bc_sub, old_sub)
+        if self._identity:
+            cs = merged
+            assignment = applied
+        else:
+            cs = jax.tree.map(lambda a, s: a.at[idx].set(s),
+                              state.client_state, merged)
+            assignment = jnp.full((self.n, self.strategy.j_slots), -1,
+                                  jnp.int32).at[idx].set(applied)
+
+        acc = jax.vmap(self.strategy.evaluate)(
+            cs, self.data.x_test, self.data.y_test)
+        new_state = EngineState(
+            round_idx=state.round_idx + 1, client_state=cs, server=server,
+            buf_vecs=buf[0], buf_slots=buf[1], buf_ready=buf[2],
+            buf_weight=buf[3], buf_valid=buf[4], buf_seq=buf[5])
+        return new_state, acc, assignment

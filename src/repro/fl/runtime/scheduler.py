@@ -1,0 +1,109 @@
+"""Partial-participation scheduling: who trains, who drops, who straggles.
+
+Per round the scheduler produces a :class:`Participation` — K sampled
+client indices (K static, so the engine's gather of the client sub-pytree
+stays one compiled program), a dropout-survival mask, and per-client
+staleness (rounds of upload delay for stragglers).
+
+Sampling policies:
+
+* ``uniform``     — K-of-N without replacement.  Full participation
+  (K == N) short-circuits to ``arange(N)`` so the default configuration
+  reproduces the legacy full-population ordering bit-for-bit.
+* ``weighted``    — without replacement, proportional to caller-supplied
+  client weights (e.g. dataset sizes).
+* ``round_robin`` — deterministic sliding window ``(r·K + i) mod N``:
+  the window cycles through the population, and when K divides N every
+  client participates exactly once per N/K rounds (otherwise coverage
+  is still cyclic but windows can wrap and revisit early clients).
+
+Dropout removes a selected client's upload (the client crashed or lost
+connectivity mid-round: its trained state and upload never reach the
+aggregator, and it receives no broadcast).  Stragglers survive but their
+upload arrives ``staleness ∈ [1, max_staleness]`` rounds late — the sync
+engine treats a missed barrier as a drop; the async engine buffers the
+upload and applies it, staleness-discounted, when it matures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+SAMPLING = ("uniform", "weighted", "round_robin")
+
+# fold_in tags: keep scheduler randomness on a stream disjoint from the
+# per-client training keys (which consume the raw round key).
+_TAG_SELECT, _TAG_DROP, _TAG_STRAGGLE = 0x5C4ED, 0xD120F, 0x57A1E
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    participation: float = 1.0   # K = max(1, round(p·N)) clients per round
+    sampling: str = "uniform"    # uniform | weighted | round_robin
+    dropout: float = 0.0         # P(selected client's upload is lost)
+    straggler: float = 0.0       # P(surviving upload arrives late)
+    max_staleness: int = 2       # stragglers delay ∈ [1, max_staleness]
+
+    def __post_init__(self):
+        if self.sampling not in SAMPLING:
+            raise ValueError(f"unknown sampling {self.sampling!r}")
+        if not 0.0 < self.participation <= 1.0:
+            raise ValueError("participation must be in (0, 1]")
+
+
+class Participation(NamedTuple):
+    idx: jnp.ndarray        # (K,) int32 — sampled client ids
+    active: jnp.ndarray     # (K,) bool  — survived dropout
+    staleness: jnp.ndarray  # (K,) int32 — 0 = on time, s ≥ 1 = straggler
+
+
+class Scheduler:
+    def __init__(self, cfg: SchedulerConfig, n_clients: int,
+                 weights: jnp.ndarray | None = None):
+        self.cfg = cfg
+        self.n = n_clients
+        self.k = max(1, int(round(cfg.participation * n_clients)))
+        if cfg.sampling == "weighted":
+            w = jnp.ones(n_clients) if weights is None \
+                else jnp.asarray(weights, jnp.float32)
+            self.p = w / w.sum()
+        else:
+            self.p = None
+
+    def sample(self, round_idx: int, key: jax.Array) -> Participation:
+        """Draw this round's participation from the round key.
+
+        Uses fold_in tags so the engine can hand the *same* round key to
+        per-client training without the scheduler perturbing it.
+        """
+        cfg = self.cfg
+        k_sel = jax.random.fold_in(key, _TAG_SELECT)
+        if cfg.sampling == "round_robin":
+            idx = (round_idx * self.k + jnp.arange(self.k)) % self.n
+        elif self.k == self.n and cfg.sampling == "uniform":
+            idx = jnp.arange(self.n)        # legacy full-population order
+        else:
+            idx = jax.random.choice(k_sel, self.n, (self.k,),
+                                    replace=False, p=self.p)
+        idx = idx.astype(jnp.int32)
+
+        if cfg.dropout > 0.0:
+            active = jax.random.bernoulli(
+                jax.random.fold_in(key, _TAG_DROP),
+                1.0 - cfg.dropout, (self.k,))
+        else:
+            active = jnp.ones((self.k,), bool)
+
+        if cfg.straggler > 0.0 and cfg.max_staleness > 0:
+            k_str = jax.random.fold_in(key, _TAG_STRAGGLE)
+            k_who, k_lag = jax.random.split(k_str)
+            late = jax.random.bernoulli(k_who, cfg.straggler, (self.k,))
+            lag = jax.random.randint(k_lag, (self.k,), 1,
+                                     cfg.max_staleness + 1)
+            staleness = jnp.where(late, lag, 0).astype(jnp.int32)
+        else:
+            staleness = jnp.zeros((self.k,), jnp.int32)
+        return Participation(idx, active, staleness)

@@ -1,0 +1,293 @@
+"""The ``Strategy`` protocol: every federated method as one interface.
+
+A strategy reduces a federated method to four pieces the engine can
+orchestrate uniformly:
+
+* ``init(key, n_clients)``        → (stacked client state, server matrix)
+* ``client_step(cs, server, d, key)`` → (new client state, :class:`Upload`)
+* ``apply_broadcast(cs, slots, server)`` → new client state
+* ``evaluate(cs, x, y)``          → scalar accuracy
+
+The unifying trick is the *upload*: every method's round contribution is
+expressed as ``j`` flat float32 vectors, each tagged with a server slot
+id (slot = cluster).  TPFL uploads its ``top_classes`` clause-weight
+vectors tagged by class; FedAvg/FedProx upload the flattened MLP tagged
+slot 0; IFCA uploads the flattened MLP tagged with the loss-minimizing
+cluster.  Aggregation is then always a (masked, optionally
+staleness-weighted) per-slot mean — the same masked reduction
+:mod:`repro.fl.masked_collectives` lowers to a single collective on a
+mesh — and the engine's scheduler/codec/async machinery applies to every
+method unchanged.  Slot id −1 means "nothing shared in this slot" and is
+ignored by aggregation and broadcast.
+
+``TPFLStrategy.client_step`` / ``apply_broadcast`` are *the* Alg. 1 /
+Phase-D implementations — ``repro.core.federation`` vmaps them, so the
+legacy driver and the runtime engine share one source of truth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mlp, tm
+from repro.data.partition import ClientData
+
+
+class Upload(NamedTuple):
+    vecs: jnp.ndarray    # (j, d) float32 — what goes on the wire
+    slots: jnp.ndarray   # (j,)   int32   — target server slot, −1 = none
+
+
+@runtime_checkable
+class Strategy(Protocol):
+    n_slots: int          # rows in the server matrix
+    vec_dim: int          # d — length of one uploaded vector
+    j_slots: int          # uploads per client per round
+    downloads: str        # "assigned" (own slot) | "all_slots" (e.g. IFCA)
+
+    def init(self, key: jax.Array, n_clients: int): ...
+    def client_step(self, cs, server: jnp.ndarray, d: ClientData,
+                    key: jax.Array): ...
+    def apply_broadcast(self, cs, slots: jnp.ndarray,
+                        server: jnp.ndarray): ...
+    def evaluate(self, cs, x: jnp.ndarray, y: jnp.ndarray): ...
+
+
+# ---------------------------------------------------------------------------
+# TPFL (paper Alg. 1 + Phase D)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TPFLStrategy:
+    """Confidence-clustered selective sharing on the Tsetlin Machine."""
+
+    tm_cfg: tm.TMConfig
+    local_epochs: int = 10
+    top_classes: int = 1                 # j — §7 multi-cluster extension
+    conf_threshold: float | None = None  # §7 confidence gate (−1 below)
+    weighted_confidence: bool = False    # Alg. 1 uses unweighted margins
+
+    downloads: str = dataclasses.field(default="assigned", init=False)
+
+    @property
+    def n_slots(self) -> int:
+        return self.tm_cfg.n_classes
+
+    @property
+    def vec_dim(self) -> int:
+        return self.tm_cfg.n_clauses
+
+    @property
+    def j_slots(self) -> int:
+        return self.top_classes
+
+    def init(self, key: jax.Array, n_clients: int):
+        keys = jax.random.split(key, n_clients)
+        params = jax.vmap(lambda k: tm.init_params(self.tm_cfg, k))(keys)
+        server = jnp.zeros((self.n_slots, self.vec_dim), jnp.float32)
+        return params, server
+
+    def client_step(self, cs: tm.TMParams, server: jnp.ndarray,
+                    d: ClientData, key: jax.Array):
+        """Alg. 1: local TM training, per-class confidence, selective
+        upload of the ``top_classes`` most-confident weight vectors."""
+        del server  # TPFL clients never read global state before training
+        cfg = self.tm_cfg
+        params = tm.train(cs, d.x_train, d.y_train, key, cfg,
+                          epochs=self.local_epochs)
+        conf = tm.confidence_scores(params, d.x_conf, cfg,
+                                    weighted=self.weighted_confidence)
+        vals, c_top = jax.lax.top_k(conf, self.top_classes)       # (j,)
+        if self.conf_threshold is not None:
+            c_top = jnp.where(vals >= self.conf_threshold, c_top, -1)
+        vecs = params.weights[jnp.clip(c_top, 0)].astype(jnp.float32)
+        return params, Upload(vecs, c_top.astype(jnp.int32))
+
+    @staticmethod
+    def apply_broadcast(cs: tm.TMParams, slots: jnp.ndarray,
+                        server: jnp.ndarray) -> tm.TMParams:
+        """Phase D: overwrite each shared class with its cluster mean.
+
+        A staticmethod so ``federation._phase_d`` can call it without
+        materializing a strategy (it needs no config)."""
+        new_w = jnp.round(server[jnp.clip(slots, 0)]).astype(jnp.int32)
+
+        def one(wc, c_nw):
+            c, nwv = c_nw
+            return jnp.where(c >= 0, wc.at[c].set(nwv), wc), None
+
+        wc, _ = jax.lax.scan(one, cs.weights, (slots, new_w))
+        return cs._replace(weights=wc)
+
+    def evaluate(self, cs: tm.TMParams, x: jnp.ndarray,
+                 y: jnp.ndarray) -> jnp.ndarray:
+        return tm.accuracy(cs, x, y, self.tm_cfg)
+
+
+# ---------------------------------------------------------------------------
+# MLP flatten/unflatten (FedAvg / FedProx / IFCA wire format)
+# ---------------------------------------------------------------------------
+
+def _mlp_layout(n_features: int, n_hidden: int, n_classes: int):
+    return (("w1", (n_features, n_hidden)), ("b1", (n_hidden,)),
+            ("w2", (n_hidden, n_classes)), ("b2", (n_classes,)))
+
+
+def _flatten_mlp(params: mlp.Params, layout) -> jnp.ndarray:
+    return jnp.concatenate([params[k].astype(jnp.float32).ravel()
+                            for k, _ in layout])
+
+
+def _unflatten_mlp(vec: jnp.ndarray, layout) -> mlp.Params:
+    out, off = {}, 0
+    for k, shape in layout:
+        size = 1
+        for s in shape:
+            size *= s
+        out[k] = vec[off:off + size].reshape(shape)
+        off += size
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAvgStrategy:
+    """FedAvg (and FedProx with ``prox_mu > 0``): one global slot."""
+
+    n_features: int
+    n_hidden: int
+    n_classes: int
+    local_epochs: int = 10
+    batch: int = 32
+    lr: float = 0.05
+    prox_mu: float = 0.0          # > 0 → FedProx proximal objective
+
+    n_slots: int = dataclasses.field(default=1, init=False)
+    j_slots: int = dataclasses.field(default=1, init=False)
+    downloads: str = dataclasses.field(default="assigned", init=False)
+
+    @property
+    def _layout(self):
+        return _mlp_layout(self.n_features, self.n_hidden, self.n_classes)
+
+    @property
+    def vec_dim(self) -> int:
+        total = 0
+        for _, shape in self._layout:
+            size = 1
+            for s in shape:
+                size *= s
+            total += size
+        return total
+
+    def init(self, key: jax.Array, n_clients: int):
+        g = mlp.init(key, self.n_features, self.n_hidden, self.n_classes)
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_clients,) + a.shape), g)
+        return stacked, _flatten_mlp(g, self._layout)[None, :]
+
+    def client_step(self, cs: mlp.Params, server: jnp.ndarray,
+                    d: ClientData, key: jax.Array):
+        start = _unflatten_mlp(server[0], self._layout)
+        ref = start if self.prox_mu > 0 else None
+        p = mlp.local_train(start, d.x_train, d.y_train, key,
+                            epochs=self.local_epochs, batch=self.batch,
+                            lr=self.lr, prox_mu=self.prox_mu, prox_ref=ref)
+        return p, Upload(_flatten_mlp(p, self._layout)[None, :],
+                         jnp.zeros((1,), jnp.int32))
+
+    def apply_broadcast(self, cs: mlp.Params, slots: jnp.ndarray,
+                        server: jnp.ndarray) -> mlp.Params:
+        new = _unflatten_mlp(server[0], self._layout)
+        # slot −1 = nothing was aggregated for this client's round: keep
+        # the locally trained model instead of an un-updated global
+        return jax.tree.map(
+            lambda n, o: jnp.where(slots[0] >= 0, n, o), new, cs)
+
+    def evaluate(self, cs: mlp.Params, x: jnp.ndarray,
+                 y: jnp.ndarray) -> jnp.ndarray:
+        return mlp.accuracy(cs, x, y)
+
+
+@dataclasses.dataclass(frozen=True)
+class IFCAStrategy:
+    """IFCA: k global models; clients pick by lowest local loss."""
+
+    n_features: int
+    n_hidden: int
+    n_classes: int
+    k: int = 10
+    local_epochs: int = 10
+    batch: int = 32
+    lr: float = 0.05
+
+    j_slots: int = dataclasses.field(default=1, init=False)
+    downloads: str = dataclasses.field(default="all_slots", init=False)
+
+    @property
+    def n_slots(self) -> int:
+        return self.k
+
+    @property
+    def _layout(self):
+        return _mlp_layout(self.n_features, self.n_hidden, self.n_classes)
+
+    @property
+    def vec_dim(self) -> int:
+        return FedAvgStrategy.vec_dim.fget(self)  # same MLP layout
+
+    def init(self, key: jax.Array, n_clients: int):
+        ks = jax.random.split(key, self.k)
+        server = jnp.stack([
+            _flatten_mlp(mlp.init(kk, self.n_features, self.n_hidden,
+                                  self.n_classes), self._layout)
+            for kk in ks])
+        g = _unflatten_mlp(server[0], self._layout)
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_clients,) + a.shape), g)
+        return stacked, server
+
+    def client_step(self, cs: mlp.Params, server: jnp.ndarray,
+                    d: ClientData, key: jax.Array):
+        def loss_of(vec):
+            return mlp.loss_fn(_unflatten_mlp(vec, self._layout),
+                               d.x_train, d.y_train)
+
+        choice = jnp.argmin(jax.vmap(loss_of)(server))
+        start = _unflatten_mlp(server[choice], self._layout)
+        p = mlp.local_train(start, d.x_train, d.y_train, key,
+                            epochs=self.local_epochs, batch=self.batch,
+                            lr=self.lr)
+        return p, Upload(_flatten_mlp(p, self._layout)[None, :],
+                         choice.astype(jnp.int32)[None])
+
+    def apply_broadcast(self, cs: mlp.Params, slots: jnp.ndarray,
+                        server: jnp.ndarray) -> mlp.Params:
+        new = _unflatten_mlp(server[jnp.clip(slots[0], 0)], self._layout)
+        return jax.tree.map(
+            lambda n, o: jnp.where(slots[0] >= 0, n, o), new, cs)
+
+    def evaluate(self, cs: mlp.Params, x: jnp.ndarray,
+                 y: jnp.ndarray) -> jnp.ndarray:
+        return mlp.accuracy(cs, x, y)
+
+
+def build_baseline_strategy(name: str, *, n_features: int, n_classes: int,
+                            n_hidden: int = 128, local_epochs: int = 10,
+                            batch: int = 32, lr: float = 0.05,
+                            prox_mu: float = 0.1,
+                            ifca_k: int | None = None):
+    """The one name→Strategy factory for the DL baselines (shared by the
+    CLI and the table-5 benchmark so their hyperparameters can't drift)."""
+    kw = dict(n_features=n_features, n_classes=n_classes,
+              n_hidden=n_hidden, local_epochs=local_epochs,
+              batch=batch, lr=lr)
+    if name == "fedavg":
+        return FedAvgStrategy(**kw)
+    if name == "fedprox":
+        return FedAvgStrategy(prox_mu=prox_mu, **kw)
+    if name == "ifca":
+        return IFCAStrategy(k=ifca_k or min(10, n_classes), **kw)
+    raise ValueError(f"unknown baseline strategy {name!r}")

@@ -25,6 +25,7 @@ import jax           # noqa: E402
 
 from repro.configs import registry                      # noqa: E402
 from repro.launch import hlo_analysis, steps            # noqa: E402
+from repro.sharding import compat                        # noqa: E402
 from repro.launch.mesh import (HBM_BW, ICI_BW,          # noqa: E402
                                PEAK_FLOPS_BF16,
                                make_production_mesh)
@@ -47,7 +48,7 @@ def dryrun(arch: str, shape_name: str, multi_pod: bool = False,
     t0 = time.time()
     ins = steps.input_specs(cfg, shape, mesh, opt_cfg)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         if shape.kind == "train":
             step = steps.make_train_step(cfg, opt_cfg)
             lowered = jax.jit(step).lower(ins["params"], ins["opt_state"],

@@ -21,6 +21,7 @@ import jax       # noqa: E402
 from repro.core import federation, tm                     # noqa: E402
 from repro.launch import fed_train, hlo_analysis          # noqa: E402
 from repro.launch.mesh import ICI_BW, make_production_mesh  # noqa: E402
+from repro.sharding import compat  # noqa: E402
 
 ARTIFACTS = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts"
 
@@ -37,7 +38,7 @@ def run(multi_pod: bool = False, n_clients: int = 256,
 
     out = {"mesh": "2x16x16" if multi_pod else "16x16",
            "n_clients": n_clients, "clauses": clauses}
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         for name, build, args in (
             ("tpfl", fed_train.make_tpfl_round(tm_cfg, fed_cfg),
              (params, cw, data, key)),

@@ -1,4 +1,5 @@
-"""Distributed TPFL: one federated round as a single pjit program.
+"""Distributed TPFL: one federated round as a single pjit program, plus
+the CLI front-end of the federated runtime.
 
 Clients are a stacked `TMParams` pytree sharded over the mesh's FSDP
 ("data"/"pod") axes — each shard trains its slice of the client
@@ -8,6 +9,16 @@ round (full-state tree mean, no clustering) is provided as the
 communication baseline: the collective-bytes delta between the two
 lowered programs is the paper's Table-4/5 claim, measured in the HLO
 (EXPERIMENTS.md §Perf).
+
+CLI — run any federation scenario through `repro.fl.runtime`:
+
+  PYTHONPATH=src python -m repro.launch.fed_train \\
+      --participation 0.1 --dropout 0.2 --codec int8
+
+reports per-round mean accuracy plus byte-exact upload/download totals
+(metered from the actual encoded wire buffers).  Default knobs (full
+participation, sync, float32) reproduce the legacy ``federation.run``
+metrics exactly.
 """
 from __future__ import annotations
 
@@ -107,3 +118,146 @@ def abstract_fed_inputs(tm_cfg: tm.TMConfig, fed_cfg: federation.FedConfig,
         mixtures=sds((n, C), jnp.float32, P(b, None)))
     key = sds((2,), jnp.uint32, P(None))
     return params, cw, data, key
+
+
+# ---------------------------------------------------------------------------
+# CLI: scenario runner on the federated runtime
+# ---------------------------------------------------------------------------
+
+def _build_strategy(name: str, tm_cfg: tm.TMConfig,
+                    fed_cfg: federation.FedConfig, dcfg):
+    from repro.fl.runtime.strategy import build_baseline_strategy
+    if name == "tpfl":
+        return federation._strategy(tm_cfg, fed_cfg)
+    return build_baseline_strategy(
+        name, n_features=dcfg.n_features, n_classes=dcfg.n_classes,
+        local_epochs=fed_cfg.local_epochs)
+
+
+def main(argv: list[str] | None = None) -> dict:
+    import argparse
+
+    from repro.data import partition, synthetic
+    from repro.fl.runtime import (CodecConfig, Engine, RuntimeConfig,
+                                  SchedulerConfig, checkpointing)
+
+    ap = argparse.ArgumentParser(
+        description="Federated runtime scenario runner")
+    ap.add_argument("--strategy", default="tpfl",
+                    choices=("tpfl", "fedavg", "fedprox", "ifca"))
+    ap.add_argument("--dataset", default="synthmnist",
+                    choices=synthetic.DATASETS)
+    ap.add_argument("--experiment", type=int, default=5,
+                    help="paper setup 1..5 (fraction of non-IID clients)")
+    ap.add_argument("--clients", type=int, default=20)
+    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--local-epochs", type=int, default=2)
+    ap.add_argument("--clauses", type=int, default=48)
+    ap.add_argument("--seed", type=int, default=0)
+    # scheduler knobs
+    ap.add_argument("--participation", type=float, default=1.0)
+    ap.add_argument("--sampling", default="uniform",
+                    choices=("uniform", "weighted", "round_robin"))
+    ap.add_argument("--dropout", type=float, default=0.0)
+    ap.add_argument("--straggler", type=float, default=0.0)
+    ap.add_argument("--max-staleness", type=int, default=2)
+    # wire codec
+    ap.add_argument("--codec", default="float32",
+                    choices=("float32", "int8", "int4"))
+    ap.add_argument("--sparse", action="store_true",
+                    help="sparse delta encoding of uploads")
+    # aggregation mode
+    ap.add_argument("--mode", default="sync", choices=("sync", "async"))
+    ap.add_argument("--async-min-uploads", type=int, default=4)
+    ap.add_argument("--buffer-capacity", type=int, default=64)
+    ap.add_argument("--staleness-discount", type=float, default=0.5)
+    # checkpointing
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args(argv)
+
+    key = jax.random.PRNGKey(args.seed)
+    x, y, dcfg = synthetic.make_dataset(args.dataset, 6000,
+                                        jax.random.PRNGKey(args.seed),
+                                        side=12)
+    data = partition.partition(
+        x, y, dcfg.n_classes, n_clients=args.clients,
+        experiment=args.experiment,
+        key=jax.random.PRNGKey(args.seed + 1),
+        n_train=80, n_test=40, n_conf=40)
+
+    tm_cfg = tm.TMConfig(n_classes=dcfg.n_classes, n_clauses=args.clauses,
+                         n_features=dcfg.n_features, n_states=63,
+                         s=5.0, T=40)
+    fed_cfg = federation.FedConfig(n_clients=args.clients,
+                                   rounds=args.rounds,
+                                   local_epochs=args.local_epochs)
+    rt_cfg = RuntimeConfig(
+        rounds=args.rounds,
+        scheduler=SchedulerConfig(
+            participation=args.participation, sampling=args.sampling,
+            dropout=args.dropout, straggler=args.straggler,
+            max_staleness=args.max_staleness),
+        codec=CodecConfig(args.codec, sparse=args.sparse),
+        aggregation=args.mode,
+        async_min_uploads=args.async_min_uploads,
+        buffer_capacity=args.buffer_capacity,
+        staleness_discount=args.staleness_discount,
+        checkpoint_dir=args.ckpt_dir, checkpoint_every=args.ckpt_every)
+
+    strategy = _build_strategy(args.strategy, tm_cfg, fed_cfg, dcfg)
+    engine = Engine(strategy, data, rt_cfg)
+
+    state, remaining = None, None
+    if args.resume and args.ckpt_dir:
+        latest = checkpointing.latest(args.ckpt_dir)
+        if latest is not None:
+            state = checkpointing.restore(
+                latest, engine.init(jax.random.PRNGKey(args.seed)))
+            # complete the originally requested total, don't extend it
+            remaining = max(0, args.rounds - int(state.round_idx))
+            print(f"resumed from {latest} "
+                  f"({remaining} of {args.rounds} rounds remaining)",
+                  flush=True)
+            if remaining == 0:
+                print("nothing to do: run already complete", flush=True)
+                return {"final_accuracy": None, "upload_bytes": 0,
+                        "download_bytes_broadcast": 0,
+                        "download_bytes_per_client": 0}
+
+    print(f"{args.strategy} on {args.dataset} exp{args.experiment}: "
+          f"{args.clients} clients, K={engine.scheduler.k}/round, "
+          f"dropout={args.dropout}, codec={args.codec}"
+          f"{'+sparse' if args.sparse else ''}, mode={args.mode}",
+          flush=True)
+    state, reports = engine.run(key, state=state, rounds=remaining)
+
+    up = down_bc = down_pc = 0
+    for rep in reports:
+        up += rep.upload_bytes
+        down_bc += rep.download_bytes_broadcast
+        down_pc += rep.download_bytes_per_client
+        extra = ""
+        if args.mode == "async":
+            extra = (f" agg={rep.aggregated_uploads}"
+                     f" buf={rep.buffered_uploads}"
+                     f" evict={rep.evicted_uploads}")
+        print(f"round {rep.round_idx:3d}: "
+              f"acc={float(rep.mean_accuracy):.4f} "
+              f"up={rep.upload_bytes}B "
+              f"down_bc={rep.download_bytes_broadcast}B "
+              f"down_pc={rep.download_bytes_per_client}B "
+              f"active={int(jnp.sum(rep.participation.active))}"
+              f"/{engine.scheduler.k}{extra}", flush=True)
+    print(f"totals: upload={up}B ({up/1e6:.4f}MB) "
+          f"download_broadcast={down_bc}B ({down_bc/1e6:.4f}MB) "
+          f"download_per_client={down_pc}B ({down_pc/1e6:.4f}MB)",
+          flush=True)
+    return {"final_accuracy": float(reports[-1].mean_accuracy),
+            "upload_bytes": up, "download_bytes_broadcast": down_bc,
+            "download_bytes_per_client": down_pc}
+
+
+if __name__ == "__main__":
+    main()

@@ -10,29 +10,26 @@ from __future__ import annotations
 import jax
 from jax.sharding import Mesh
 
+from repro.sharding import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    from jax.sharding import AxisType
-    auto = (AxisType.Auto,) * len(axes)
     n = 1
     for s in shape:
         n *= s
     devices = jax.devices()
     if len(devices) > n:       # dry-run forces 512; single-pod uses 256
         import numpy as np
-        return Mesh(np.asarray(devices[:n]).reshape(shape), axes,
-                    axis_types=auto)
-    return jax.make_mesh(shape, axes, axis_types=auto)
+        return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh() -> Mesh:
     """Single-device mesh for CPU smoke runs (same axis names)."""
-    from jax.sharding import AxisType
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return compat.make_mesh((1, 1), ("data", "model"))
 
 
 # TPU v5e hardware constants (per chip) — §Roofline sources.

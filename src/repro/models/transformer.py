@@ -150,7 +150,8 @@ def _constrain_logits(logits: jnp.ndarray) -> jnp.ndarray:
     Without this SPMD sometimes materializes the *full-batch* logits per
     device at the unembed/loss boundary (§Perf: 2×12.9 GB/device/step
     measured on granite-moe train_4k)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.sharding import compat
+    mesh = compat.get_abstract_mesh()
     names = getattr(mesh, "axis_names", ())
     if mesh is None or "model" not in names:
         return logits
@@ -170,7 +171,8 @@ def _constrain_batch_only(x: jnp.ndarray) -> jnp.ndarray:
     """Pin (B, T, d) activations to batch-over-FSDP, d replicated — stops
     SPMD from resharding the unembed input to a d-over-data layout whose
     contraction partial-sums all-reduce the full-batch logits."""
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.sharding import compat
+    mesh = compat.get_abstract_mesh()
     names = getattr(mesh, "axis_names", ())
     if mesh is None or "model" not in names:
         return x
@@ -244,7 +246,8 @@ def _sharded_ce(params: Params, x: jnp.ndarray, labels: jnp.ndarray,
     embeddings / non-dividing shapes) — caller falls back to the
     auto-sharded path.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.sharding import compat
+    mesh = compat.get_abstract_mesh()
     names = getattr(mesh, "axis_names", ())
     if mesh is None or "model" not in names or cfg.tie_embeddings \
             or "lm_head" not in params:

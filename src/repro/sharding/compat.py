@@ -1,0 +1,69 @@
+"""Version-compat shims for jax mesh APIs.
+
+The repo targets the current jax mesh API (`jax.sharding.get_abstract_mesh`,
+`jax.set_mesh`); older jax (≤0.4.x) spells these differently or not at all.
+All mesh queries in model/launch code go through this module so a version
+bump in either direction is a one-file change.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def get_abstract_mesh():
+    """The mesh jit is currently tracing under, or None if unavailable.
+
+    Callers treat None (and a mesh without the axis they want) as "no
+    constraint" — so on jax versions with no abstract-mesh tracking the
+    sharding hints simply become no-ops instead of crashing.
+    """
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is None:
+        try:  # jax 0.4.x kept it private
+            from jax._src import mesh as _mesh_lib
+            fn = _mesh_lib.get_abstract_mesh
+        except (ImportError, AttributeError):
+            return None
+    # deliberately no try around the call: the sharding constraints this
+    # gates are load-bearing (§Perf), so an API change should crash
+    # loudly rather than silently disable them
+    mesh = fn()
+    # older jax returns an empty sentinel (no axis_names) when no mesh is set
+    if not getattr(mesh, "axis_names", None):
+        return None
+    return mesh
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh(shape, axes, axis_types=Auto)`` with fallbacks for
+    jax versions predating ``AxisType`` (where every axis is Auto anyway)
+    or ``jax.make_mesh`` itself."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    kwargs = {}
+    if axis_type is not None:
+        kwargs["axis_types"] = (axis_type.Auto,) * len(axes)
+    fn = getattr(jax, "make_mesh", None)
+    if fn is not None:
+        try:
+            return fn(shape, axes, **kwargs)
+        except TypeError:       # older signature without axis_types
+            return fn(shape, axes)
+    import numpy as np
+    from jax.sharding import Mesh
+    n = 1
+    for s in shape:
+        n *= s
+    return Mesh(np.asarray(jax.devices()[:n]).reshape(shape), axes)
+
+
+def set_mesh(mesh):
+    """Context manager equivalent of ``jax.set_mesh(mesh)``.
+
+    On jax without ``set_mesh``, a concrete ``Mesh`` is itself the context
+    manager that installs the thread-local physical mesh — same effect for
+    the lower/compile paths used here.
+    """
+    fn = getattr(jax, "set_mesh", None)
+    if fn is not None:
+        return fn(mesh)
+    return mesh
