@@ -23,7 +23,11 @@ from benchmarks import (ablation_multiclass, common, convergence,  # noqa: E402
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--mesh", action="store_true",
+                    help="run table4/table5 federations shard-mapped "
+                         "over a clients mesh of all visible devices")
     args = ap.parse_args()
+    backend = "shardmap" if args.mesh else "inprocess"
 
     scale = common.Scale(n_clients=10, n_train=40, n_test=20, n_conf=20,
                          rounds=2, local_epochs=1) if args.quick \
@@ -34,12 +38,12 @@ def main() -> None:
         print(row)
 
     t0 = time.time()
-    rows4 = table4_tpfl.run(scale=scale)
+    rows4 = table4_tpfl.run(scale=scale, backend=backend)
     print(f"table4_tpfl,{(time.time()-t0)*1e6/max(len(rows4),1):.0f},"
           f"rows={len(rows4)}")
 
     t0 = time.time()
-    rows5 = table5_comparison.run(scale=scale)
+    rows5 = table5_comparison.run(scale=scale, backend=backend)
     best = max(rows5, key=lambda r: r["accuracy"])
     print(f"table5_comparison,{(time.time()-t0)*1e6/max(len(rows5),1):.0f},"
           f"best={best['method']}:{best['accuracy']}")

@@ -26,7 +26,11 @@ ART = Path(__file__).resolve().parent / "artifacts"
 
 def run(datasets=("synthmnist", "synthfashion"),
         experiments=(1, 3, 5), scale: common.Scale | None = None,
-        seed: int = 0, codecs=("float32", "int8")) -> list[dict]:
+        seed: int = 0, codecs=("float32", "int8"),
+        backend: str = "inprocess") -> list[dict]:
+    """``backend="shardmap"`` runs every cell's sync round shard-mapped
+    over a ``clients`` mesh of all visible devices — same numbers
+    (conformance-pinned bit-exact), mesh execution path."""
     scale = scale or common.Scale()
     rows = []
     for name in datasets:
@@ -37,7 +41,8 @@ def run(datasets=("synthmnist", "synthfashion"),
                 n_clients=scale.n_clients, rounds=scale.rounds,
                 local_epochs=scale.local_epochs)
             for codec in codecs:
-                rt_cfg = RuntimeConfig(codec=CodecConfig(codec))
+                rt_cfg = RuntimeConfig(codec=CodecConfig(codec),
+                                       backend=backend)
                 t0 = time.time()
                 _, hist = federation.run(data, tm_cfg, fed_cfg,
                                          jax.random.PRNGKey(seed + 7),
@@ -45,6 +50,7 @@ def run(datasets=("synthmnist", "synthfashion"),
                 up, down = federation.total_comm_mb(hist)
                 rows.append({
                     "dataset": name, "experiment": exp, "codec": codec,
+                    "backend": backend,
                     "accuracy": round(float(hist[-1].mean_accuracy), 4),
                     "acc_per_round": [round(float(h.mean_accuracy), 4)
                                       for h in hist],

@@ -24,7 +24,8 @@ from repro.fl.runtime.strategy import build_baseline_strategy
 ART = Path(__file__).resolve().parent / "artifacts"
 
 
-def _run_engine_baseline(name: str, data, dcfg, bcfg, scale, key) -> tuple:
+def _run_engine_baseline(name: str, data, dcfg, bcfg, scale, key,
+                         backend: str = "inprocess") -> tuple:
     # hyperparameters come from the same BaselineConfig as the FLIS/FedTM
     # reference rows, so Table 5 stays apples-to-apples
     strat = build_baseline_strategy(
@@ -32,7 +33,8 @@ def _run_engine_baseline(name: str, data, dcfg, bcfg, scale, key) -> tuple:
         n_hidden=bcfg.n_hidden, local_epochs=bcfg.local_epochs,
         batch=bcfg.batch, lr=bcfg.lr, prox_mu=bcfg.prox_mu,
         ifca_k=bcfg.ifca_k)
-    engine = Engine(strat, data, RuntimeConfig(rounds=scale.rounds))
+    engine = Engine(strat, data, RuntimeConfig(rounds=scale.rounds,
+                                               backend=backend))
     _, reports = engine.run(key)
     accs = [float(r.mean_accuracy) for r in reports]
     up = sum(r.upload_bytes for r in reports) / 1e6
@@ -41,7 +43,10 @@ def _run_engine_baseline(name: str, data, dcfg, bcfg, scale, key) -> tuple:
 
 
 def run(dataset: str = "synthmnist", scale: common.Scale | None = None,
-        seed: int = 0) -> list[dict]:
+        seed: int = 0, backend: str = "inprocess") -> list[dict]:
+    """``backend="shardmap"``: TPFL and the engine baselines run their
+    sync rounds shard-mapped over a ``clients`` mesh (bit-identical
+    numbers; FLIS/FedTM reference rows stay in-process)."""
     scale = scale or common.Scale()
     data, dcfg = common.make_fed_dataset(dataset, 5, scale, seed)
     tm_cfg = common.bench_tm_config(dataset, dcfg, scale)
@@ -64,7 +69,8 @@ def run(dataset: str = "synthmnist", scale: common.Scale | None = None,
     fed_cfg = federation.FedConfig(n_clients=scale.n_clients,
                                    rounds=scale.rounds,
                                    local_epochs=scale.local_epochs)
-    _, hist = federation.run(data, tm_cfg, fed_cfg, jax.random.PRNGKey(1))
+    _, hist = federation.run(data, tm_cfg, fed_cfg, jax.random.PRNGKey(1),
+                             runtime_cfg=RuntimeConfig(backend=backend))
     up, down = federation.total_comm_mb(hist)
     add("tpfl", [float(h.mean_accuracy) for h in hist], up, down, t0)
 
@@ -76,7 +82,8 @@ def run(dataset: str = "synthmnist", scale: common.Scale | None = None,
     for name in ("fedavg", "fedprox", "ifca"):
         t0 = time.time()
         accs, up, down = _run_engine_baseline(
-            name, data, dcfg, bcfg, scale, jax.random.PRNGKey(2))
+            name, data, dcfg, bcfg, scale, jax.random.PRNGKey(2),
+            backend=backend)
         add(name, accs, up, down, t0)
 
     # reference implementations without a fixed server-slot matrix

@@ -29,6 +29,14 @@ class ClientData(NamedTuple):
     x_conf: jnp.ndarray    # (n_clients, n_conf, o)  — D_conf (Alg. 1)
     y_conf: jnp.ndarray
     mixtures: jnp.ndarray  # (n_clients, C) the Dirichlet class mixtures
+    # (n_clients,) int32 — each client's *deployment* dataset size: its
+    # share of the global pool under the Dirichlet size allocation.  The
+    # rectangular splits above subsample a fixed per-client budget (the
+    # paper's setup), so training cost stays uniform; ``sizes`` carries
+    # the size heterogeneity and drives the runtime scheduler's
+    # ``weighted`` sampling (clients with more data sampled more often).
+    # None for hand-built ClientData (e.g. abstract dry-run inputs).
+    sizes: jnp.ndarray | None = None
 
 
 def client_mixtures(n_clients: int, n_classes: int, frac_noniid: float,
@@ -62,9 +70,28 @@ def _draw_client(x: jnp.ndarray, y: jnp.ndarray, n_classes: int,
     return x[idx], labels
 
 
+# fold_in tag for the size allocation: a stream disjoint from the
+# mixture/draw keys, so adding sizes never perturbs the drawn datasets
+_TAG_SIZES = 0x517E5
+
+
+def client_sizes(n_clients: int, pool: int, key: jax.Array,
+                 size_alpha: float = 1.0) -> jnp.ndarray:
+    """Dirichlet allocation of the global pool across clients.
+
+    ``size_alpha`` controls heterogeneity: large → near-equal shards,
+    1.0 → realistic spread (some clients hold ~10× others).  Every
+    client keeps at least one sample.
+    """
+    props = jax.random.dirichlet(
+        key, jnp.full((n_clients,), jnp.float32(size_alpha)))
+    return jnp.maximum(jnp.floor(props * pool), 1).astype(jnp.int32)
+
+
 def partition(x: jnp.ndarray, y: jnp.ndarray, n_classes: int, *,
               n_clients: int, experiment: int, key: jax.Array,
-              n_train: int, n_test: int, n_conf: int) -> ClientData:
+              n_train: int, n_test: int, n_conf: int,
+              size_alpha: float = 1.0) -> ClientData:
     """Build the paper's per-client train/test/confidence splits.
 
     ``experiment`` ∈ {1..5}: fraction of non-IID clients = (experiment-1)/4.
@@ -74,6 +101,8 @@ def partition(x: jnp.ndarray, y: jnp.ndarray, n_classes: int, *,
     frac = (experiment - 1) / 4.0
     k_mix, k_draw = jax.random.split(key)
     mixtures = client_mixtures(n_clients, n_classes, frac, k_mix)
+    sizes = client_sizes(n_clients, int(y.shape[0]),
+                         jax.random.fold_in(key, _TAG_SIZES), size_alpha)
 
     n_total = n_train + n_test + n_conf
 
@@ -87,5 +116,5 @@ def partition(x: jnp.ndarray, y: jnp.ndarray, n_classes: int, *,
         x_test=xs[:, n_train:n_train + n_test],
         y_test=ys[:, n_train:n_train + n_test],
         x_conf=xs[:, n_train + n_test:], y_conf=ys[:, n_train + n_test:],
-        mixtures=mixtures,
+        mixtures=mixtures, sizes=sizes,
     )

@@ -9,15 +9,32 @@ computes all cluster means at once.  Two forms:
   the in-process federations.
 * :func:`clustered_mean_sharded` — `shard_map` form over a mesh axis:
   clients live one-per-shard, the accumulator is reduced with a single
-  `lax.psum`, and each shard reads back only its own cluster's row.  This
-  is what `fed_train_step` lowers in the dry-run; its collective bytes
-  (C·m) versus FedAvg-on-TM's full-state all-reduce (C·m·(2o+1)) is the
-  paper's communication claim measured in the HLO.
+  `lax.psum`, and each shard reads back only its own cluster's row.  Its
+  collective bytes (C·m) versus FedAvg-on-TM's full-state all-reduce
+  (C·m·(2o+1)) is the paper's communication claim measured in the HLO.
+
+The runtime engine's shard-mapped sync round (``backend="shardmap"``)
+lowers its aggregation through the two server-matrix forms below:
+
+* :func:`clustered_mean_gathered` — one ``all_gather`` of the per-shard
+  uploads followed by the *identical* ``clustering.aggregate`` einsum on
+  every shard.  Because the gathered array equals the in-process one
+  value-for-value and the reduction graph is the same, this lowering is
+  bit-exact with the in-process engine — it is the form the federation
+  conformance suite pins.
+* :func:`clustered_weighted_mean_sharded` — the communication-optimal
+  form: per-shard masked partial sums, one ``psum`` of a (C, m)
+  accumulator (C·m bytes per device instead of all_gather's K·m).
+  Weighted, so it also covers the async engine's staleness-discounted
+  means (``discount**staleness``); float reduction order differs from
+  the host einsum, so it is allclose-, not bit-, equal.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import clustering
 
 
 def clustered_mean(vals: jnp.ndarray, assignment: jnp.ndarray,
@@ -46,6 +63,65 @@ def clustered_weighted_mean(vals: jnp.ndarray, assignment: jnp.ndarray,
     total = onehot.sum(0)
     return sums / jnp.maximum(total.reshape((-1,) + (1,) * (vals.ndim - 1)),
                               1e-9)
+
+
+def clustered_mean_gathered(local_vals: jnp.ndarray,
+                            local_slots: jnp.ndarray,
+                            n_clusters: int, axis_name: str,
+                            prev: jnp.ndarray,
+                            n_valid: int | None = None
+                            ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Inside shard_map: bit-exact sharded lowering of the Alg. 2 mean.
+
+    Each shard holds its local block of uploads ``(k_local, m)`` and slot
+    ids ``(k_local,)`` (−1 = masked out).  One tiled ``all_gather``
+    reassembles the global upload matrix *in client order* on every
+    shard, and the reduction is then literally
+    :func:`repro.core.clustering.aggregate` on the same values — so the
+    result is bit-identical to the in-process engine, which is the
+    conformance suite's contract.
+
+    ``n_valid`` trims trailing padding rows (the engine pads the sampled
+    K to a multiple of the mesh axis) so the reduction shape — and hence
+    the float summation order — matches the unpadded in-process einsum.
+
+    Returns ``(server, counts)``: (C, m) per-slot means with empty slots
+    keeping ``prev``, and the (C,) member counts.
+    """
+    vals = jax.lax.all_gather(local_vals, axis_name, tiled=True)
+    slots = jax.lax.all_gather(local_slots, axis_name, tiled=True)
+    if n_valid is not None:
+        vals = vals[:n_valid]
+        slots = slots[:n_valid]
+    res = clustering.aggregate(vals, slots, n_clusters, prev=prev)
+    return res.cluster_weights, res.counts
+
+
+def clustered_weighted_mean_sharded(local_vals: jnp.ndarray,
+                                    local_slots: jnp.ndarray,
+                                    local_weights: jnp.ndarray,
+                                    n_clusters: int, axis_name: str
+                                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Inside shard_map: weighted per-slot mean via one masked ``psum``.
+
+    The sharded form of :func:`clustered_weighted_mean` — each shard
+    folds its local uploads into a (C, m) accumulator weighted by
+    ``local_weights`` (staleness discounts; 0 masks, as does slot −1),
+    and a single psum of accumulator + weight totals yields every slot
+    mean at once.  C·m collective bytes per device — the
+    communication-optimal lowering (vs all_gather's K·m), at the cost of
+    a shard-order float reduction that is allclose- rather than
+    bit-equal to the host form.
+
+    Returns ``(means, total_weight)``, means 0 where no weight landed.
+    """
+    onehot = jax.nn.one_hot(local_slots, n_clusters, dtype=jnp.float32)
+    onehot = onehot * local_weights.astype(jnp.float32)[:, None]  # (k, C)
+    part = jnp.einsum("nm,nk->km", local_vals.astype(jnp.float32), onehot)
+    sums = jax.lax.psum(part, axis_name)               # (C, m)
+    total = jax.lax.psum(onehot.sum(0), axis_name)     # (C,)
+    means = sums / jnp.maximum(total[:, None], 1e-9)
+    return means, total
 
 
 def clustered_mean_sharded(local_val: jnp.ndarray, my_cluster: jnp.ndarray,

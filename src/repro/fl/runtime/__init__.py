@@ -14,12 +14,21 @@ The subsystem that replaces the monolithic ``federation.run`` loop:
   barrier or async buffered aggregation (fixed-capacity buffer, masked
   validity, staleness-discounted averaging), jit-friendly static-K
   gather/scatter of the sampled client sub-pytrees.
+* :mod:`repro.fl.runtime.executors` — where a round's compute runs: the
+  in-process vmap backend, or the shard-mapped ``clients``-mesh backend
+  whose aggregation is a single masked collective (bit-identical to
+  in-process; pinned by ``tests/test_fl_conformance.py``).
 * :mod:`repro.fl.runtime.checkpointing` — round-granular save/resume on
   top of ``repro.checkpoint.ckpt``.
+
+See ``README.md`` next to this file for the backend architecture and
+how to run the conformance matrix locally.
 """
 from repro.fl.runtime.codec import CodecConfig          # noqa: F401
 from repro.fl.runtime.engine import (                   # noqa: F401
-    Engine, EngineState, RoundReport, RuntimeConfig)
+    BACKENDS, Engine, EngineState, RoundReport, RuntimeConfig)
+from repro.fl.runtime.executors import (                # noqa: F401
+    COLLECTIVES, InProcessExecutor, ShardMapExecutor, build_sharded_round)
 from repro.fl.runtime.scheduler import (                # noqa: F401
     Participation, Scheduler, SchedulerConfig)
 from repro.fl.runtime.strategy import (                 # noqa: F401

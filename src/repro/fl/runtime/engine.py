@@ -14,6 +14,12 @@ Round anatomy (sync mode)
    keys are ``split(round_key, N)[idx]``, so any participation pattern
    draws from the same per-client key stream as the full-population
    legacy loop — full participation reproduces it bit-for-bit.
+   *Where* the step runs is the executor's business
+   (:mod:`repro.fl.runtime.executors`): in-process vmap (default), or
+   shard-mapped over a ``clients`` mesh axis (``backend="shardmap"``)
+   with aggregation lowered to a single masked collective — one
+   compiled sharded program per round on the identity wire.  The
+   conformance suite pins both backends bit-identical.
 3. Each surviving upload is *encoded to real bytes* by the codec (and
    decoded back before aggregation, so lossy codecs perturb the math
    exactly as they would in deployment).  A sync barrier treats uploads
@@ -42,13 +48,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import clustering
 from repro.data.partition import ClientData
 from repro.fl import masked_collectives
 from repro.fl.runtime import checkpointing
 from repro.fl.runtime.codec import CodecConfig, decode, encode
+from repro.fl.runtime import executors
+from repro.fl.runtime.executors import (COLLECTIVES, InProcessExecutor,
+                                        ShardMapExecutor)
 from repro.fl.runtime.scheduler import (Participation, Scheduler,
                                         SchedulerConfig)
+
+BACKENDS = ("inprocess", "shardmap")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,12 +70,24 @@ class RuntimeConfig:
     async_min_uploads: int = 4        # B — aggregate once B uploads matured
     buffer_capacity: int = 64         # fixed-capacity async upload buffer
     staleness_discount: float = 0.5   # matured weight = discount**staleness
+    backend: str = "inprocess"        # inprocess | shardmap
+    mesh_axis: str = "clients"        # shard_map axis clients live on
+    mesh_collective: str = "gather"   # gather (bit-exact) | psum (C·m bytes)
     checkpoint_dir: str | None = None
     checkpoint_every: int = 0         # 0 = never
 
     def __post_init__(self):
         if self.aggregation not in ("sync", "async"):
             raise ValueError(f"unknown aggregation {self.aggregation!r}")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}")
+        if self.mesh_collective not in COLLECTIVES:
+            raise ValueError(
+                f"unknown mesh_collective {self.mesh_collective!r}")
+        if self.backend == "shardmap" and self.aggregation == "async":
+            raise ValueError(
+                "async buffered aggregation is in-process only — the "
+                "buffer is host state (see ROADMAP follow-ups)")
 
 
 class EngineState(NamedTuple):
@@ -99,12 +121,25 @@ class Engine:
     """Round orchestrator for one strategy over one client population."""
 
     def __init__(self, strategy, data: ClientData, cfg: RuntimeConfig,
-                 client_weights: jnp.ndarray | None = None):
+                 client_weights: jnp.ndarray | None = None, mesh=None):
         self.strategy = strategy
         self.data = data
         self.cfg = cfg
         self.n = int(data.x_train.shape[0])
+        if client_weights is None and cfg.scheduler.sampling == "weighted":
+            # weighted sampling defaults to the real per-client dataset
+            # sizes the partitioner recorded (clients with more data are
+            # sampled more often, the FedAvg-paper convention)
+            sizes = getattr(data, "sizes", None)
+            if sizes is not None:
+                client_weights = jnp.asarray(sizes, jnp.float32)
         self.scheduler = Scheduler(cfg.scheduler, self.n, client_weights)
+        if cfg.backend == "shardmap":
+            self.executor = ShardMapExecutor(
+                mesh=mesh, axis=cfg.mesh_axis,
+                collective=cfg.mesh_collective)
+        else:
+            self.executor = InProcessExecutor()
         # uniform full participation samples idx = arange(N): skip the
         # identity gather/scatter so the legacy-default path copies
         # nothing (the dominant configuration for every benchmark)
@@ -158,40 +193,73 @@ class Engine:
                   ) -> tuple[EngineState, RoundReport]:
         r = int(state.round_idx)
         part = self.scheduler.sample(r, round_key)
-
-        # (2) local work on the K sampled clients
-        new_sub, vecs, slots = self._train(state, part.idx, round_key)
-
-        # (3) the wire: encode → meter → decode
         sync = self.cfg.aggregation == "sync"
         arrive = np.asarray(part.active)
         if sync:
             arrive = arrive & (np.asarray(part.staleness) == 0)
-        dec, up_bytes = self._wire_uplink(state.server, vecs, slots,
-                                          np.asarray(part.active))
 
-        # (4) aggregation
-        if sync:
-            server, counts, n_agg, n_buf, n_evict, buf = \
-                self._aggregate_sync(state, dec, slots, arrive)
+        # gather the sampled sub-pytree (static K) + per-client keys
+        keys = jax.random.split(round_key, self.n)
+        if self._identity:
+            sub_cs, sub_data = state.client_state, self.data
         else:
-            server, counts, n_agg, n_buf, n_evict, buf = \
-                self._aggregate_async(state, dec, slots, part, r)
+            keys = keys[part.idx]
+            sub_cs = jax.tree.map(lambda a: a[part.idx], state.client_state)
+            sub_data = jax.tree.map(lambda a: a[part.idx], self.data)
 
-        # (5) broadcast + scatter + evaluate.  A slot row is only pushed
-        # to clients when it actually received an aggregate this round —
-        # otherwise (async round below the B threshold, or a never-fed
-        # cluster) the zero-initialized/stale server row would overwrite
-        # the client's freshly trained weights.
-        recv = jnp.asarray(arrive)
-        applied = jnp.where(
-            recv[:, None] & (slots >= 0)
-            & (counts[jnp.clip(slots, 0)] > 0), slots, -1)
-        rx_server, down_bc, down_pc = self._wire_downlink(
-            server, counts, arrive, applied)
-        new_state, acc, assignment = self._apply(
-            state, part.idx, recv, new_sub, applied, server, rx_server,
-            buf)
+        # identity wire + sync barrier: the executor may run the whole
+        # round (train → masked collective → apply → eval) as one
+        # compiled sharded program; bytes are metered arithmetically
+        # (float32 frames are bit-exact, len = 4 + 4·d — codec-pinned)
+        fused = None
+        if sync and self._identity and self._wire_is_identity():
+            fused = self.executor.fused_sync_round(
+                self.strategy, sub_cs, state.server, sub_data, keys,
+                jnp.asarray(arrive))
+        if fused is not None:
+            merged, server, counts, applied, acc_sub, slots = fused
+            up_bytes = self._identity_upload_bytes(
+                np.asarray(slots), np.asarray(part.active))
+            _, down_bc, down_pc = self._wire_downlink(
+                server, counts, arrive, applied)
+        else:
+            # (2) local work on the K sampled clients
+            new_sub, vecs, slots = self.executor.train(
+                self.strategy, sub_cs, state.server, sub_data, keys)
+
+            # (3) the wire: encode → meter → decode
+            dec, up_bytes = self._wire_uplink(state.server, vecs, slots,
+                                              np.asarray(part.active))
+
+            # (4) aggregation
+            if sync:
+                server, counts = self.executor.masked_mean(
+                    self.strategy, dec, slots, jnp.asarray(arrive),
+                    state.server)
+            else:
+                server, counts, n_agg, n_buf, n_evict, buf = \
+                    self._aggregate_async(state, dec, slots, part, r)
+
+            # (5) broadcast + scatter + evaluate.  A slot row is only
+            # pushed to clients when it actually received an aggregate
+            # this round — otherwise (async round below the B threshold,
+            # or a never-fed cluster) the zero-initialized/stale server
+            # row would overwrite the client's freshly trained weights.
+            recv = jnp.asarray(arrive)
+            applied = executors.applied_slots(slots, counts, recv)
+            rx_server, down_bc, down_pc = self._wire_downlink(
+                server, counts, arrive, applied)
+            merged = self.executor.apply_merge(
+                self.strategy, new_sub, applied, rx_server, sub_cs, recv)
+            acc_sub = None
+
+        if sync:   # barrier bookkeeping, identical for fused and staged
+            n_agg = int((np.asarray(slots)[arrive] >= 0).sum())
+            buf = self._buf_of(state)
+            n_buf = n_evict = 0
+
+        new_state, acc, assignment = self._scatter_eval(
+            state, part.idx, merged, applied, server, buf, acc_sub)
 
         rep = RoundReport(
             round_idx=r, mean_accuracy=acc.mean(),
@@ -204,20 +272,24 @@ class Engine:
 
     # -- pieces ------------------------------------------------------------
 
-    def _train(self, state: EngineState, idx: jnp.ndarray,
-               round_key: jax.Array):
-        """Gather the sampled sub-pytree (static K) and run client_step."""
-        keys = jax.random.split(round_key, self.n)
-        if self._identity:
-            sub_cs, sub_data = state.client_state, self.data
-        else:
-            keys = keys[idx]
-            sub_cs = jax.tree.map(lambda a: a[idx], state.client_state)
-            sub_data = jax.tree.map(lambda a: a[idx], self.data)
-        new_sub, upload = jax.vmap(
-            self.strategy.client_step, in_axes=(0, None, 0, 0))(
-            sub_cs, state.server, sub_data, keys)
-        return new_sub, upload.vecs, upload.slots      # (K,j,d), (K,j)
+    def _wire_is_identity(self) -> bool:
+        """Dense float32 encode→decode is a bit-exact identity (pinned by
+        the codec tests) — the round needs no host codec boundary."""
+        return self.cfg.codec.name == "float32" and not self.cfg.codec.sparse
+
+    def _identity_upload_bytes(self, np_slots, active) -> int:
+        """Identity-wire metering: frame = 4-byte slot id + 4·d payload,
+        one frame per shared slot of each active client.  The one
+        formula both the fused path and ``_wire_uplink``'s fast path
+        meter with."""
+        d = self.strategy.vec_dim
+        return int((np_slots[active] >= 0).sum()) * (4 + 4 * d)
+
+    @staticmethod
+    def _buf_of(state: EngineState):
+        """The async buffer 6-tuple, passed through unchanged by sync."""
+        return (state.buf_vecs, state.buf_slots, state.buf_ready,
+                state.buf_weight, state.buf_valid, state.buf_seq)
 
     def _wire_uplink(self, server, vecs, slots, active):
         """Encode every surviving upload to real bytes; decode what the
@@ -232,14 +304,11 @@ class Engine:
         reference tracking."""
         cfg = self.cfg.codec
         np_slots = np.asarray(slots)
-        if cfg.name == "float32" and not cfg.sparse:
-            # dense float32 encode→decode is a bit-exact identity (pinned
-            # by the codec tests), so skip the host round-trip and meter
-            # the frames arithmetically — len(frame) = 4 + 4·d exactly.
-            # Keeps the default-config round free of per-frame Python.
-            sent = int((np_slots[active] >= 0).sum())
-            d = int(vecs.shape[2])
-            return vecs, sent * (4 + 4 * d)
+        if self._wire_is_identity():
+            # bit-exact identity wire: skip the host round-trip, meter
+            # arithmetically.  Keeps the default round free of
+            # per-frame Python.
+            return vecs, self._identity_upload_bytes(np_slots, active)
         np_vecs = np.asarray(vecs, np.float32)
         np_server = np.asarray(server, np.float32)
         dec = np.zeros_like(np_vecs)
@@ -289,18 +358,6 @@ class Engine:
             down_pc = sum(frame_len[s]
                           for s in np.asarray(applied).ravel() if s >= 0)
         return rx_arr, down_bc, down_pc
-
-    def _aggregate_sync(self, state, dec, slots, arrive):
-        """Barrier aggregation — the exact Alg. 2 masked mean (weights
-        all 1), bit-identical to ``clustering.aggregate``."""
-        masked = jnp.where(jnp.asarray(arrive)[:, None], slots, -1)
-        res = clustering.aggregate(
-            dec.reshape(-1, self.strategy.vec_dim), masked.reshape(-1),
-            self.strategy.n_slots, prev=state.server)
-        n_agg = int((masked >= 0).sum())
-        buf = (state.buf_vecs, state.buf_slots, state.buf_ready,
-               state.buf_weight, state.buf_valid, state.buf_seq)
-        return res.cluster_weights, res.counts, n_agg, 0, 0, buf
 
     def _aggregate_async(self, state, dec, slots, part: Participation, r):
         """Buffered aggregation: insert this round's uploads, then fold in
@@ -364,23 +421,12 @@ class Engine:
                jnp.asarray(weight), jnp.asarray(valid), jnp.asarray(seq))
         return server, counts, n_agg, int(valid.sum()), evicted, buf
 
-    def _apply(self, state: EngineState, idx, recv, new_sub, applied,
-               server, rx_server, buf):
-        """Broadcast the applied slots to surviving participants, revert
-        the rest, scatter the sub-pytree back, evaluate everyone.
-
-        Clients apply ``rx_server`` — the codec-roundtripped broadcast —
-        while the aggregator's own memory stays full-precision."""
-        bc_sub = jax.vmap(self.strategy.apply_broadcast,
-                          in_axes=(0, 0, None))(new_sub, applied, rx_server)
-        old_sub = state.client_state if self._identity else \
-            jax.tree.map(lambda a: a[idx], state.client_state)
-
-        def keep(new, old):
-            m = recv.reshape((-1,) + (1,) * (new.ndim - 1))
-            return jnp.where(m, new, old)
-
-        merged = jax.tree.map(keep, bc_sub, old_sub)
+    def _scatter_eval(self, state: EngineState, idx, merged, applied,
+                      server, buf, acc_sub):
+        """Scatter the merged sub-pytree back into the population,
+        evaluate everyone, build the next state.  ``acc_sub`` is the
+        fused program's per-client accuracy (full population when the
+        identity gather was in effect), saving the separate eval pass."""
         if self._identity:
             cs = merged
             assignment = applied
@@ -390,8 +436,16 @@ class Engine:
             assignment = jnp.full((self.n, self.strategy.j_slots), -1,
                                   jnp.int32).at[idx].set(applied)
 
-        acc = jax.vmap(self.strategy.evaluate)(
-            cs, self.data.x_test, self.data.y_test)
+        if acc_sub is not None and self._identity:
+            acc = acc_sub
+        else:
+            acc = self.executor.evaluate(
+                self.strategy, cs, self.data.x_test, self.data.y_test)
+        # commit to a single device before any reduction: a mean over a
+        # mesh-sharded accuracy vector reduces in device order, which is
+        # ULP-different from the in-process sequential reduction (the
+        # conformance suite pins the report bit-for-bit across backends)
+        acc = jnp.asarray(np.asarray(acc))
         new_state = EngineState(
             round_idx=state.round_idx + 1, client_state=cs, server=server,
             buf_vecs=buf[0], buf_slots=buf[1], buf_ready=buf[2],

@@ -1,0 +1,345 @@
+"""Round executors: where one federated round's compute actually runs.
+
+The engine (``runtime/engine.py``) owns the *semantics* of a round —
+scheduling, the wire codec, aggregation mode, checkpointing — and
+delegates the three array-heavy pieces (client training, the masked
+per-slot mean, broadcast-apply + evaluation) to a ``RoundExecutor``:
+
+* :class:`InProcessExecutor` — eager vmap over the sampled clients, the
+  host einsum of ``clustering.aggregate``.  The reference backend.
+* :class:`ShardMapExecutor` — the same round lowered through
+  ``shard_map`` over a ``clients`` mesh axis: each shard trains its
+  block of the sampled clients, and aggregation is a single masked
+  collective from :mod:`repro.fl.masked_collectives` (``all_gather`` +
+  canonical einsum for bit-exactness, or the C·m ``psum`` accumulator
+  for communication-optimality).  For the dominant configuration (sync
+  barrier, full participation, dense float32 wire) the *entire* round —
+  client_step, aggregation, broadcast-apply, evaluation — is one
+  compiled sharded program (:func:`build_sharded_round`, also what the
+  dry-run lowers on the production mesh).
+
+The conformance suite (``tests/test_fl_conformance.py``) pins
+shard-mapped == in-process == legacy ``federation.run`` bit-for-bit for
+every (strategy, codec, participation) cell; anything that changes
+per-client key derivation, reduction shapes, or merge order breaks it.
+
+Sampled-K padding: shard_map needs the leading axis divisible by the
+mesh axis size, so executors pad K (and N for evaluation) up to the
+next multiple with inert rows — repeated row 0 for client state/data,
+``active=False`` / slot −1 for participation — and slice the padding
+back off.  Padded rows are masked out of the collective *and* trimmed
+from the reduction shape (``n_valid``) so the float summation order
+matches the unpadded in-process einsum exactly.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import clustering
+from repro.fl import masked_collectives
+
+COLLECTIVES = ("gather", "psum")
+
+
+def applied_slots(slots, counts, arrive):
+    """Which slots are actually pushed back to each client this round:
+    it arrived, it shared the slot, and the slot received an aggregate
+    (a never-fed slot row must not overwrite fresh local training).
+    Shared by the engine's staged path and the fused sharded body — the
+    bit-parity contract depends on both using exactly this formula."""
+    return jnp.where(arrive[:, None] & (slots >= 0)
+                     & (counts[jnp.clip(slots, 0)] > 0), slots, -1)
+
+
+def _broadcast_apply_merge(strategy, new_sub, applied, server, old_sub,
+                           recv):
+    """vmap ``apply_broadcast`` over clients, then revert non-receivers
+    to their pre-round state.  The one merge both backends (and the
+    fused round) share — the bit-parity contract depends on every
+    execution path using exactly this function."""
+    bc_sub = jax.vmap(strategy.apply_broadcast,
+                      in_axes=(0, 0, None))(new_sub, applied, server)
+
+    def keep(new, old):
+        m = recv.reshape((-1,) + (1,) * (new.ndim - 1))
+        return jnp.where(m, new, old)
+
+    return jax.tree.map(keep, bc_sub, old_sub)
+
+
+# ---------------------------------------------------------------------------
+# in-process backend (the reference semantics)
+# ---------------------------------------------------------------------------
+
+class InProcessExecutor:
+    """Eager vmap backend — every round is host-orchestrated jax ops."""
+
+    def train(self, strategy, sub_cs, server, sub_data, keys):
+        new_sub, upload = jax.vmap(
+            strategy.client_step, in_axes=(0, None, 0, 0))(
+            sub_cs, server, sub_data, keys)
+        return new_sub, upload.vecs, upload.slots     # (K,j,d), (K,j)
+
+    def masked_mean(self, strategy, dec, slots, arrive, prev):
+        """The exact Alg. 2 masked mean (weights all 1), bit-identical
+        to ``clustering.aggregate``."""
+        masked = jnp.where(arrive[:, None], slots, -1)
+        res = clustering.aggregate(
+            dec.reshape(-1, strategy.vec_dim), masked.reshape(-1),
+            strategy.n_slots, prev=prev)
+        return res.cluster_weights, res.counts
+
+    def apply_merge(self, strategy, new_sub, applied, rx_server, old_sub,
+                    recv):
+        return _broadcast_apply_merge(strategy, new_sub, applied,
+                                      rx_server, old_sub, recv)
+
+    def evaluate(self, strategy, cs, x_test, y_test):
+        return jax.vmap(strategy.evaluate)(cs, x_test, y_test)
+
+    def fused_sync_round(self, strategy, sub_cs, server, sub_data, keys,
+                         arrive):
+        return None                      # no fused form; use the stages
+
+
+# ---------------------------------------------------------------------------
+# shard_map padding helpers
+# ---------------------------------------------------------------------------
+
+def _pad_rows(a: jnp.ndarray, mult: int, fill=None) -> jnp.ndarray:
+    """Pad the leading axis up to a multiple of ``mult`` — with ``fill``,
+    or by repeating row 0 (inert: results for pad rows are sliced off)."""
+    pad = (-a.shape[0]) % mult
+    if pad == 0:
+        return a
+    if fill is None:
+        tail = jnp.broadcast_to(a[:1], (pad,) + a.shape[1:])
+    else:
+        tail = jnp.full((pad,) + a.shape[1:], fill, a.dtype)
+    return jnp.concatenate([a, tail], axis=0)
+
+
+def _pad_tree(tree, mult: int):
+    return jax.tree.map(lambda a: _pad_rows(a, mult), tree)
+
+
+def _unpad(tree, n: int):
+    return jax.tree.map(lambda a: a[:n], tree)
+
+
+# ---------------------------------------------------------------------------
+# the shard-mapped sync round (one compiled program)
+# ---------------------------------------------------------------------------
+
+def _sharded_masked_mean(vals, slots, n_slots, axis, collective, n_valid,
+                         prev):
+    """Per-shard uploads → replicated (server, counts), one collective."""
+    if collective == "gather":
+        return masked_collectives.clustered_mean_gathered(
+            vals, slots, n_slots, axis, prev, n_valid=n_valid)
+    means, counts = masked_collectives.clustered_weighted_mean_sharded(
+        vals, slots, jnp.ones_like(slots, jnp.float32), n_slots, axis)
+    server = jnp.where(counts[:, None] > 0, means, prev)
+    return server, counts
+
+
+def _sync_round_body(strategy, axis: str, collective: str,
+                     n_valid: int | None):
+    """Per-shard body of one full sync round (train → masked collective
+    → broadcast-apply → evaluate).  Only valid for the identity wire
+    (dense float32): lossy codecs need the host codec boundary, which
+    splits the round into the stage programs below."""
+
+    def body(sub_cs, server, sub_data, keys, arrive):
+        new_sub, up = jax.vmap(
+            strategy.client_step, in_axes=(0, None, 0, 0))(
+            sub_cs, server, sub_data, keys)
+        masked = jnp.where(arrive[:, None], up.slots, -1)
+        server2, counts = _sharded_masked_mean(
+            up.vecs.reshape(-1, strategy.vec_dim), masked.reshape(-1),
+            strategy.n_slots, axis, collective, n_valid, server)
+        applied = applied_slots(up.slots, counts, arrive)
+        merged = _broadcast_apply_merge(strategy, new_sub, applied,
+                                        server2, sub_cs, arrive)
+        acc = jax.vmap(strategy.evaluate)(
+            merged, sub_data.x_test, sub_data.y_test)
+        return merged, server2, counts, applied, acc, up.slots
+
+    return body
+
+
+def build_sharded_round(strategy, mesh, axis_name: str = "clients",
+                        collective: str = "psum",
+                        n_clients: int | None = None):
+    """One full sync round as a single shard-mappable callable —
+    ``(sub_cs, server, sub_data, keys, arrive) → (new_cs, server,
+    counts, applied, per_client_acc, slots)`` with clients sharded over
+    ``axis_name``.  This is what the dry-run lowers on the production
+    mesh (clients over the ``data`` axis) to measure the masked
+    collective's bytes in the partitioned HLO, and what the
+    :class:`ShardMapExecutor` runs for the identity-wire fast path.
+    """
+    if collective not in COLLECTIVES:
+        raise ValueError(f"unknown collective {collective!r}")
+    n_valid = None if n_clients is None else n_clients * strategy.j_slots
+    body = _sync_round_body(strategy, axis_name, collective, n_valid)
+    spec = P(axis_name)
+    # check_rep=False: the 0.4.x replication checker cannot infer that
+    # all_gather→slice→einsum yields a replicated value (it does, by
+    # construction — every shard reduces the same gathered array)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(spec, P(), spec, spec, spec),
+        out_specs=(spec, P(), P(), spec, spec, spec), check_rep=False)
+
+
+# ---------------------------------------------------------------------------
+# stage programs (jitted once per (strategy, mesh) via static args)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnums=(0, 1, 2))
+def _train_program(strategy, mesh, axis, sub_cs, server, sub_data, keys):
+    spec = P(axis)
+
+    def body(cs, srv, d, k):
+        return jax.vmap(strategy.client_step,
+                        in_axes=(0, None, 0, 0))(cs, srv, d, k)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(spec, P(), spec, spec),
+                     out_specs=(spec, spec))(sub_cs, server, sub_data, keys)
+
+
+@partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5))
+def _agg_program(n_slots, dim, mesh, axis, collective, n_valid,
+                 dec, slots, arrive, prev):
+    spec = P(axis)
+
+    def body(dec_, slots_, arrive_, prev_):
+        masked = jnp.where(arrive_[:, None], slots_, -1)
+        return _sharded_masked_mean(
+            dec_.reshape(-1, dim), masked.reshape(-1), n_slots, axis,
+            collective, n_valid, prev_)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(spec, spec, spec, P()),
+                     out_specs=(P(), P()),
+                     check_rep=False)(dec, slots, arrive, prev)
+
+
+@partial(jax.jit, static_argnums=(0, 1, 2))
+def _apply_program(strategy, mesh, axis, new_sub, applied, rx_server,
+                   old_sub, recv):
+    spec = P(axis)
+
+    def body(ns, ap, srv, old, rc):
+        return _broadcast_apply_merge(strategy, ns, ap, srv, old, rc)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(spec, spec, P(), spec, spec),
+                     out_specs=spec)(new_sub, applied, rx_server, old_sub,
+                                     recv)
+
+
+@partial(jax.jit, static_argnums=(0, 1, 2))
+def _eval_program(strategy, mesh, axis, cs, x_test, y_test):
+    spec = P(axis)
+    return shard_map(
+        lambda c, x, y: jax.vmap(strategy.evaluate)(c, x, y),
+        mesh=mesh, in_specs=(spec, spec, spec),
+        out_specs=spec)(cs, x_test, y_test)
+
+
+@partial(jax.jit, static_argnums=(0, 1, 2, 3, 4))
+def _fused_program(strategy, mesh, axis, collective, n_valid,
+                   sub_cs, server, sub_data, keys, arrive):
+    spec = P(axis)
+    body = _sync_round_body(strategy, axis, collective, n_valid)
+    return shard_map(body, mesh=mesh,
+                     in_specs=(spec, P(), spec, spec, spec),
+                     out_specs=(spec, P(), P(), spec, spec, spec),
+                     check_rep=False)(
+        sub_cs, server, sub_data, keys, arrive)
+
+
+# ---------------------------------------------------------------------------
+# shard_map backend
+# ---------------------------------------------------------------------------
+
+class ShardMapExecutor:
+    """The production-mesh backend: every stage is a compiled shard_map
+    program over ``axis`` (clients one-block-per-shard), cached across
+    rounds/engines by jit's static-argument cache."""
+
+    def __init__(self, mesh=None, axis: str = "clients",
+                 collective: str = "gather"):
+        if collective not in COLLECTIVES:
+            raise ValueError(f"unknown collective {collective!r}")
+        if mesh is None:
+            from repro.sharding import compat
+            mesh = compat.make_mesh((len(jax.devices()),), (axis,))
+        if axis not in mesh.shape:
+            raise ValueError(f"mesh has no {axis!r} axis: {mesh}")
+        self.mesh = mesh
+        self.axis = axis
+        self.collective = collective
+        self.n_shards = int(mesh.shape[axis])
+
+    def train(self, strategy, sub_cs, server, sub_data, keys):
+        k = keys.shape[0]
+        new_sub, upload = _train_program(
+            strategy, self.mesh, self.axis,
+            _pad_tree(sub_cs, self.n_shards), server,
+            _pad_tree(sub_data, self.n_shards),
+            _pad_rows(keys, self.n_shards))
+        new_sub = _unpad(new_sub, k)
+        return new_sub, upload.vecs[:k], upload.slots[:k]
+
+    def masked_mean(self, strategy, dec, slots, arrive, prev):
+        k = dec.shape[0]
+        return _agg_program(
+            strategy.n_slots, strategy.vec_dim, self.mesh, self.axis,
+            self.collective, k * strategy.j_slots,
+            _pad_rows(dec, self.n_shards),
+            _pad_rows(slots, self.n_shards, fill=-1),
+            _pad_rows(arrive, self.n_shards, fill=False), prev)
+
+    def apply_merge(self, strategy, new_sub, applied, rx_server, old_sub,
+                    recv):
+        k = applied.shape[0]
+        merged = _apply_program(
+            strategy, self.mesh, self.axis,
+            _pad_tree(new_sub, self.n_shards),
+            _pad_rows(applied, self.n_shards, fill=-1), rx_server,
+            _pad_tree(old_sub, self.n_shards),
+            _pad_rows(recv, self.n_shards, fill=False))
+        return _unpad(merged, k)
+
+    def evaluate(self, strategy, cs, x_test, y_test):
+        n = x_test.shape[0]
+        acc = _eval_program(
+            strategy, self.mesh, self.axis, _pad_tree(cs, self.n_shards),
+            _pad_rows(x_test, self.n_shards),
+            _pad_rows(y_test, self.n_shards))
+        return acc[:n]
+
+    def fused_sync_round(self, strategy, sub_cs, server, sub_data, keys,
+                         arrive):
+        """The whole round as one compiled sharded program (identity
+        wire only — the engine calls this for dense float32 sync)."""
+        k = keys.shape[0]
+        out = _fused_program(
+            strategy, self.mesh, self.axis, self.collective,
+            k * strategy.j_slots,
+            _pad_tree(sub_cs, self.n_shards), server,
+            _pad_tree(sub_data, self.n_shards),
+            _pad_rows(keys, self.n_shards),
+            _pad_rows(jnp.asarray(arrive), self.n_shards, fill=False))
+        merged, server2, counts, applied, acc, slots = out
+        return (_unpad(merged, k), server2, counts, applied[:k], acc[:k],
+                slots[:k])

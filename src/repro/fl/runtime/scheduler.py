@@ -11,7 +11,10 @@ Sampling policies:
   (K == N) short-circuits to ``arange(N)`` so the default configuration
   reproduces the legacy full-population ordering bit-for-bit.
 * ``weighted``    — without replacement, proportional to caller-supplied
-  client weights (e.g. dataset sizes).
+  client weights.  The engine defaults these to the real per-client
+  dataset sizes recorded by ``data/partition.py`` (``ClientData.sizes``),
+  the FedAvg-paper convention: clients holding more data are sampled
+  more often.
 * ``round_robin`` — deterministic sliding window ``(r·K + i) mod N``:
   the window cycles through the population, and when K divides N every
   client participates exactly once per N/K rounds (otherwise coverage
@@ -69,6 +72,12 @@ class Scheduler:
         if cfg.sampling == "weighted":
             w = jnp.ones(n_clients) if weights is None \
                 else jnp.asarray(weights, jnp.float32)
+            if w.shape != (n_clients,):
+                raise ValueError(
+                    f"client weights shape {w.shape} != ({n_clients},)")
+            if not bool((w >= 0).all()) or float(w.sum()) <= 0.0:
+                raise ValueError("client weights must be non-negative "
+                                 "with a positive sum")
             self.p = w / w.sum()
         else:
             self.p = None

@@ -23,6 +23,24 @@ ignored by aggregation and broadcast.
 ``TPFLStrategy.client_step`` / ``apply_broadcast`` are *the* Alg. 1 /
 Phase-D implementations — ``repro.core.federation`` vmaps them, so the
 legacy driver and the runtime engine share one source of truth.
+
+Per-shard lowering contract
+---------------------------
+The engine's shard-mapped backend (``runtime/executors.py``) runs
+``client_step`` / ``apply_broadcast`` / ``evaluate`` *inside*
+``shard_map`` — one block of sampled clients per shard, ``server``
+replicated.  That imposes three requirements on every strategy, pinned
+per (strategy × codec × participation) cell by the conformance suite:
+
+* pure jax, per-client: no host callbacks, no data-dependent shapes,
+  no reads of any *other* client's row (cross-client math belongs to
+  the aggregation collective, nowhere else);
+* ``Upload.vecs`` float32 ``(j_slots, vec_dim)`` and ``Upload.slots``
+  int32 ``(j_slots,)`` exactly — the wire codec and the masked
+  collective type-pun on this framing;
+* a strategy instance is hashable (frozen dataclass) and equality-
+  stable, because the shard-mapped stage programs cache compiled
+  executables keyed on it (``jax.jit`` static argument).
 """
 from __future__ import annotations
 

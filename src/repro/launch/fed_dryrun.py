@@ -4,9 +4,14 @@ os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")
 
 """Dry-run of the paper's technique ON THE MESH: one TPFL round vs one
 FedAvg-on-TM round, lowered+compiled for the production mesh at paper
-scale (C=10, m=300 clauses, o=784 features, 256 clients — one client per
-data-axis device).  The collective-bytes delta between the two programs
-is the paper's communication claim measured in the partitioned HLO.
+scale (C=10, m=300 clauses, o=784 features, 256 clients sharded over the
+FSDP axes).  The TPFL program is the *runtime engine's* shard-mapped
+sync round (`repro.fl.runtime.executors.build_sharded_round` — the same
+program `fed_train --mesh` executes, clients over the mesh's data axes,
+aggregation one masked psum of the (C, m) accumulator); FedAvg-on-TM
+keeps the legacy full-state tree-mean builder as the baseline.  The
+collective-bytes delta between the two programs is the paper's
+communication claim measured in the partitioned HLO.
 
   PYTHONPATH=src python -m repro.launch.fed_dryrun [--multi-pod]
 """
@@ -33,15 +38,24 @@ def run(multi_pod: bool = False, n_clients: int = 256,
                          n_states=127, s=10.0, T=1000)
     fed_cfg = federation.FedConfig(n_clients=n_clients, rounds=1,
                                    local_epochs=1)
-    params, cw, data, key = fed_train.abstract_fed_inputs(
-        tm_cfg, fed_cfg, mesh, n_train=64, n_test=32, n_conf=32)
+    params, cw, data, key, keys, arrive, client_axes = \
+        fed_train.abstract_round_inputs(tm_cfg, fed_cfg, mesh,
+                                        n_train=64, n_test=32, n_conf=32)
+    if client_axes is None:
+        raise SystemExit(f"{n_clients} clients do not divide the mesh's "
+                         f"FSDP axes — pick a multiple")
+
+    from repro.fl.runtime.executors import build_sharded_round
+    strategy = federation._strategy(tm_cfg, fed_cfg)
+    engine_round = build_sharded_round(
+        strategy, mesh, axis_name=client_axes, collective="psum",
+        n_clients=n_clients)
 
     out = {"mesh": "2x16x16" if multi_pod else "16x16",
            "n_clients": n_clients, "clauses": clauses}
     with compat.set_mesh(mesh):
         for name, build, args in (
-            ("tpfl", fed_train.make_tpfl_round(tm_cfg, fed_cfg),
-             (params, cw, data, key)),
+            ("tpfl", engine_round, (params, cw, data, keys, arrive)),
             ("fedavg_tm", fed_train.make_fedavg_tm_round(tm_cfg, fed_cfg),
              (params, data, key)),
         ):

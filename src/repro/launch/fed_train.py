@@ -18,7 +18,10 @@ CLI — run any federation scenario through `repro.fl.runtime`:
 reports per-round mean accuracy plus byte-exact upload/download totals
 (metered from the actual encoded wire buffers).  Default knobs (full
 participation, sync, float32) reproduce the legacy ``federation.run``
-metrics exactly.
+metrics exactly.  ``--mesh clients:8`` runs the same round shard-mapped
+over an 8-device ``clients`` mesh axis (bit-identical to in-process —
+the conformance suite pins it; spawn virtual CPU devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
 """
 from __future__ import annotations
 
@@ -120,6 +123,31 @@ def abstract_fed_inputs(tm_cfg: tm.TMConfig, fed_cfg: federation.FedConfig,
     return params, cw, data, key
 
 
+def abstract_round_inputs(tm_cfg: tm.TMConfig, fed_cfg: federation.FedConfig,
+                          mesh, **data_kw):
+    """ShapeDtypeStructs for the engine's shard-mapped sync round
+    (:func:`repro.fl.runtime.executors.build_sharded_round`): the
+    :func:`abstract_fed_inputs` set (single round key included, for the
+    legacy-builder baselines) plus per-client rng keys and the arrival
+    mask, and the client axis name the round collectives run over.
+    What the dry-run lowers on the production mesh."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.sharding import rules
+
+    params, cw, data, key = abstract_fed_inputs(tm_cfg, fed_cfg, mesh,
+                                                **data_kw)
+    n = fed_cfg.n_clients
+    b = rules._fsdp_or_none(mesh, n)
+
+    def sds(shape, dtype, spec):
+        return jax.ShapeDtypeStruct(shape, dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    keys = sds((n, 2), jnp.uint32, P(b, None))
+    arrive = sds((n,), jnp.bool_, P(b))
+    return params, cw, data, key, keys, arrive, b
+
+
 # ---------------------------------------------------------------------------
 # CLI: scenario runner on the federated runtime
 # ---------------------------------------------------------------------------
@@ -171,6 +199,14 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--async-min-uploads", type=int, default=4)
     ap.add_argument("--buffer-capacity", type=int, default=64)
     ap.add_argument("--staleness-discount", type=float, default=0.5)
+    # execution backend
+    ap.add_argument("--mesh", default=None, metavar="clients[:N]",
+                    help="run the sync round shard-mapped over a clients "
+                         "mesh axis of N devices (default: all visible)")
+    ap.add_argument("--collective", default="gather",
+                    choices=("gather", "psum"),
+                    help="mesh aggregation lowering: gather is bit-exact "
+                         "with in-process, psum is C*m collective bytes")
     # checkpointing
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -193,6 +229,14 @@ def main(argv: list[str] | None = None) -> dict:
     fed_cfg = federation.FedConfig(n_clients=args.clients,
                                    rounds=args.rounds,
                                    local_epochs=args.local_epochs)
+    mesh = None
+    if args.mesh is not None:
+        from repro.launch.mesh import make_clients_mesh
+        name, _, count = args.mesh.partition(":")
+        if name != "clients":
+            raise SystemExit(f"--mesh must be clients[:N], got {args.mesh!r}")
+        mesh = make_clients_mesh(int(count) if count else None)
+
     rt_cfg = RuntimeConfig(
         rounds=args.rounds,
         scheduler=SchedulerConfig(
@@ -204,10 +248,12 @@ def main(argv: list[str] | None = None) -> dict:
         async_min_uploads=args.async_min_uploads,
         buffer_capacity=args.buffer_capacity,
         staleness_discount=args.staleness_discount,
+        backend="shardmap" if mesh is not None else "inprocess",
+        mesh_collective=args.collective,
         checkpoint_dir=args.ckpt_dir, checkpoint_every=args.ckpt_every)
 
     strategy = _build_strategy(args.strategy, tm_cfg, fed_cfg, dcfg)
-    engine = Engine(strategy, data, rt_cfg)
+    engine = Engine(strategy, data, rt_cfg, mesh=mesh)
 
     state, remaining = None, None
     if args.resume and args.ckpt_dir:
@@ -222,15 +268,24 @@ def main(argv: list[str] | None = None) -> dict:
                   flush=True)
             if remaining == 0:
                 print("nothing to do: run already complete", flush=True)
-                return {"final_accuracy": None, "upload_bytes": 0,
+                return {"final_accuracy": None, "acc_per_round": [],
+                        "upload_bytes": 0,
                         "download_bytes_broadcast": 0,
                         "download_bytes_per_client": 0}
 
+    where = "in-process" if mesh is None else \
+        f"shard_map over {engine.executor.n_shards}-device clients mesh " \
+        f"({args.collective})"
     print(f"{args.strategy} on {args.dataset} exp{args.experiment}: "
           f"{args.clients} clients, K={engine.scheduler.k}/round, "
           f"dropout={args.dropout}, codec={args.codec}"
-          f"{'+sparse' if args.sparse else ''}, mode={args.mode}",
-          flush=True)
+          f"{'+sparse' if args.sparse else ''}, mode={args.mode}, "
+          f"backend={where}", flush=True)
+    if args.sampling == "weighted" and engine.scheduler.p is not None:
+        p = engine.scheduler.p
+        print(f"weighted sampling from partition sizes: "
+              f"p in [{float(p.min()):.4f}, {float(p.max()):.4f}]",
+              flush=True)
     state, reports = engine.run(key, state=state, rounds=remaining)
 
     up = down_bc = down_pc = 0
@@ -255,6 +310,7 @@ def main(argv: list[str] | None = None) -> dict:
           f"download_per_client={down_pc}B ({down_pc/1e6:.4f}MB)",
           flush=True)
     return {"final_accuracy": float(reports[-1].mean_accuracy),
+            "acc_per_round": [float(r.mean_accuracy) for r in reports],
             "upload_bytes": up, "download_bytes_broadcast": down_bc,
             "download_bytes_per_client": down_pc}
 

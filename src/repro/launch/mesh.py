@@ -32,6 +32,23 @@ def make_host_mesh() -> Mesh:
     return compat.make_mesh((1, 1), ("data", "model"))
 
 
+def make_clients_mesh(n_devices: int | None = None,
+                      axis: str = "clients") -> Mesh:
+    """1-D ``clients`` mesh for the runtime engine's shard-mapped round
+    (``fed_train --mesh clients:N``): sampled clients live one block per
+    shard and aggregation is a single masked collective.  ``None`` takes
+    every visible device."""
+    devices = jax.devices()
+    n = len(devices) if n_devices is None else n_devices
+    if n < 1 or n > len(devices):
+        raise ValueError(
+            f"requested {n_devices} mesh devices but "
+            f"{len(devices)} are visible (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=N for virtual ones)")
+    import numpy as np
+    return Mesh(np.asarray(devices[:n]), (axis,))
+
+
 # TPU v5e hardware constants (per chip) — §Roofline sources.
 PEAK_FLOPS_BF16 = 197e12          # FLOP/s
 HBM_BW = 819e9                    # B/s

@@ -1,0 +1,359 @@
+"""Federation conformance suite — the permanent contract that the
+shard-mapped engine == the in-process engine == the legacy
+``federation.run`` loop, bit for bit, for every (strategy, codec,
+participation) cell; plus the property-level contracts underneath it
+(codec roundtrips and byte metering, scheduler sampling distributions).
+
+The suite runs on whatever devices are visible.  To exercise a real
+multi-device ``clients`` mesh (every shard_map boundary, padding path,
+and collective actually partitioned) spawn virtual CPU devices *before*
+jax initializes — this is CI's second matrix job:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python -m pytest -q tests/test_fl_conformance.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import federation, tm
+from repro.data import partition, synthetic
+from repro.fl import masked_collectives
+from repro.fl.runtime import (CodecConfig, Engine, FedAvgStrategy,
+                              IFCAStrategy, RuntimeConfig, Scheduler,
+                              SchedulerConfig, TPFLStrategy, codec)
+from repro.sharding import compat
+
+TM_CFG = tm.TMConfig(n_classes=10, n_clauses=20, n_features=100,
+                     n_states=63, s=5.0, T=20)
+N_CLIENTS = 8
+ROUNDS = 2
+
+STRATEGIES = {
+    "tpfl": lambda: TPFLStrategy(TM_CFG, local_epochs=1),
+    "fedavg": lambda: FedAvgStrategy(n_features=100, n_classes=10,
+                                     n_hidden=16, local_epochs=1),
+    "fedprox": lambda: FedAvgStrategy(n_features=100, n_classes=10,
+                                      n_hidden=16, local_epochs=1,
+                                      prox_mu=0.1),
+    "ifca": lambda: IFCAStrategy(n_features=100, n_classes=10, n_hidden=16,
+                                 k=3, local_epochs=1),
+}
+WIRES = {
+    "float32": CodecConfig("float32"),
+    "int8": CodecConfig("int8"),
+    "int4_sparse": CodecConfig("int4", sparse=True),
+}
+PARTICIPATION = {
+    "full": SchedulerConfig(),
+    "partial": SchedulerConfig(participation=0.5, dropout=0.25),
+}
+
+
+@pytest.fixture(scope="module")
+def data():
+    x, y, dcfg = synthetic.make_dataset("synthmnist", 1500,
+                                        jax.random.PRNGKey(0), side=10)
+    return partition.partition(
+        x, y, dcfg.n_classes, n_clients=N_CLIENTS, experiment=5,
+        key=jax.random.PRNGKey(1), n_train=40, n_test=20, n_conf=20)
+
+
+def _run(strategy, data, sched, wire, backend, collective="gather",
+         rounds=ROUNDS):
+    cfg = RuntimeConfig(rounds=rounds, scheduler=sched, codec=wire,
+                        backend=backend, mesh_collective=collective)
+    engine = Engine(strategy, data, cfg)
+    return engine.run(jax.random.PRNGKey(0))
+
+
+def _assert_bitwise_equal_runs(sa, ra, sb, rb):
+    """Every observable of the two runs is bit-identical: reports and
+    final population/server state."""
+    for a, b in zip(ra, rb):
+        assert float(a.mean_accuracy) == float(b.mean_accuracy)
+        assert (np.asarray(a.per_client_accuracy)
+                == np.asarray(b.per_client_accuracy)).all()
+        assert (np.asarray(a.assignment) == np.asarray(b.assignment)).all()
+        assert (np.asarray(a.cluster_counts)
+                == np.asarray(b.cluster_counts)).all()
+        assert a.upload_bytes == b.upload_bytes
+        assert a.download_bytes_broadcast == b.download_bytes_broadcast
+        assert a.download_bytes_per_client == b.download_bytes_per_client
+        assert a.aggregated_uploads == b.aggregated_uploads
+    assert (np.asarray(sa.server) == np.asarray(sb.server)).all()
+    for la, lb in zip(jax.tree.leaves(sa.client_state),
+                      jax.tree.leaves(sb.client_state)):
+        assert (np.asarray(la) == np.asarray(lb)).all()
+
+
+# ---------------------------------------------------------------------------
+# the bit-parity matrix: shard-mapped == in-process
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("part_name", sorted(PARTICIPATION))
+@pytest.mark.parametrize("wire_name", sorted(WIRES))
+@pytest.mark.parametrize("strat_name", sorted(STRATEGIES))
+def test_shardmap_round_is_bit_identical_to_inprocess(
+        strat_name, wire_name, part_name, data):
+    sched = PARTICIPATION[part_name]
+    wire = WIRES[wire_name]
+    sa, ra = _run(STRATEGIES[strat_name](), data, sched, wire, "inprocess")
+    sb, rb = _run(STRATEGIES[strat_name](), data, sched, wire, "shardmap")
+    _assert_bitwise_equal_runs(sa, ra, sb, rb)
+
+
+def test_three_way_parity_with_legacy_federation_run(data):
+    """The original contract, now three-way: legacy loop == in-process
+    engine == shard-mapped engine for the default TPFL configuration."""
+    fed = federation.FedConfig(n_clients=N_CLIENTS, rounds=ROUNDS,
+                               local_epochs=1)
+    key = jax.random.PRNGKey(0)
+    k_init, k_rounds = jax.random.split(key)
+    st = federation.init_state(TM_CFG, fed, k_init)
+    legacy = []
+    for r in range(fed.rounds):
+        st, m = federation.run_round(
+            st, data, jax.random.fold_in(k_rounds, r), TM_CFG, fed)
+        legacy.append(m)
+
+    for backend in ("inprocess", "shardmap"):
+        end, hist = federation.run(
+            data, TM_CFG, fed, key,
+            runtime_cfg=RuntimeConfig(backend=backend))
+        for a, b in zip(legacy, hist):
+            assert float(a.mean_accuracy) == float(b.mean_accuracy)
+            assert (np.asarray(a.assignment)
+                    == np.asarray(b.assignment)).all()
+            assert (np.asarray(a.cluster_counts)
+                    == np.asarray(b.cluster_counts)).all()
+            assert a.upload_bytes == b.upload_bytes
+            assert a.download_bytes_broadcast == b.download_bytes_broadcast
+            assert a.download_bytes_per_client == b.download_bytes_per_client
+        assert (np.asarray(st.client_params.weights)
+                == np.asarray(end.client_params.weights)).all()
+        assert (np.asarray(st.cluster_weights)
+                == np.asarray(end.cluster_weights)).all()
+
+
+def test_psum_collective_matches_within_float_tolerance(data):
+    """The communication-optimal psum lowering reduces in shard order, so
+    it is allclose- (not bit-) equal; discrete observables still match."""
+    sa, ra = _run(TPFLStrategy(TM_CFG, local_epochs=1), data,
+                  SchedulerConfig(), WIRES["float32"], "inprocess")
+    sb, rb = _run(TPFLStrategy(TM_CFG, local_epochs=1), data,
+                  SchedulerConfig(), WIRES["float32"], "shardmap",
+                  collective="psum")
+    for a, b in zip(ra, rb):
+        assert (np.asarray(a.assignment) == np.asarray(b.assignment)).all()
+        assert (np.asarray(a.cluster_counts)
+                == np.asarray(b.cluster_counts)).all()
+        assert a.upload_bytes == b.upload_bytes
+    assert np.allclose(np.asarray(sa.server), np.asarray(sb.server),
+                       atol=1e-4)
+
+
+def test_sharded_weighted_mean_matches_host_form():
+    """The staleness-discounted sharded mean (one psum) agrees with the
+    host ``clustered_weighted_mean`` it lowers."""
+    n_dev = len(jax.devices())
+    mesh = compat.make_mesh((n_dev,), ("clients",))
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    n, d, c = 4 * n_dev, 7, 3
+    key = jax.random.PRNGKey(0)
+    vals = jax.random.normal(key, (n, d))
+    slots = jax.random.randint(jax.random.fold_in(key, 1), (n,), -1, c)
+    stale = jax.random.randint(jax.random.fold_in(key, 2), (n,), 0, 3)
+    weights = 0.5 ** stale.astype(jnp.float32)
+
+    host = masked_collectives.clustered_weighted_mean(vals, slots, weights, c)
+    means, total = jax.jit(shard_map(
+        lambda v, s, w: masked_collectives.clustered_weighted_mean_sharded(
+            v, s, w, c, "clients"),
+        mesh=mesh, in_specs=(P("clients"), P("clients"), P("clients")),
+        out_specs=(P(), P()), check_rep=False))(vals, slots, weights)
+    assert np.allclose(np.asarray(host), np.asarray(means), atol=1e-5)
+    onehot = jax.nn.one_hot(slots, c) * weights[:, None]
+    assert np.allclose(np.asarray(total), np.asarray(onehot.sum(0)),
+                       atol=1e-5)
+
+
+def test_fed_train_mesh_cli_checkpoint_resume_bit_identical(tmp_path):
+    """`fed_train --mesh clients:D` end to end: an uninterrupted mesh run
+    and a checkpoint/resume cycle produce bit-identical final metrics."""
+    from repro.launch import fed_train
+    base = ["--clients", "8", "--rounds", "4", "--local-epochs", "1",
+            "--clauses", "16", "--mesh", f"clients:{len(jax.devices())}"]
+    full = fed_train.main(base)
+
+    ck = ["--ckpt-dir", str(tmp_path), "--ckpt-every", "2"]
+    interrupted = fed_train.main(base[:3] + ["2"] + base[4:] + ck)
+    resumed = fed_train.main(base + ck + ["--resume"])      # rounds 2-3
+    # per-round accuracies of interrupted+resumed == the uninterrupted
+    # run, float-for-float, and the resumed segment's byte totals equal
+    # the uninterrupted run's second half (uniform rounds)
+    assert (interrupted["acc_per_round"] + resumed["acc_per_round"]
+            == full["acc_per_round"])
+    assert resumed["upload_bytes"] * 2 == full["upload_bytes"]
+    assert (resumed["download_bytes_per_client"] * 2
+            == full["download_bytes_per_client"])
+
+
+# ---------------------------------------------------------------------------
+# wire-codec property tests (randomized shapes/values, fixed seed)
+# ---------------------------------------------------------------------------
+
+def test_codec_float32_roundtrip_bit_exact_random_shapes():
+    rng = np.random.default_rng(7)
+    cfg = CodecConfig("float32")
+    for _ in range(40):
+        m = int(rng.integers(1, 512))
+        vec = (rng.normal(scale=10.0 ** rng.integers(-3, 4), size=m)
+               .astype(np.float32))
+        buf = codec.encode(vec, cfg)
+        assert len(buf) == 4 * m            # metered bytes == len(buffer)
+        assert (codec.decode(buf, m, cfg) == vec).all()
+
+
+@pytest.mark.parametrize("name", ["int8", "int4"])
+def test_codec_quantized_error_bounded_by_half_step(name):
+    rng = np.random.default_rng(11)
+    cfg = CodecConfig(name)
+    for _ in range(40):
+        m = int(rng.integers(1, 512))
+        vec = (rng.normal(scale=10.0 ** rng.integers(-2, 3), size=m)
+               .astype(np.float32))
+        buf = codec.encode(vec, cfg)
+        expect = 4 + (m if name == "int8" else (m + 1) // 2)
+        assert len(buf) == expect           # metered bytes == len(buffer)
+        out = codec.decode(buf, m, cfg)
+        assert np.abs(out - vec).max() <= codec.roundtrip_tolerance(vec, cfg)
+
+
+@pytest.mark.parametrize("name", codec.CODECS)
+def test_codec_sparse_delta_decode_encode_idempotent(name):
+    """A vector that already survived the wire re-encodes to itself —
+    decode∘encode is a projection (bit-exact fixed point)."""
+    rng = np.random.default_rng(13)
+    cfg = CodecConfig(name, sparse=True)
+    for _ in range(25):
+        m = int(rng.integers(1, 300))
+        ref = rng.normal(scale=10.0, size=m).astype(np.float32)
+        mask = rng.random(m) < 0.3
+        vec = (ref + mask * rng.normal(scale=2.0, size=m)
+               ).astype(np.float32)
+        once = codec.decode(codec.encode(vec, cfg, ref=ref), m, cfg,
+                            ref=ref)
+        twice = codec.decode(codec.encode(once, cfg, ref=ref), m, cfg,
+                             ref=ref)
+        assert (twice == once).all()
+
+
+def test_engine_metered_bytes_equal_reencoded_buffer_lengths(data):
+    """The engine's upload meter is Σ (4-byte slot id + len(frame)) of
+    the actual frames — recompute it from the wire-visible uploads."""
+    strat = TPFLStrategy(TM_CFG, local_epochs=1)
+    for wire in (CodecConfig("float32"), CodecConfig("int8"),
+                 CodecConfig("int8", sparse=True)):
+        engine = Engine(strat, data, RuntimeConfig(rounds=1, codec=wire))
+        state = engine.init(jax.random.PRNGKey(0))
+        part = engine.scheduler.sample(0, jax.random.PRNGKey(1))
+        keys = jax.random.split(jax.random.PRNGKey(1), N_CLIENTS)
+        _, vecs, slots = engine.executor.train(
+            strat, state.client_state, state.server, data, keys)
+        _, up_bytes = engine._wire_uplink(
+            state.server, vecs, slots, np.asarray(part.active))
+        expect = 0
+        np_vecs, np_slots = np.asarray(vecs), np.asarray(slots)
+        for c in range(N_CLIENTS):
+            for j in range(np_slots.shape[1]):
+                s = int(np_slots[c, j])
+                if s < 0:
+                    continue
+                ref = np.asarray(state.server)[s] if wire.sparse else None
+                expect += 4 + len(codec.encode(np_vecs[c, j], wire,
+                                               ref=ref))
+        assert up_bytes == expect
+
+
+# ---------------------------------------------------------------------------
+# scheduler distribution tests
+# ---------------------------------------------------------------------------
+
+def _chi_square(counts: np.ndarray, expected: np.ndarray) -> float:
+    return float(((counts - expected) ** 2 / expected).sum())
+
+
+def test_uniform_sampling_frequencies_match_expectation():
+    n, rounds = 16, 300
+    s = Scheduler(SchedulerConfig(participation=0.25), n_clients=n)
+    counts = np.zeros(n)
+    for r in range(rounds):
+        counts[np.asarray(s.sample(r, jax.random.PRNGKey(r)).idx)] += 1
+    expected = np.full(n, rounds * s.k / n)
+    # df = 15; the 99.99% quantile is ≈ 44 — generous but not vacuous
+    assert _chi_square(counts, expected) < 60.0
+
+
+def test_weighted_sampling_driven_by_partition_sizes(data):
+    """The fix under test: weighted sampling uses the real per-client
+    dataset sizes recorded by ``partition`` (previously plumbed through
+    ``Engine(client_weights=...)`` but never connected)."""
+    assert data.sizes is not None and int(data.sizes.min()) >= 1
+    assert len(set(np.asarray(data.sizes).tolist())) > 1  # heterogeneous
+
+    engine = Engine(
+        TPFLStrategy(TM_CFG, local_epochs=1), data,
+        RuntimeConfig(scheduler=SchedulerConfig(
+            participation=1 / N_CLIENTS, sampling="weighted")))
+    sizes = np.asarray(data.sizes, np.float64)
+    assert np.allclose(np.asarray(engine.scheduler.p), sizes / sizes.sum(),
+                       atol=1e-6)
+
+    rounds = 600
+    counts = np.zeros(N_CLIENTS)
+    for r in range(rounds):
+        part = engine.scheduler.sample(r, jax.random.PRNGKey(1000 + r))
+        counts[np.asarray(part.idx)] += 1    # K = 1 → frequencies ∝ p
+    expected = rounds * sizes / sizes.sum()
+    assert _chi_square(counts, np.maximum(expected, 1.0)) < 50.0
+
+
+def test_round_robin_covers_population_in_ceil_n_over_k_rounds():
+    for n, k_frac in ((8, 0.5), (10, 0.4), (12, 0.25)):
+        cfg = SchedulerConfig(participation=k_frac, sampling="round_robin")
+        s = Scheduler(cfg, n_clients=n)
+        need = -(-n // s.k)                  # ⌈N/K⌉
+        seen = set()
+        for r in range(need):
+            seen.update(np.asarray(
+                s.sample(r, jax.random.PRNGKey(r)).idx).tolist())
+        assert seen == set(range(n))
+
+
+def test_staleness_never_exceeds_max_staleness():
+    s = Scheduler(SchedulerConfig(straggler=0.7, max_staleness=3),
+                  n_clients=32)
+    for r in range(50):
+        st = np.asarray(s.sample(r, jax.random.PRNGKey(r)).staleness)
+        assert ((st >= 0) & (st <= 3)).all()
+
+
+def test_async_buffer_never_holds_an_upload_older_than_max_staleness(data):
+    """Engine-level: every buffered upload matures within max_staleness
+    rounds of the round that sent it."""
+    max_staleness = 2
+    engine = Engine(
+        TPFLStrategy(TM_CFG, local_epochs=1), data,
+        RuntimeConfig(rounds=3, aggregation="async",
+                      async_min_uploads=10 ** 6,
+                      scheduler=SchedulerConfig(straggler=1.0,
+                                                max_staleness=max_staleness)))
+    state = engine.init(jax.random.PRNGKey(0))
+    for r in range(3):
+        state, _ = engine.run_round(state, jax.random.PRNGKey(r))
+        ready = np.asarray(state.buf_ready)[np.asarray(state.buf_valid)]
+        assert (ready <= r + max_staleness).all()
