@@ -28,6 +28,25 @@ lowers its aggregation through the two server-matrix forms below:
   Weighted, so it also covers the async engine's staleness-discounted
   means (``discount**staleness``); float reduction order differs from
   the host einsum, so it is allclose-, not bit-, equal.
+* :func:`buffered_weighted_mean_sharded` — the async device-buffer
+  form: the (capacity, m) upload buffer is *replicated* round state, so
+  each shard takes its block of buffer rows and the mean lowers through
+  :func:`clustered_weighted_mean_sharded` unchanged (same C·m psum).
+
+Sharding contract (who holds what)
+----------------------------------
+The two host forms (:func:`clustered_mean`,
+:func:`clustered_weighted_mean`) take fully materialized arrays — no
+mesh, no collective; they are also the per-shard *reference math* the
+sharded forms must agree with.  The ``*_sharded`` / ``*_gathered``
+forms run **inside** ``shard_map`` over ``axis_name``: their
+``local_*`` arguments are one shard's block (leading axis =
+K/n_shards), ``prev`` and ``n_clusters`` are replicated, and the return
+values are replicated on every shard (an all_gather or psum is the only
+cross-shard edge).  :func:`buffered_weighted_mean_sharded` is the one
+exception on the input side: its ``vals``/``slots``/``weights`` are the
+*replicated* buffer lanes, and the function slices the shard-local
+block itself.
 """
 from __future__ import annotations
 
@@ -122,6 +141,40 @@ def clustered_weighted_mean_sharded(local_vals: jnp.ndarray,
     total = jax.lax.psum(onehot.sum(0), axis_name)     # (C,)
     means = sums / jnp.maximum(total[:, None], 1e-9)
     return means, total
+
+
+def buffered_weighted_mean_sharded(vals: jnp.ndarray, slots: jnp.ndarray,
+                                   weights: jnp.ndarray, n_clusters: int,
+                                   axis_name: str, n_shards: int
+                                   ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Inside shard_map: the async buffer's staleness-discounted mean.
+
+    ``vals`` (capacity, m) / ``slots`` / ``weights`` are the device
+    buffer's lanes, **replicated** on every shard (the buffer is global
+    round state, not per-client).  Each shard slices its contiguous
+    block of ``ceil(capacity / n_shards)`` rows (tail-padded with slot
+    −1 / weight 0, which the mask ignores) and the reduction is then
+    exactly :func:`clustered_weighted_mean_sharded` — one psum of the
+    (C, m) accumulator, C·m collective bytes per device regardless of
+    buffer capacity.  Shard-order reduction ⇒ allclose-, not bit-,
+    equal to the host :func:`clustered_weighted_mean`.
+
+    Returns ``(means, total_weight)``, both replicated.
+    """
+    cap = vals.shape[0]
+    blk = -(-cap // n_shards)
+    pad = blk * n_shards - cap
+    if pad:
+        vals = jnp.concatenate(
+            [vals, jnp.zeros((pad,) + vals.shape[1:], vals.dtype)])
+        slots = jnp.concatenate([slots, jnp.full((pad,), -1, slots.dtype)])
+        weights = jnp.concatenate(
+            [weights, jnp.zeros((pad,), weights.dtype)])
+    i = jax.lax.axis_index(axis_name)
+    v = jax.lax.dynamic_slice_in_dim(vals, i * blk, blk)
+    s = jax.lax.dynamic_slice_in_dim(slots, i * blk, blk)
+    w = jax.lax.dynamic_slice_in_dim(weights, i * blk, blk)
+    return clustered_weighted_mean_sharded(v, s, w, n_clusters, axis_name)
 
 
 def clustered_mean_sharded(local_val: jnp.ndarray, my_cluster: jnp.ndarray,

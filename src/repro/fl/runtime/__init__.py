@@ -11,24 +11,28 @@ The subsystem that replaces the monolithic ``federation.run`` loop:
   wire encoding of the uploaded vectors, with byte-exact metering
   (``len(buffer)``, not arithmetic).
 * :mod:`repro.fl.runtime.engine` — the orchestrated round engine: sync
-  barrier or async buffered aggregation (fixed-capacity buffer, masked
-  validity, staleness-discounted averaging), jit-friendly static-K
-  gather/scatter of the sampled client sub-pytrees.
+  barrier or async buffered aggregation (fixed-capacity *device* buffer,
+  masked validity, staleness-discounted averaging), jit-friendly
+  static-K gather/scatter of the sampled client sub-pytrees.
 * :mod:`repro.fl.runtime.executors` — where a round's compute runs: the
   in-process vmap backend, or the shard-mapped ``clients``-mesh backend
-  whose aggregation is a single masked collective (bit-identical to
-  in-process; pinned by ``tests/test_fl_conformance.py``).
+  whose aggregation — sync masked mean *and* the async buffered update —
+  is a single masked collective (bit-identical to in-process; pinned by
+  ``tests/test_fl_conformance.py``).
 * :mod:`repro.fl.runtime.checkpointing` — round-granular save/resume on
-  top of ``repro.checkpoint.ckpt``.
+  top of ``repro.checkpoint.ckpt`` (the async buffer lanes are part of
+  the state pytree, so async runs resume bit-identically too).
 
 See ``README.md`` next to this file for the backend architecture and
-how to run the conformance matrix locally.
+how to run the conformance matrix locally, and ``docs/`` at the repo
+root for the subsystem architecture and the async device-buffer design.
 """
 from repro.fl.runtime.codec import CodecConfig          # noqa: F401
 from repro.fl.runtime.engine import (                   # noqa: F401
     BACKENDS, Engine, EngineState, RoundReport, RuntimeConfig)
 from repro.fl.runtime.executors import (                # noqa: F401
-    COLLECTIVES, InProcessExecutor, ShardMapExecutor, build_sharded_round)
+    COLLECTIVES, InProcessExecutor, ShardMapExecutor,
+    build_sharded_async_update, build_sharded_round)
 from repro.fl.runtime.scheduler import (                # noqa: F401
     Participation, Scheduler, SchedulerConfig)
 from repro.fl.runtime.strategy import (                 # noqa: F401

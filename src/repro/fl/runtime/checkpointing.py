@@ -1,11 +1,16 @@
 """Round-granular checkpoint/resume for the federated engine.
 
 Thin layer over :mod:`repro.checkpoint.ckpt`: an :class:`EngineState` is
-one pytree (client population, server matrix, async buffer, round
-counter), so a checkpoint is a single msgpack tensor store named by the
-round it starts.  Because the engine keys round r with
-``fold_in(k_rounds, r)`` on the *absolute* round index, a resumed run is
-bit-identical to the uninterrupted one.
+one pytree (client population, server matrix, the six async
+device-buffer lanes, round counter), so a checkpoint is a single
+msgpack tensor store named by the round it starts.  Because the engine
+keys round r with ``fold_in(k_rounds, r)`` on the *absolute* round
+index, a resumed run is bit-identical to the uninterrupted one — and
+because the buffer lanes (payloads, slot ids, maturity rounds,
+staleness weights, validity, insertion order) ride in the same pytree,
+that holds for *async* runs too: uploads that were in flight at the
+checkpoint mature in the resumed run exactly as they would have
+(pinned by the conformance suite's async mesh resume test).
 
     engine = Engine(strategy, data, cfg)
     like = engine.init(jax.random.PRNGKey(0))     # structure template

@@ -38,6 +38,26 @@ barrier; an entry matures at round ``r + staleness``.  As soon as
 them with staleness-discounted weights (``discount ** staleness``) — the
 FedAsync-style weighted mean — and invalidates the consumed entries.  On
 overflow the oldest entry is evicted (counted in the round report).
+
+The buffer is *device* state: six fixed-capacity lanes carried in
+:class:`EngineState` (so checkpoints capture it and async resume is
+bit-identical), updated by one compiled masked program per round — the
+insert/evict scan and the maturity gate live in
+:mod:`repro.fl.runtime.executors`, and under ``backend="shardmap"`` the
+whole update runs inside ``shard_map`` on the ``clients`` mesh axis
+with the staleness-discounted mean lowered through
+:mod:`repro.fl.masked_collectives`.  ``async_buffer="host"`` keeps the
+original numpy insert loop as the in-process reference the conformance
+suite pins the device path against, bit for bit.  See
+``docs/async-runtime.md`` for the lane layout and design.
+
+Sharding contract: the engine itself never runs inside ``shard_map`` —
+it holds replicated state (``server``, the buffer lanes, round index)
+plus client-major arrays (``client_state``, data, per-client keys) and
+hands them to the executor, which decides whether client-major means
+"vmapped on one device" or "one block per mesh shard".  Everything the
+engine reads back from an executor (server, counts, report scalars) is
+replicated/host-visible.
 """
 from __future__ import annotations
 
@@ -70,6 +90,7 @@ class RuntimeConfig:
     async_min_uploads: int = 4        # B — aggregate once B uploads matured
     buffer_capacity: int = 64         # fixed-capacity async upload buffer
     staleness_discount: float = 0.5   # matured weight = discount**staleness
+    async_buffer: str = "device"      # device (compiled) | host (reference)
     backend: str = "inprocess"        # inprocess | shardmap
     mesh_axis: str = "clients"        # shard_map axis clients live on
     mesh_collective: str = "gather"   # gather (bit-exact) | psum (C·m bytes)
@@ -84,10 +105,13 @@ class RuntimeConfig:
         if self.mesh_collective not in COLLECTIVES:
             raise ValueError(
                 f"unknown mesh_collective {self.mesh_collective!r}")
-        if self.backend == "shardmap" and self.aggregation == "async":
+        if self.async_buffer not in ("device", "host"):
+            raise ValueError(f"unknown async_buffer {self.async_buffer!r}")
+        if self.backend == "shardmap" and self.aggregation == "async" \
+                and self.async_buffer == "host":
             raise ValueError(
-                "async buffered aggregation is in-process only — the "
-                "buffer is host state (see ROADMAP follow-ups)")
+                "the host-buffered async reference is in-process only — "
+                "the shard-mapped backend runs async_buffer='device'")
 
 
 class EngineState(NamedTuple):
@@ -145,6 +169,16 @@ class Engine:
         # nothing (the dominant configuration for every benchmark)
         self._identity = (self.scheduler.k == self.n
                           and cfg.scheduler.sampling == "uniform")
+        # discount**staleness lookup for the async device buffer,
+        # precomputed with Python double-precision pow and cast once —
+        # the same double→float32 each host insert performs, so the
+        # compiled path can't drift an ulp from the reference
+        self._discount = jnp.asarray(np.asarray(
+            [cfg.staleness_discount ** s
+             for s in range(cfg.scheduler.max_staleness + 1)], np.float32))
+        # (server, roundtripped rows) of the latest broadcast — reused
+        # by _wire_tx_server so lossy codecs roundtrip each server once
+        self._tx_cache = None
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -223,9 +257,14 @@ class Engine:
             _, down_bc, down_pc = self._wire_downlink(
                 server, counts, arrive, applied)
         else:
-            # (2) local work on the K sampled clients
+            # (2) local work on the K sampled clients.  Training starts
+            # from the codec-roundtripped broadcast rows — what a client
+            # actually holds after a lossy downlink — not the
+            # aggregator's full-precision state (identity wire: same
+            # thing, zero cost).
             new_sub, vecs, slots = self.executor.train(
-                self.strategy, sub_cs, state.server, sub_data, keys)
+                self.strategy, sub_cs, self._wire_tx_server(state.server),
+                sub_data, keys)
 
             # (3) the wire: encode → meter → decode
             dec, up_bytes = self._wire_uplink(state.server, vecs, slots,
@@ -236,9 +275,12 @@ class Engine:
                 server, counts = self.executor.masked_mean(
                     self.strategy, dec, slots, jnp.asarray(arrive),
                     state.server)
+            elif self.cfg.async_buffer == "host":
+                server, counts, n_agg, n_buf, n_evict, buf = \
+                    self._aggregate_async_host(state, dec, slots, part, r)
             else:
                 server, counts, n_agg, n_buf, n_evict, buf = \
-                    self._aggregate_async(state, dec, slots, part, r)
+                    self._aggregate_async(state, dec, slots, part)
 
             # (5) broadcast + scatter + evaluate.  A slot row is only
             # pushed to clients when it actually received an aggregate
@@ -326,6 +368,46 @@ class Engine:
                 dec[c, j] = decode(frame, np_vecs.shape[2], cfg, ref=ref)
         return jnp.asarray(dec), total
 
+    def _roundtrip_rows(self, server):
+        """Encode→decode every server row through the *dense* wire codec
+        (delta coding is upload-only) — what any receiver of a broadcast
+        actually holds.  Returns ``(rx_rows, frame_lengths)``; float32
+        is a bit-exact identity, so it skips the host round-trip and
+        meters arithmetically (frame = 4·d bytes, codec-pinned)."""
+        dense = CodecConfig(self.cfg.codec.name, sparse=False)
+        if dense.name == "float32":
+            return server, [4 * int(server.shape[1])] * int(server.shape[0])
+        np_server = np.asarray(server, np.float32)
+        rx = np.zeros_like(np_server)
+        frame_len = []
+        for s in range(np_server.shape[0]):
+            frame = encode(np_server[s], dense)
+            frame_len.append(len(frame))
+            rx[s] = decode(frame, np_server.shape[1], dense)
+        return jnp.asarray(rx), frame_len
+
+    def _wire_tx_server(self, server):
+        """The server matrix as the *clients* hold it: every row
+        roundtripped through the dense codec, because the rows a client
+        trains from arrived over last round's (possibly lossy)
+        broadcast.  Metering is unaffected — download bytes are billed
+        by :meth:`_wire_downlink` when the rows are pushed; this only
+        stops ``client_step`` reading precision the wire never carried
+        (see docs/async-runtime.md, byte metering).
+
+        ``state.server`` entering round r+1 is the very array
+        :meth:`_wire_downlink` roundtripped at the end of round r, so
+        the downlink's result is cached by identity and the host
+        encode/decode loop runs once per server matrix, not twice."""
+        if self._wire_is_identity():
+            return server
+        cached = self._tx_cache
+        if cached is not None and cached[0] is server:
+            return cached[1]
+        rx, _ = self._roundtrip_rows(server)
+        self._tx_cache = (server, rx)
+        return rx
+
     def _wire_downlink(self, server, counts, arrive, applied):
         """Run the broadcast through the wire too: every slot row is
         encoded (dense — delta coding is upload-only), metered, and
@@ -334,22 +416,10 @@ class Engine:
         ``down_bc`` is one frame per populated slot; ``down_pc`` is the
         per-client accounting over the frames receiving participants
         actually apply (legacy §6.7 accounting)."""
-        dense = CodecConfig(self.cfg.codec.name, sparse=False)
         np_counts = np.asarray(counts)
-        if dense.name == "float32":
-            # bit-exact identity wire: meter arithmetically, skip the
-            # per-row host encode/decode (frame = 4·d bytes exactly)
-            rx_arr = server
-            frame_len = [4 * int(server.shape[1])] * int(server.shape[0])
-        else:
-            np_server = np.asarray(server, np.float32)
-            rx = np.zeros_like(np_server)
-            frame_len = []
-            for s in range(np_server.shape[0]):
-                frame = encode(np_server[s], dense)
-                frame_len.append(len(frame))
-                rx[s] = decode(frame, np_server.shape[1], dense)
-            rx_arr = jnp.asarray(rx)
+        rx_arr, frame_len = self._roundtrip_rows(server)
+        if not self._wire_is_identity():
+            self._tx_cache = (server, rx_arr)   # next round trains from it
         down_bc = sum(frame_len[s] for s in range(len(frame_len))
                       if np_counts[s] > 0)
         if self.strategy.downloads == "all_slots":
@@ -359,9 +429,38 @@ class Engine:
                           for s in np.asarray(applied).ravel() if s >= 0)
         return rx_arr, down_bc, down_pc
 
-    def _aggregate_async(self, state, dec, slots, part: Participation, r):
-        """Buffered aggregation: insert this round's uploads, then fold in
-        every matured entry once ``async_min_uploads`` are available."""
+    def _aggregate_async(self, state, dec, slots, part: Participation):
+        """Device-buffered aggregation (the production path): flatten
+        this round's uploads into lanes — payload, slot id, maturity
+        round ``r + staleness``, ``discount**staleness`` weight,
+        validity — and hand them with the carried buffer to the
+        executor's one compiled insert→gate→mean program.  In-process
+        that is a single jitted update; shard-mapped the uploads stay
+        sharded on the mesh axis and the mean is a masked collective.
+        Bit-identical to :meth:`_aggregate_async_host`, pinned by the
+        conformance suite."""
+        k, j = slots.shape
+        active = jnp.asarray(part.active)
+        stale = jnp.asarray(part.staleness, jnp.int32)
+        flat = lambda a: jnp.broadcast_to(a[:, None], (k, j)).reshape(-1)
+        up = (dec.reshape(k * j, -1).astype(jnp.float32),
+              slots.reshape(-1).astype(jnp.int32),
+              state.round_idx + flat(stale),
+              self._discount[flat(stale)],
+              flat(active) & (slots.reshape(-1) >= 0))
+        server, counts, n_agg, n_buf, n_evict, buf = \
+            self.executor.async_update(
+                self.strategy, self._buf_of(state), up, state.round_idx,
+                state.server, self.cfg.async_min_uploads)
+        return (server, counts, int(n_agg), int(n_buf), int(n_evict), buf)
+
+    def _aggregate_async_host(self, state, dec, slots, part: Participation,
+                              r):
+        """Host-buffered aggregation (``async_buffer="host"``): the
+        original numpy insert loop, kept verbatim as the executable
+        reference the device path is pinned against — insert this
+        round's uploads, then fold in every matured entry once
+        ``async_min_uploads`` are available."""
         cfg = self.cfg
         vecs = np.asarray(state.buf_vecs).copy()
         bslots = np.asarray(state.buf_slots).copy()

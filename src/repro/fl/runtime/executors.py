@@ -18,10 +18,25 @@ per-slot mean, broadcast-apply + evaluation) to a ``RoundExecutor``:
   compiled sharded program (:func:`build_sharded_round`, also what the
   dry-run lowers on the production mesh).
 
+Both executors also run the **async buffered update** as one compiled
+program (:func:`_buffer_insert` → maturity gate →
+staleness-discounted mean): the fixed-capacity upload buffer is device
+state carried in ``EngineState`` (see ``docs/async-runtime.md`` for the
+lane layout), the insert/evict loop is a ``lax.scan`` of masked
+single-row updates, and the gate/mean are branchless ``where`` selects
+— no host round-trips.  Shard-mapped, the per-shard uploads are
+all_gathered into canonical client order (the buffer is global round
+state, so every shard replays the identical insert), and the mean
+lowers through ``masked_collectives`` — host-form einsum for
+``gather`` (bit-exact), :func:`buffered_weighted_mean_sharded` for
+``psum``.
+
 The conformance suite (``tests/test_fl_conformance.py``) pins
 shard-mapped == in-process == legacy ``federation.run`` bit-for-bit for
-every (strategy, codec, participation) cell; anything that changes
-per-client key derivation, reduction shapes, or merge order breaks it.
+every (strategy, codec, participation) cell — and device-buffered ==
+host-buffered == shard-mapped for the async mode; anything that changes
+per-client key derivation, reduction shapes, insert order, or merge
+order breaks it.
 
 Sampled-K padding: shard_map needs the leading axis divisible by the
 mesh axis size, so executors pad K (and N for evaluation) up to the
@@ -30,6 +45,30 @@ next multiple with inert rows — repeated row 0 for client state/data,
 back off.  Padded rows are masked out of the collective *and* trimmed
 from the reduction shape (``n_valid``) so the float summation order
 matches the unpadded in-process einsum exactly.
+
+Sharding contract, program by program
+-------------------------------------
+Client-major arrays (client state, per-client data, rng keys, slot
+ids, arrival masks, uploads) are sharded ``P(axis)`` — one contiguous
+block per shard; the server matrix, cluster counts, the async buffer
+lanes, and the round index are replicated ``P()``.
+
+* ``_train_program``       — per-shard vmap of ``client_step``; server
+  replicated in, per-shard (state, uploads) out.  No collective.
+* ``_agg_program``         — per-shard uploads in, replicated (server,
+  counts) out via **one** ``all_gather`` (gather mode) or **one**
+  ``psum`` of the (C, m) accumulator (psum mode).
+* ``_apply_program``       — per-shard broadcast-apply/merge; server
+  replicated in.  No collective.
+* ``_eval_program``        — per-shard vmap of ``evaluate``.  No
+  collective.
+* ``_fused_program``       — the four above fused (identity wire):
+  per-shard in/out except the replicated (server, counts); the same
+  single aggregation collective in the middle.
+* ``_async_update_program`` / ``build_sharded_async_update`` — uploads
+  per-shard in, everything else replicated both ways; one
+  ``all_gather`` per upload lane (canonical insert order), plus the
+  ``psum`` of :func:`buffered_weighted_mean_sharded` in psum mode.
 """
 from __future__ import annotations
 
@@ -101,6 +140,14 @@ class InProcessExecutor:
 
     def evaluate(self, strategy, cs, x_test, y_test):
         return jax.vmap(strategy.evaluate)(cs, x_test, y_test)
+
+    def async_update(self, strategy, buf, up, round_idx, prev,
+                     min_uploads: int):
+        """Insert this round's uploads into the device buffer and fold
+        in the matured entries — one jitted program on the default
+        device (buffer and uploads both unsharded)."""
+        return _async_update_program(strategy.n_slots, min_uploads, buf,
+                                     up, round_idx, prev)
 
     def fused_sync_round(self, strategy, sub_cs, server, sub_data, keys,
                          arrive):
@@ -268,6 +315,172 @@ def _fused_program(strategy, mesh, axis, collective, n_valid,
 
 
 # ---------------------------------------------------------------------------
+# the async buffered update (device buffer, one compiled program)
+# ---------------------------------------------------------------------------
+#
+# The buffer is six fixed-capacity lanes carried in EngineState —
+# payloads (cap, d) plus slot-id / maturity-round / staleness-weight /
+# validity / insertion-seq lanes (cap,).  Everything below is pure jax:
+# per-shard it is *replicated* state (in_specs P()), because insertion
+# is a global sequential decision every shard must agree on.
+
+def _buffer_insert(buf, up_vecs, up_slots, up_ready, up_weight, up_valid):
+    """Sequential masked insert of one round's uploads — the compiled
+    form of the host insert loop, bit-identical by construction.
+
+    Replicated per shard (no collective): a ``lax.scan`` over the U
+    uploads where each step picks the first free lane
+    (``argmin(valid)``), or on overflow evicts the oldest *insertion*
+    (``argmin(seq over valid)``), and applies a masked single-row
+    update (``up_valid=False`` rows are no-ops, so padding is inert).
+    Returns ``(new_buf, evicted_count)``.
+    """
+    intmax = jnp.iinfo(jnp.int32).max
+    vecs, slots, ready, weight, valid, seq = buf
+    next_seq = jnp.where(valid.any(),
+                         jnp.where(valid, seq, -1).max() + 1,
+                         0).astype(jnp.int32)
+
+    def step(carry, up):
+        vecs, slots, ready, weight, valid, seq, nseq, evicted = carry
+        v, s, rdy, w, ins = up
+        full = valid.all()
+        i_free = jnp.argmin(valid)                    # first invalid lane
+        i_old = jnp.argmin(jnp.where(valid, seq, intmax))
+        i = jnp.where(full, i_old, i_free)
+        vecs = vecs.at[i].set(jnp.where(ins, v, vecs[i]))
+        slots = slots.at[i].set(jnp.where(ins, s, slots[i]))
+        ready = ready.at[i].set(jnp.where(ins, rdy, ready[i]))
+        weight = weight.at[i].set(jnp.where(ins, w, weight[i]))
+        seq = seq.at[i].set(jnp.where(ins, nseq, seq[i]))
+        valid = valid.at[i].set(valid[i] | ins)
+        evicted = evicted + (ins & full).astype(jnp.int32)
+        nseq = nseq + ins.astype(jnp.int32)
+        return (vecs, slots, ready, weight, valid, seq, nseq, evicted), None
+
+    carry = (vecs, slots, ready, weight, valid, seq, next_seq,
+             jnp.zeros((), jnp.int32))
+    carry, _ = jax.lax.scan(
+        step, carry, (up_vecs, up_slots, up_ready, up_weight, up_valid))
+    vecs, slots, ready, weight, valid, seq, _, evicted = carry
+    return (vecs, slots, ready, weight, valid, seq), evicted
+
+
+def _async_gate_and_mean(buf, round_idx, n_slots, min_uploads, prev,
+                         mean_fn):
+    """Maturity gate + staleness-discounted mean, branchless.
+
+    An entry is *mature* once ``round_idx`` reaches its ready round; it
+    *contributes* if its discount weight is nonzero.  The
+    ``async_min_uploads`` gate is a masked predicate: below threshold
+    every slot id is masked to −1, so counts are zero, the server keeps
+    ``prev`` row-for-row, and the buffer is left untouched — the same
+    observable as the host engine's early return, with no host branch.
+    ``mean_fn(vals, slots, weights) → (C, d)`` is the backend's
+    lowering of the weighted mean (host einsum, or a mesh collective).
+    Returns ``(server, counts, n_agg, n_buffered, new_buf)``.
+    """
+    vecs, slots, ready, weight, valid, seq = buf
+    mature = valid & (ready <= round_idx)
+    # zero-discount entries can never move the weighted mean — count
+    # them as consumed noise, not as aggregated uploads (host parity)
+    contrib = mature & (weight > 0.0)
+    gate = mature.sum() >= min_uploads
+    s = jnp.where(contrib & gate, slots, -1)
+    w = jnp.where(contrib & gate, weight, 0.0)
+    mean = mean_fn(vecs, s, w)
+    counts = jax.nn.one_hot(s, n_slots, dtype=jnp.float32).sum(0)
+    server = jnp.where(counts[:, None] > 0, mean, prev)
+    valid = jnp.where(gate, valid & ~mature, valid)
+    n_agg = jnp.where(gate, contrib.sum(), 0).astype(jnp.int32)
+    new_buf = (vecs, slots, ready, weight, valid, seq)
+    return server, counts, n_agg, valid.sum().astype(jnp.int32), new_buf
+
+
+@partial(jax.jit, static_argnums=(0, 1))
+def _async_update_program(n_slots, min_uploads, buf, up, round_idx, prev):
+    """In-process async round update: insert → gate → host-form mean,
+    one jitted program (no host round-trips between the stages)."""
+    buf, evicted = _buffer_insert(buf, *up)
+    server, counts, n_agg, n_buf, buf = _async_gate_and_mean(
+        buf, round_idx, n_slots, min_uploads, prev,
+        lambda v, s, w: masked_collectives.clustered_weighted_mean(
+            v, s, w, n_slots))
+    return server, counts, n_agg, n_buf, evicted, buf
+
+
+def build_sharded_async_update(strategy, mesh, axis_name: str = "clients",
+                               collective: str = "gather",
+                               min_uploads: int = 4,
+                               n_valid: int | None = None):
+    """The async buffered update as one shard-mappable callable —
+    ``(buf, (up_vecs, up_slots, up_ready, up_weight, up_valid),
+    round_idx, prev) → (server, counts, n_agg, n_buf, evicted, buf)``.
+
+    Uploads are sharded over ``axis_name`` (one block per shard, like
+    the sync round); the buffer lanes, ``round_idx`` and ``prev`` are
+    replicated, and so is everything returned.  Inside the body one
+    tiled ``all_gather`` per upload lane reassembles the round's
+    uploads in canonical client order (trimmed to ``n_valid`` to drop
+    mesh padding), every shard replays the identical insert scan, and
+    the mean lowers per ``collective``:
+
+    * ``gather`` — the host-form ``clustered_weighted_mean`` on the
+      replicated buffer: zero extra collectives, **bit-exact** with the
+      in-process program (the conformance suite's async contract);
+    * ``psum`` — :func:`masked_collectives.buffered_weighted_mean_sharded`,
+      each shard reducing its block of buffer rows into the C·m psum
+      accumulator (allclose, shard-order reduction).
+
+    This is also what ``fed_dryrun`` lowers on the production mesh to
+    price the async round's collectives.
+    """
+    if collective not in COLLECTIVES:
+        raise ValueError(f"unknown collective {collective!r}")
+    n_slots = strategy.n_slots
+    # clients may live on one mesh axis ("clients") or a tuple of FSDP
+    # axes (the dry-run's ("pod", "data")); collectives take either,
+    # shard count is the product
+    names = axis_name if isinstance(axis_name, tuple) else (axis_name,)
+    n_shards = 1
+    for a in names:
+        n_shards *= int(mesh.shape[a])
+    spec = P(axis_name)
+
+    def body(buf, up, round_idx, prev):
+        gathered = tuple(
+            jax.lax.all_gather(a, axis_name, tiled=True)[:n_valid]
+            for a in up)
+        buf, evicted = _buffer_insert(buf, *gathered)
+        if collective == "gather":
+            def mean_fn(v, s, w):
+                return masked_collectives.clustered_weighted_mean(
+                    v, s, w, n_slots)
+        else:
+            def mean_fn(v, s, w):
+                return masked_collectives.buffered_weighted_mean_sharded(
+                    v, s, w, n_slots, axis_name, n_shards)[0]
+        server, counts, n_agg, n_buf, buf = _async_gate_and_mean(
+            buf, round_idx, n_slots, min_uploads, prev, mean_fn)
+        return server, counts, n_agg, n_buf, evicted, buf
+
+    # check_rep=False: every shard computes the same replicated insert /
+    # gate from the same gathered uploads (the 0.4.x checker cannot see
+    # through all_gather→scan→einsum to infer that)
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(), spec, P(), P()),
+                     out_specs=P(), check_rep=False)
+
+
+@partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5))
+def _async_sharded_program(n_slots_strategy, mesh, axis, collective,
+                           min_uploads, n_valid, buf, up, round_idx, prev):
+    return build_sharded_async_update(
+        n_slots_strategy, mesh, axis_name=axis, collective=collective,
+        min_uploads=min_uploads, n_valid=n_valid)(buf, up, round_idx, prev)
+
+
+# ---------------------------------------------------------------------------
 # shard_map backend
 # ---------------------------------------------------------------------------
 
@@ -327,6 +540,24 @@ class ShardMapExecutor:
             _pad_rows(x_test, self.n_shards),
             _pad_rows(y_test, self.n_shards))
         return acc[:n]
+
+    def async_update(self, strategy, buf, up, round_idx, prev,
+                     min_uploads: int):
+        """The shard-mapped async buffered update: uploads sharded over
+        ``axis`` (padded to the mesh with inert ``valid=False`` rows),
+        buffer lanes / round index / server replicated, one compiled
+        program per (strategy, upload-count) — see
+        :func:`build_sharded_async_update`."""
+        uv, us, ur, uw, ua = up
+        u = uv.shape[0]
+        padded = (_pad_rows(uv, self.n_shards),
+                  _pad_rows(us, self.n_shards, fill=-1),
+                  _pad_rows(ur, self.n_shards, fill=0),
+                  _pad_rows(uw, self.n_shards, fill=0.0),
+                  _pad_rows(ua, self.n_shards, fill=False))
+        return _async_sharded_program(
+            strategy, self.mesh, self.axis, self.collective, min_uploads,
+            u, buf, padded, round_idx, prev)
 
     def fused_sync_round(self, strategy, sub_cs, server, sub_data, keys,
                          arrive):

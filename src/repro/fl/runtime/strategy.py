@@ -24,6 +24,14 @@ ignored by aggregation and broadcast.
 Phase-D implementations — ``repro.core.federation`` vmaps them, so the
 legacy driver and the runtime engine share one source of truth.
 
+The ``server`` matrix a ``client_step`` receives is what the client
+*holds*, not what the aggregator stores: under a lossy wire codec the
+engine hands in the codec-roundtripped broadcast rows
+(``Engine._wire_tx_server``), so strategies that warm-start from global
+state (FedAvg/FedProx/IFCA) train from exactly the precision the wire
+carried.  TPFL deletes ``server`` unread — personalization never
+depends on pre-round global state.
+
 Per-shard lowering contract
 ---------------------------
 The engine's shard-mapped backend (``runtime/executors.py``) runs

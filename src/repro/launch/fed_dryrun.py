@@ -13,6 +13,11 @@ keeps the legacy full-state tree-mean builder as the baseline.  The
 collective-bytes delta between the two programs is the paper's
 communication claim measured in the partitioned HLO.
 
+Also lowered: the engine's *async* buffered update
+(`build_sharded_async_update` — device-buffer insert, maturity gate,
+staleness-discounted psum mean), priced on the same mesh, so the
+heavy-traffic straggler regime has its collective bytes on record too.
+
   PYTHONPATH=src python -m repro.launch.fed_dryrun [--multi-pod]
 """
 
@@ -32,7 +37,7 @@ ARTIFACTS = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts"
 
 
 def run(multi_pod: bool = False, n_clients: int = 256,
-        clauses: int = 300) -> dict:
+        clauses: int = 300, buffer_capacity: int = 512) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     tm_cfg = tm.TMConfig(n_classes=10, n_clauses=clauses, n_features=784,
                          n_states=127, s=10.0, T=1000)
@@ -45,17 +50,29 @@ def run(multi_pod: bool = False, n_clients: int = 256,
         raise SystemExit(f"{n_clients} clients do not divide the mesh's "
                          f"FSDP axes — pick a multiple")
 
-    from repro.fl.runtime.executors import build_sharded_round
+    from repro.fl.runtime.executors import (build_sharded_async_update,
+                                            build_sharded_round)
     strategy = federation._strategy(tm_cfg, fed_cfg)
     engine_round = build_sharded_round(
         strategy, mesh, axis_name=client_axes, collective="psum",
         n_clients=n_clients)
+    # the async buffered update (device-buffer insert → maturity gate →
+    # staleness-discounted psum mean) — same builder fed_train
+    # --mode async --mesh runs, lowered here at paper scale
+    buf, up, round_idx, prev, _ = fed_train.abstract_async_inputs(
+        tm_cfg, fed_cfg, mesh, capacity=buffer_capacity,
+        j_slots=strategy.j_slots)
+    async_update = build_sharded_async_update(
+        strategy, mesh, axis_name=client_axes, collective="psum",
+        min_uploads=4, n_valid=n_clients * strategy.j_slots)
 
     out = {"mesh": "2x16x16" if multi_pod else "16x16",
-           "n_clients": n_clients, "clauses": clauses}
+           "n_clients": n_clients, "clauses": clauses,
+           "buffer_capacity": buffer_capacity}
     with compat.set_mesh(mesh):
         for name, build, args in (
             ("tpfl", engine_round, (params, cw, data, keys, arrive)),
+            ("tpfl_async", async_update, (buf, up, round_idx, prev)),
             ("fedavg_tm", fed_train.make_fedavg_tm_round(tm_cfg, fed_cfg),
              (params, data, key)),
         ):
@@ -88,5 +105,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--clients", type=int, default=256)
+    ap.add_argument("--buffer-capacity", type=int, default=512)
     args = ap.parse_args()
-    run(multi_pod=args.multi_pod, n_clients=args.clients)
+    run(multi_pod=args.multi_pod, n_clients=args.clients,
+        buffer_capacity=args.buffer_capacity)

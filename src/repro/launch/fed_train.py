@@ -21,7 +21,11 @@ participation, sync, float32) reproduce the legacy ``federation.run``
 metrics exactly.  ``--mesh clients:8`` runs the same round shard-mapped
 over an 8-device ``clients`` mesh axis (bit-identical to in-process —
 the conformance suite pins it; spawn virtual CPU devices with
-``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).  ``--mode
+async`` composes with ``--mesh``: the upload buffer is device state and
+the buffered round runs shard-mapped end-to-end (``--async-buffer
+host`` keeps the in-process numpy reference).  See
+``docs/async-runtime.md``.
 """
 from __future__ import annotations
 
@@ -148,6 +152,42 @@ def abstract_round_inputs(tm_cfg: tm.TMConfig, fed_cfg: federation.FedConfig,
     return params, cw, data, key, keys, arrive, b
 
 
+def abstract_async_inputs(tm_cfg: tm.TMConfig, fed_cfg: federation.FedConfig,
+                          mesh, capacity: int = 512, j_slots: int = 1):
+    """ShapeDtypeStructs for the engine's shard-mapped *async* buffered
+    update (:func:`repro.fl.runtime.executors.build_sharded_async_update`):
+    one round's upload lanes (``n_clients · j_slots`` rows — pass the
+    strategy's ``j_slots`` so multi-cluster sharing sizes them right)
+    sharded over the mesh's FSDP axes, the fixed-capacity device-buffer
+    lanes + server replicated.  What the dry-run lowers to price the
+    async round's collectives."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.sharding import rules
+
+    n = fed_cfg.n_clients * j_slots
+    b = rules._fsdp_or_none(mesh, n)
+
+    def sds(shape, dtype, spec):
+        return jax.ShapeDtypeStruct(shape, dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    C, m = tm_cfg.n_classes, tm_cfg.n_clauses
+    up = (sds((n, m), jnp.float32, P(b, None)),   # payload vectors
+          sds((n,), jnp.int32, P(b)),             # slot ids
+          sds((n,), jnp.int32, P(b)),             # maturity rounds
+          sds((n,), jnp.float32, P(b)),           # staleness weights
+          sds((n,), jnp.bool_, P(b)))             # validity
+    buf = (sds((capacity, m), jnp.float32, P(None, None)),
+           sds((capacity,), jnp.int32, P(None)),
+           sds((capacity,), jnp.int32, P(None)),
+           sds((capacity,), jnp.float32, P(None)),
+           sds((capacity,), jnp.bool_, P(None)),
+           sds((capacity,), jnp.int32, P(None)))
+    round_idx = sds((), jnp.int32, P())
+    prev = sds((C, m), jnp.float32, P(None, None))
+    return buf, up, round_idx, prev, b
+
+
 # ---------------------------------------------------------------------------
 # CLI: scenario runner on the federated runtime
 # ---------------------------------------------------------------------------
@@ -199,10 +239,16 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--async-min-uploads", type=int, default=4)
     ap.add_argument("--buffer-capacity", type=int, default=64)
     ap.add_argument("--staleness-discount", type=float, default=0.5)
+    ap.add_argument("--async-buffer", default="device",
+                    choices=("device", "host"),
+                    help="async upload buffer: device = one compiled "
+                         "masked update per round (works with --mesh), "
+                         "host = the numpy reference loop")
     # execution backend
     ap.add_argument("--mesh", default=None, metavar="clients[:N]",
-                    help="run the sync round shard-mapped over a clients "
-                         "mesh axis of N devices (default: all visible)")
+                    help="run the round shard-mapped over a clients mesh "
+                         "axis of N devices (default: all visible); "
+                         "composes with --mode async (device buffer)")
     ap.add_argument("--collective", default="gather",
                     choices=("gather", "psum"),
                     help="mesh aggregation lowering: gather is bit-exact "
@@ -248,6 +294,7 @@ def main(argv: list[str] | None = None) -> dict:
         async_min_uploads=args.async_min_uploads,
         buffer_capacity=args.buffer_capacity,
         staleness_discount=args.staleness_discount,
+        async_buffer=args.async_buffer,
         backend="shardmap" if mesh is not None else "inprocess",
         mesh_collective=args.collective,
         checkpoint_dir=args.ckpt_dir, checkpoint_every=args.ckpt_every)

@@ -1,0 +1,45 @@
+"""Documentation link/example integrity (the cheap half of the CI
+``docs`` job — ``tools/check_docs.py`` additionally executes every
+fenced CLI example in ``--help`` form on each push)."""
+import importlib.util
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "tools"))
+import check_docs  # noqa: E402
+
+
+def test_docs_tree_exists_and_is_indexed():
+    files = [p.relative_to(check_docs.ROOT).as_posix()
+             for p in check_docs.doc_files()]
+    assert "docs/architecture.md" in files
+    assert "docs/async-runtime.md" in files
+    assert "README.md" in files
+    assert "src/repro/fl/runtime/README.md" in files
+    # both READMEs link into the docs tree
+    top = (check_docs.ROOT / "README.md").read_text()
+    rt = (check_docs.ROOT / "src/repro/fl/runtime/README.md").read_text()
+    for readme in (top, rt):
+        assert "architecture.md" in readme
+        assert "async-runtime.md" in readme
+
+
+def test_no_dead_relative_links():
+    dead = check_docs.check_links(check_docs.doc_files())
+    assert dead == []
+
+
+def test_fenced_cli_examples_name_importable_modules():
+    """Every ``python -m X`` in the docs must resolve to a module that
+    actually exists under PYTHONPATH=src (execution is the CI docs
+    job's business — this pins against renames slipping through)."""
+    sys.path.insert(0, str(check_docs.ROOT / "src"))
+    try:
+        argvs = check_docs.example_commands(check_docs.doc_files())
+        mods = [a[2] for a in argvs if a[1] == "-m"]
+        assert "repro.launch.fed_train" in mods      # the quickstarts
+        assert "repro.launch.fed_dryrun" in mods
+        for mod in mods:
+            assert importlib.util.find_spec(mod) is not None, mod
+    finally:
+        sys.path.remove(str(check_docs.ROOT / "src"))

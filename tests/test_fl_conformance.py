@@ -203,6 +203,141 @@ def test_fed_train_mesh_cli_checkpoint_resume_bit_identical(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# the async bit-parity matrix: device buffer == host reference == shard-mapped
+# ---------------------------------------------------------------------------
+
+ASYNC_SCHED = SchedulerConfig(participation=0.75, dropout=0.25,
+                              straggler=0.5, max_staleness=2)
+
+
+def _run_async(strategy, data, backend, async_buffer="device",
+               collective="gather", capacity=5, rounds=3):
+    """Small capacity + stragglers: every async code path fires within
+    three rounds — buffering, maturity gating, aggregation, overflow
+    eviction."""
+    cfg = RuntimeConfig(rounds=rounds, scheduler=ASYNC_SCHED,
+                        aggregation="async", async_min_uploads=2,
+                        buffer_capacity=capacity, async_buffer=async_buffer,
+                        backend=backend, mesh_collective=collective)
+    return Engine(strategy, data, cfg).run(jax.random.PRNGKey(0))
+
+
+def _assert_async_reports_equal(ra, rb):
+    for a, b in zip(ra, rb):
+        assert a.aggregated_uploads == b.aggregated_uploads
+        assert a.buffered_uploads == b.buffered_uploads
+        assert a.evicted_uploads == b.evicted_uploads
+
+
+@pytest.mark.parametrize("strat_name", ["tpfl", "ifca"])
+def test_async_device_buffer_bit_identical_to_host_reference(
+        strat_name, data):
+    """The tentpole contract: the compiled device-buffer path (insert
+    scan, masked maturity gate, weighted mean) reproduces the original
+    host numpy loop bit for bit — same accuracy, assignment, byte
+    totals, buffer occupancy, and final state including every buffer
+    lane."""
+    sa, ra = _run_async(STRATEGIES[strat_name](), data, "inprocess",
+                        async_buffer="host")
+    sb, rb = _run_async(STRATEGIES[strat_name](), data, "inprocess",
+                        async_buffer="device")
+    _assert_bitwise_equal_runs(sa, ra, sb, rb)
+    _assert_async_reports_equal(ra, rb)
+    assert sum(r.evicted_uploads for r in ra) > 0   # overflow exercised
+    for lane in ("buf_vecs", "buf_slots", "buf_ready", "buf_weight",
+                 "buf_valid", "buf_seq"):
+        assert (np.asarray(getattr(sa, lane))
+                == np.asarray(getattr(sb, lane))).all(), lane
+
+
+@pytest.mark.parametrize("strat_name", ["tpfl", "ifca"])
+def test_async_shardmap_gather_bit_identical_to_inprocess(strat_name, data):
+    """backend="shardmap" + aggregation="async" (the configuration that
+    used to raise): the shard-mapped buffered round — uploads gathered
+    in canonical order, replicated insert replay, host-form mean —
+    matches the in-process device path bit for bit."""
+    sa, ra = _run_async(STRATEGIES[strat_name](), data, "inprocess")
+    sb, rb = _run_async(STRATEGIES[strat_name](), data, "shardmap")
+    _assert_bitwise_equal_runs(sa, ra, sb, rb)
+    _assert_async_reports_equal(ra, rb)
+    for lane in ("buf_vecs", "buf_slots", "buf_ready", "buf_weight",
+                 "buf_valid", "buf_seq"):
+        assert (np.asarray(getattr(sa, lane))
+                == np.asarray(getattr(sb, lane))).all(), lane
+
+
+def test_async_shardmap_psum_matches_within_float_tolerance(data):
+    """The C·m psum lowering of the buffered mean
+    (``buffered_weighted_mean_sharded``) reduces in shard order:
+    discrete observables stay exact, the server is allclose."""
+    sa, ra = _run_async(TPFLStrategy(TM_CFG, local_epochs=1), data,
+                        "inprocess")
+    sb, rb = _run_async(TPFLStrategy(TM_CFG, local_epochs=1), data,
+                        "shardmap", collective="psum")
+    _assert_async_reports_equal(ra, rb)
+    for a, b in zip(ra, rb):
+        assert (np.asarray(a.assignment) == np.asarray(b.assignment)).all()
+        assert a.upload_bytes == b.upload_bytes
+    assert np.allclose(np.asarray(sa.server), np.asarray(sb.server),
+                       atol=1e-4)
+    assert (np.asarray(sa.buf_valid) == np.asarray(sb.buf_valid)).all()
+
+
+def test_buffered_weighted_mean_sharded_matches_host_form():
+    """The replicated-buffer psum variant slices shard blocks out of the
+    same lanes the host form reduces — means must agree allclose for
+    any capacity, including one that does not divide the mesh."""
+    n_dev = len(jax.devices())
+    mesh = compat.make_mesh((n_dev,), ("clients",))
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    cap, d, c = 4 * n_dev + 3, 6, 4          # deliberately non-divisible
+    key = jax.random.PRNGKey(3)
+    vals = jax.random.normal(key, (cap, d))
+    slots = jax.random.randint(jax.random.fold_in(key, 1), (cap,), -1, c)
+    weights = jax.random.uniform(jax.random.fold_in(key, 2), (cap,))
+
+    host = masked_collectives.clustered_weighted_mean(vals, slots, weights, c)
+    means, total = jax.jit(shard_map(
+        lambda v, s, w: masked_collectives.buffered_weighted_mean_sharded(
+            v, s, w, c, "clients", n_dev),
+        mesh=mesh, in_specs=(P(), P(), P()),
+        out_specs=(P(), P()), check_rep=False))(vals, slots, weights)
+    assert np.allclose(np.asarray(host), np.asarray(means), atol=1e-5)
+    onehot = jax.nn.one_hot(slots, c) * weights[:, None]
+    assert np.allclose(np.asarray(total), np.asarray(onehot.sum(0)),
+                       atol=1e-5)
+
+
+def test_fed_train_mesh_async_checkpoint_resume_bit_identical(tmp_path):
+    """`fed_train --mode async --mesh clients:D` with a checkpoint cycle:
+    the buffer lanes are part of the state pytree, so an interrupted
+    async mesh run resumes bit-identically (pending buffered uploads
+    mature in the resumed half exactly as in the uninterrupted run)."""
+    from repro.launch import fed_train
+    base = ["--clients", "8", "--rounds", "4", "--local-epochs", "1",
+            "--clauses", "16", "--mode", "async", "--straggler", "0.5",
+            "--async-min-uploads", "2", "--buffer-capacity", "5",
+            "--mesh", f"clients:{len(jax.devices())}"]
+    full = fed_train.main(base)
+
+    ck = ["--ckpt-dir", str(tmp_path), "--ckpt-every", "2"]
+    interrupted = fed_train.main(base[:3] + ["2"] + base[4:] + ck)
+    resumed = fed_train.main(base + ck + ["--resume"])      # rounds 2-3
+    assert (interrupted["acc_per_round"] + resumed["acc_per_round"]
+            == full["acc_per_round"])
+
+
+def test_shardmap_plus_host_buffer_is_rejected():
+    """The numpy reference loop cannot run on the mesh — the config
+    catches the combination instead of silently degrading."""
+    with pytest.raises(ValueError, match="host-buffered"):
+        RuntimeConfig(backend="shardmap", aggregation="async",
+                      async_buffer="host")
+
+
+# ---------------------------------------------------------------------------
 # wire-codec property tests (randomized shapes/values, fixed seed)
 # ---------------------------------------------------------------------------
 

@@ -202,12 +202,14 @@ def test_async_buffered_aggregation_applies_mature_uploads():
     assert float(reports[-1].mean_accuracy) > 0.4
 
 
-def test_async_below_threshold_broadcasts_nothing():
+@pytest.mark.parametrize("buffer", ["device", "host"])
+def test_async_below_threshold_broadcasts_nothing(buffer):
     """Rounds where the buffer stays below B must leave both the server
     and the clients' locally trained weights untouched."""
     data = _data()
     eng = _tpfl_engine(data, RuntimeConfig(
-        rounds=1, aggregation="async", async_min_uploads=10 ** 6))
+        rounds=1, aggregation="async", async_min_uploads=10 ** 6,
+        async_buffer=buffer))
     state = eng.init(jax.random.PRNGKey(0))
     new_state, rep = eng.run_round(state, jax.random.PRNGKey(1))
     assert rep.aggregated_uploads == 0
@@ -218,13 +220,15 @@ def test_async_below_threshold_broadcasts_nothing():
     assert float(rep.mean_accuracy) > 0.5
 
 
-def test_async_overflow_evicts_oldest_insertion_first():
+@pytest.mark.parametrize("buffer", ["device", "host"])
+def test_async_overflow_evicts_oldest_insertion_first(buffer):
     """4 uploads into a capacity-2 buffer: the two oldest are evicted,
     the two newest survive."""
     data = _data()
     eng = _tpfl_engine(data, RuntimeConfig(
         rounds=1, aggregation="async", async_min_uploads=10 ** 6,
-        buffer_capacity=2, scheduler=SchedulerConfig(participation=0.5)))
+        buffer_capacity=2, async_buffer=buffer,
+        scheduler=SchedulerConfig(participation=0.5)))
     state = eng.init(jax.random.PRNGKey(0))
     new_state, rep = eng.run_round(state, jax.random.PRNGKey(1))
     assert rep.evicted_uploads == 2
@@ -232,13 +236,14 @@ def test_async_overflow_evicts_oldest_insertion_first():
     assert new_state.buf_seq.tolist() == [2, 3]      # newest insertions
 
 
-def test_async_zero_staleness_weight_never_populates_a_slot():
+@pytest.mark.parametrize("buffer", ["device", "host"])
+def test_async_zero_staleness_weight_never_populates_a_slot(buffer):
     """discount=0 + every upload stale → zero aggregate weight: the
     server must keep its previous rows rather than zeroing them."""
     data = _data()
     eng = _tpfl_engine(data, RuntimeConfig(
         rounds=1, aggregation="async", async_min_uploads=1,
-        staleness_discount=0.0,
+        staleness_discount=0.0, async_buffer=buffer,
         scheduler=SchedulerConfig(straggler=1.0, max_staleness=1)))
     state = eng.init(jax.random.PRNGKey(0))
     seeded = state._replace(server=jnp.full_like(state.server, 7.0))
@@ -249,6 +254,94 @@ def test_async_zero_staleness_weight_never_populates_a_slot():
     assert rep1.aggregated_uploads == 0          # weight-0 ≠ contribution
     assert (new_state.server == seeded.server).all()
     assert (rep1.assignment == -1).all()         # nothing broadcast
+
+
+@pytest.mark.parametrize("buffer", ["device", "host"])
+def test_async_maturing_exactly_at_min_uploads_aggregates(buffer):
+    """The maturity gate is ≥, not >: a round whose matured count lands
+    exactly on ``async_min_uploads`` aggregates all of them and drains
+    the buffer."""
+    data = _data()   # 8 clients, full participation, j = 1 → 8 uploads
+    eng = _tpfl_engine(data, RuntimeConfig(
+        rounds=1, aggregation="async", async_min_uploads=8,
+        async_buffer=buffer))
+    state = eng.init(jax.random.PRNGKey(0))
+    new_state, rep = eng.run_round(state, jax.random.PRNGKey(1))
+    assert rep.aggregated_uploads == 8
+    assert rep.buffered_uploads == 0
+    assert not bool(np.asarray(new_state.buf_valid).any())
+    # one fewer upload must NOT aggregate
+    eng9 = _tpfl_engine(data, RuntimeConfig(
+        rounds=1, aggregation="async", async_min_uploads=9,
+        async_buffer=buffer))
+    _, rep9 = eng9.run_round(eng9.init(jax.random.PRNGKey(0)),
+                             jax.random.PRNGKey(1))
+    assert rep9.aggregated_uploads == 0
+    assert rep9.buffered_uploads == 8
+
+
+def test_async_entries_can_outlive_max_staleness_ungated():
+    """An upload whose maturity round has long passed (buffer age >
+    max_staleness because the B-threshold never fired) must stay valid
+    with its original discount weight — age in the buffer is not
+    staleness, and nothing silently expires."""
+    data = _data()
+    eng = _tpfl_engine(data, RuntimeConfig(
+        rounds=4, aggregation="async", async_min_uploads=10 ** 6,
+        buffer_capacity=64,
+        scheduler=SchedulerConfig(participation=0.25, straggler=1.0,
+                                  max_staleness=2)))
+    state = eng.init(jax.random.PRNGKey(0))
+    for r in range(4):
+        state, rep = eng.run_round(state, jax.random.fold_in(
+            jax.random.PRNGKey(0), r))
+        assert rep.aggregated_uploads == 0
+    valid = np.asarray(state.buf_valid)
+    ready = np.asarray(state.buf_ready)[valid]
+    weight = np.asarray(state.buf_weight)[valid]
+    assert valid.sum() == 4 * 2                 # K=2 per round, none lost
+    # round-0 entries matured at ready ≤ 2 — two rounds “overdue” by now
+    assert int(ready.min()) <= 2 < int(state.round_idx)
+    assert (weight >= 0.5 ** 2 - 1e-7).all()    # discount from staleness,
+    assert (weight <= 1.0).all()                # never from buffer age
+
+
+def test_client_step_consumes_codec_roundtripped_broadcast():
+    """ROADMAP fix: local training must start from the broadcast rows a
+    client would actually hold after a lossy downlink, not the
+    aggregator's full-precision state.  Spy on the server matrix the
+    engine hands the executor's train stage."""
+    from repro.fl.runtime import codec as codec_mod
+    data = _data(n_clients=4)
+    wire = CodecConfig("int8")
+    eng = Engine(FedAvgStrategy(n_features=100, n_classes=10, n_hidden=16,
+                                local_epochs=1),
+                 data, RuntimeConfig(rounds=1, codec=wire))
+    state = eng.init(jax.random.PRNGKey(0))
+    seen = {}
+    orig = eng.executor.train
+
+    def spy(strategy, cs, server, d, keys):
+        seen["server"] = np.asarray(server)
+        return orig(strategy, cs, server, d, keys)
+
+    eng.executor.train = spy
+    eng.run_round(state, jax.random.PRNGKey(1))
+
+    full = np.asarray(state.server, np.float32)
+    dense = CodecConfig("int8")
+    expect = np.stack([
+        codec_mod.decode(codec_mod.encode(full[s], dense), full.shape[1],
+                         dense) for s in range(full.shape[0])])
+    assert (seen["server"] == expect).all()
+    assert (expect != full).any()        # int8 really did lose precision
+
+
+def test_wire_tx_server_is_identity_for_dense_float32():
+    data = _data(n_clients=4)
+    eng = _tpfl_engine(data, RuntimeConfig(rounds=1))
+    server = jnp.arange(12, dtype=jnp.float32).reshape(3, 4)
+    assert eng._wire_tx_server(server) is server
 
 
 def test_engine_run_rounds_override_completes_remainder():

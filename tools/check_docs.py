@@ -1,0 +1,122 @@
+"""Documentation checks — so the docs tree can't rot silently.
+
+Two checks over the repo's markdown (``README.md``, ``docs/**``, and
+every ``README.md`` under ``src/``):
+
+* **links** — every relative markdown link ``[text](path)`` must point
+  at a file or directory that exists (anchors and absolute URLs are
+  skipped).  Catches renames/moves that orphan the docs.
+* **examples** — every ``python -m <module>`` (or ``python
+  tools/<script>``) appearing in a fenced ```` ```bash ```` block is
+  executed in ``--help`` form with ``PYTHONPATH=src``: the module must
+  import and its argparse surface must answer.  Catches deleted
+  modules, renamed entry points, and import-time breakage without
+  paying for a full run.
+
+CI runs both on every push (the ``docs`` job); ``tests/test_docs.py``
+runs the cheap link check inside tier-1.
+
+    python tools/check_docs.py [--links-only]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"```bash\n(.*?)```", re.DOTALL)
+_PY_M = re.compile(r"python\s+-m\s+([\w.]+)")
+_PY_SCRIPT = re.compile(r"python\s+((?:tools|benchmarks|examples)/[\w/]+\.py)")
+
+
+def doc_files() -> list[Path]:
+    files = [ROOT / "README.md"]
+    files += sorted((ROOT / "docs").glob("**/*.md"))
+    files += sorted((ROOT / "src").glob("**/README.md"))
+    return [f for f in files if f.is_file()]
+
+
+def check_links(files: list[Path]) -> list[str]:
+    """Dead relative links, as ``file -> target`` strings (empty = ok)."""
+    dead = []
+    for f in files:
+        for m in _LINK.finditer(f.read_text()):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            if not (f.parent / path).resolve().exists():
+                dead.append(f"{f.relative_to(ROOT)} -> {target}")
+    return dead
+
+
+def example_commands(files: list[Path]) -> list[list[str]]:
+    """Every distinct CLI named in a bash fence, as a ``--help`` argv."""
+    seen, argvs = set(), []
+    for f in files:
+        for block in _FENCE.finditer(f.read_text()):
+            text = block.group(1).replace("\\\n", " ")
+            for mod in _PY_M.findall(text):
+                if mod not in seen:
+                    seen.add(mod)
+                    argvs.append([sys.executable, "-m", mod, "--help"])
+            for script in _PY_SCRIPT.findall(text):
+                if script not in seen:
+                    seen.add(script)
+                    argvs.append([sys.executable, str(ROOT / script),
+                                  "--help"])
+    return argvs
+
+
+def check_examples(files: list[Path]) -> list[str]:
+    """Run each example CLI in ``--help`` form; return failures."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(ROOT / "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    failures = []
+    for argv in example_commands(files):
+        shown = " ".join(argv[1:])
+        try:
+            res = subprocess.run(argv, cwd=ROOT, env=env,
+                                 capture_output=True, text=True,
+                                 timeout=300)
+        except subprocess.TimeoutExpired:
+            failures.append(f"{shown}: timed out")
+            continue
+        if res.returncode != 0:
+            tail = (res.stderr or res.stdout).strip().splitlines()[-5:]
+            failures.append(f"{shown}: exit {res.returncode}\n  "
+                            + "\n  ".join(tail))
+        else:
+            print(f"ok: {shown}", flush=True)
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--links-only", action="store_true",
+                    help="skip executing the fenced CLI examples")
+    args = ap.parse_args(argv)
+
+    files = doc_files()
+    print(f"checking {len(files)} markdown files", flush=True)
+    problems = [f"dead link: {d}" for d in check_links(files)]
+    if not args.links_only:
+        problems += [f"broken example: {b}"
+                     for b in check_examples(files)]
+    for p in problems:
+        print(p, file=sys.stderr, flush=True)
+    print(f"{len(problems)} problem(s)", flush=True)
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
