@@ -17,9 +17,12 @@ ART = Path(__file__).resolve().parent / "artifacts"
 
 
 def run(dataset: str = "synthmnist", scale: common.Scale | None = None,
-        seed: int = 0) -> list[dict]:
+        seed: int = 0, data_dir: str | None = None,
+        encoding: str = "bool") -> list[dict]:
     scale = scale or common.Scale(rounds=3)
-    data, dcfg = common.make_fed_dataset(dataset, 5, scale, seed)
+    data, dcfg = common.make_fed_dataset(dataset, 5, scale, seed,
+                                         data_dir=data_dir,
+                                         encoding=encoding)
     tm_cfg = common.bench_tm_config(dataset, dcfg, scale)
     rows = []
     for j in (1, 2, 3):

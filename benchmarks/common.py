@@ -12,7 +12,7 @@ import dataclasses
 import jax
 
 from repro.core import tm
-from repro.data import partition, synthetic
+from repro.data.ingest import natural, registry as datasets
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,28 +41,50 @@ BENCH_TM = {
     "synthfemnist": (64, 5.0, 40),
 }
 
+# real flavours share the TM hyperparameters of their synthetic mirror
+_TM_KEY = {"mnist": "synthmnist", "fashionmnist": "synthfashion",
+           "femnist": "synthfemnist"}
+
+
+def load_pool(name: str, scale: Scale, seed: int = 0,
+              data_dir: str | None = None, encoding: str = "bool"):
+    """The encoded global Pool — depends only on (name, data_dir,
+    encoding, seed, scale geometry), so benchmarks hoist it out of
+    their per-experiment loops."""
+    return datasets.load(name, data_dir=data_dir, encoding=encoding,
+                         n_samples=scale.pool, side=scale.side, seed=seed)
+
+
+def partition_pool(pool, experiment: int, scale: Scale, seed: int = 0):
+    """Pool → ClientData at bench scale — the shared ingest dispatch
+    (natural writer split for writer-tagged pools, Dirichlet
+    otherwise), keyed the way every benchmark seeds it."""
+    return natural.partition_pool(
+        pool, n_clients=scale.n_clients, n_train=scale.n_train,
+        n_test=scale.n_test, n_conf=scale.n_conf,
+        key=jax.random.PRNGKey(seed + 1), experiment=experiment)
+
 
 def make_fed_dataset(name: str, experiment: int, scale: Scale,
-                     seed: int = 0):
-    x, y, dcfg = synthetic.make_dataset(name, scale.pool,
-                                        jax.random.PRNGKey(seed),
-                                        side=scale.side)
-    data = partition.partition(
-        x, y, dcfg.n_classes, n_clients=scale.n_clients,
-        experiment=experiment, key=jax.random.PRNGKey(seed + 1),
-        n_train=scale.n_train, n_test=scale.n_test, n_conf=scale.n_conf)
-    return data, dcfg
+                     seed: int = 0, data_dir: str | None = None,
+                     encoding: str = "bool"):
+    """(ClientData, Pool) for any registry flavour — one-shot
+    convenience over :func:`load_pool` + :func:`partition_pool`.  The
+    returned Pool carries ``n_classes`` / ``n_features`` for model
+    sizing."""
+    pool = load_pool(name, scale, seed, data_dir, encoding)
+    return partition_pool(pool, experiment, scale, seed), pool
 
 
-def bench_tm_config(name: str, dcfg, scale: Scale) -> tm.TMConfig:
-    m, s, T = BENCH_TM[name]
-    return tm.TMConfig(n_classes=dcfg.n_classes, n_clauses=m,
-                       n_features=dcfg.n_features, n_states=63, s=s, T=T)
+def bench_tm_config(name: str, pool, scale: Scale) -> tm.TMConfig:
+    m, s, T = BENCH_TM[_TM_KEY.get(name, name)]
+    return tm.TMConfig(n_classes=pool.n_classes, n_clauses=m,
+                       n_features=pool.n_features, n_states=63, s=s, T=T)
 
 
 def paper_scale_comm_mb(name: str, n_classes: int) -> dict:
     """Exact paper-scale communication formulas (Table 4/5 columns)."""
-    m, _, _ = PAPER_TM[name]
+    m, _, _ = PAPER_TM[_TM_KEY.get(name, name)]
     clients, rounds, bpw = 100, 10, 4
     tpfl_up = clients * rounds * (m * bpw + 4) / 1e6
     tpfl_down_max = n_classes * rounds * m * bpw / 1e6

@@ -21,13 +21,39 @@ from benchmarks import (ablation_multiclass, common, convergence,  # noqa: E402
 
 
 def main() -> None:
+    from repro.data.ingest import registry as datasets
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--mesh", action="store_true",
                     help="run table4/table5 federations shard-mapped "
                          "over a clients mesh of all visible devices")
+    ap.add_argument("--datasets", default="synthmnist,synthfashion",
+                    help="comma-separated table4 dataset flavours "
+                         f"(registry names: {', '.join(datasets.names())};"
+                         " table5 uses the first)")
+    ap.add_argument("--data-dir", default=None,
+                    help="ingest cache for table4/table5 (offline mirror"
+                         " / real IDX+LEAF files — docs/datasets.md); "
+                         "required for the real flavours")
+    ap.add_argument("--encoding", default="bool",
+                    help="feature encoding spec, e.g. bool | "
+                         "thermometer:4 | quantile:8")
     args = ap.parse_args()
     backend = "shardmap" if args.mesh else "inprocess"
+    wanted = [n.strip() for n in args.datasets.split(",") if n.strip()]
+    if not wanted:
+        ap.error("--datasets needs at least one registry name")
+    try:
+        table_datasets = tuple(datasets.get(n).name for n in wanted)
+    except ValueError as e:
+        ap.error(str(e))
+    if args.data_dir is None:
+        file_backed = [n for n in table_datasets
+                       if n in datasets.REAL_DATASETS]
+        if file_backed:
+            ap.error(f"--data-dir is required for the real flavours: "
+                     f"{', '.join(file_backed)}")
 
     scale = common.Scale(n_clients=10, n_train=40, n_test=20, n_conf=20,
                          rounds=2, local_epochs=1) if args.quick \
@@ -38,12 +64,16 @@ def main() -> None:
         print(row)
 
     t0 = time.time()
-    rows4 = table4_tpfl.run(scale=scale, backend=backend)
+    rows4 = table4_tpfl.run(datasets=table_datasets, scale=scale,
+                            backend=backend, data_dir=args.data_dir,
+                            encoding=args.encoding)
     print(f"table4_tpfl,{(time.time()-t0)*1e6/max(len(rows4),1):.0f},"
           f"rows={len(rows4)}")
 
     t0 = time.time()
-    rows5 = table5_comparison.run(scale=scale, backend=backend)
+    rows5 = table5_comparison.run(dataset=table_datasets[0], scale=scale,
+                                  backend=backend, data_dir=args.data_dir,
+                                  encoding=args.encoding)
     best = max(rows5, key=lambda r: r["accuracy"])
     print(f"table5_comparison,{(time.time()-t0)*1e6/max(len(rows5),1):.0f},"
           f"best={best['method']}:{best['accuracy']}")

@@ -43,12 +43,17 @@ def _run_engine_baseline(name: str, data, dcfg, bcfg, scale, key,
 
 
 def run(dataset: str = "synthmnist", scale: common.Scale | None = None,
-        seed: int = 0, backend: str = "inprocess") -> list[dict]:
+        seed: int = 0, backend: str = "inprocess",
+        data_dir: str | None = None, encoding: str = "bool") -> list[dict]:
     """``backend="shardmap"``: TPFL and the engine baselines run their
     sync rounds shard-mapped over a ``clients`` mesh (bit-identical
-    numbers; FLIS/FedTM reference rows stay in-process)."""
+    numbers; FLIS/FedTM reference rows stay in-process).  ``data_dir``
+    routes the dataset through the ingest cache — real files when
+    present, the offline mirror otherwise."""
     scale = scale or common.Scale()
-    data, dcfg = common.make_fed_dataset(dataset, 5, scale, seed)
+    data, dcfg = common.make_fed_dataset(dataset, 5, scale, seed,
+                                         data_dir=data_dir,
+                                         encoding=encoding)
     tm_cfg = common.bench_tm_config(dataset, dcfg, scale)
     rows = []
 

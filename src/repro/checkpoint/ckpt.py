@@ -54,7 +54,12 @@ def restore(path: str | pathlib.Path, like: Any,
     for path_k, leaf in leaves_like:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in path_k)
-        arr = flat[key]
+        arr = flat.get(key)
+        if arr is None:
+            raise KeyError(
+                f"checkpoint {path} lacks leaf {key!r} — it was saved "
+                f"by an older state layout; restart without --resume "
+                f"(or delete the stale checkpoint directory)")
         assert tuple(arr.shape) == tuple(leaf.shape), \
             f"shape mismatch for {key}"
         out.append(jnp.asarray(arr, dtype=leaf.dtype))

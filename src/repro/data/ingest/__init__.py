@@ -1,0 +1,28 @@
+"""Dataset ingestion: byte-exact readers, encodings, registry, partitioner.
+
+The layer between raw bytes on disk and the federated runtime:
+
+* :mod:`repro.data.ingest.idx` — the MNIST-family IDX codec, both
+  directions, gzip-aware, with sha256 cache sidecars.
+* :mod:`repro.data.ingest.leaf` — LEAF-style per-writer JSON shards
+  (FEMNIST's natural non-IID distribution format).
+* :mod:`repro.data.ingest.encode` — jit-able feature encodings
+  (booleanize / thermometer / quantile) shared by TM and MLP paths.
+* :mod:`repro.data.ingest.registry` — the ``DatasetSpec`` registry:
+  one ``load(name, data_dir)`` for every real and synthetic flavour;
+  the single source of truth for dataset names.
+* :mod:`repro.data.ingest.mirror` — the offline mirror that writes
+  genuine IDX/LEAF files from the synthetic generators, so the whole
+  parse→encode→partition path runs with no network.
+* :mod:`repro.data.ingest.natural` — writer-identity partitioning of
+  LEAF pools onto rectangular ``ClientData``.
+
+See ``docs/datasets.md`` for formats, cache layout, and how to drop in
+real data.
+"""
+from repro.data.ingest.encode import (                    # noqa: F401
+    ENCODINGS, Booleanize, Pipeline, Quantile, Thermometer)
+from repro.data.ingest.natural import (                   # noqa: F401
+    partition_pool, partition_writers)
+from repro.data.ingest.registry import (                  # noqa: F401
+    REAL_DATASETS, SYNTH_DATASETS, DatasetSpec, Pool, load, names)

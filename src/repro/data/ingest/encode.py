@@ -1,0 +1,128 @@
+"""Feature encodings: unit-scale pixels → TM-ready bits, jit-able.
+
+Every encoder is a frozen dataclass whose ``__call__`` is a pure
+function of a float array in [0, 1] (the registry normalizes raw pixel
+scales *before* the pipeline, so nothing here branches on data values
+and every transform jits).  Encoders compose via :class:`Pipeline`, and
+both the TM path (bits are the literals) and the MLP baselines (bits as
+float inputs) consume the same output, so TM-vs-MLP comparisons always
+see identical features.
+
+* :class:`Booleanize` — one bit per pixel at the paper's threshold
+  (``x >= t``; the "independent booleanization function" of §5).
+* :class:`Thermometer` — ``levels`` bits per pixel at evenly spaced
+  thresholds ``k/(levels+1)``; bit k is monotone in x and the bit count
+  per pixel equals the number of thresholds passed (pinned by tests).
+* :class:`Quantile` — thermometer with per-feature thresholds fitted at
+  the empirical quantiles of a reference pool (:meth:`Quantile.fit`),
+  so every bit fires on ~the same fraction of the data even under
+  skewed pixel distributions.
+
+Bit layout is feature-major: pixel f's ``levels`` bits are contiguous
+(``f·levels + k``), identical for Thermometer and Quantile, so encoders
+with equal level counts are drop-in interchangeable for a fixed model
+shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+ENCODINGS = ("bool", "thermometer", "quantile")
+
+
+@dataclasses.dataclass(frozen=True)
+class Booleanize:
+    threshold: float = 0.5
+
+    def out_features(self, n_in: int) -> int:
+        return n_in
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        return (x >= self.threshold).astype(jnp.uint8)
+
+
+@dataclasses.dataclass(frozen=True)
+class Thermometer:
+    levels: int = 4
+
+    @property
+    def thresholds(self) -> jnp.ndarray:
+        return (jnp.arange(self.levels, dtype=jnp.float32) + 1.0) \
+            / (self.levels + 1.0)
+
+    def out_features(self, n_in: int) -> int:
+        return n_in * self.levels
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        bits = (x[..., :, None] >= self.thresholds).astype(jnp.uint8)
+        return bits.reshape(*x.shape[:-1], x.shape[-1] * self.levels)
+
+
+@dataclasses.dataclass(frozen=True)
+class Quantile:
+    """Per-feature thermometer at fitted quantile thresholds.
+
+    ``thresholds`` is (n_features, levels); build with :meth:`fit` on
+    the global pool, then apply anywhere (the transform itself is pure
+    and jit-able — fitting is the only data-dependent step and happens
+    once, on the host, at load time)."""
+
+    thresholds: jnp.ndarray
+
+    @classmethod
+    def fit(cls, pool: jnp.ndarray, levels: int = 4) -> "Quantile":
+        qs = (jnp.arange(levels, dtype=jnp.float32) + 1.0) / (levels + 1.0)
+        th = jnp.quantile(jnp.asarray(pool, jnp.float32), qs, axis=0)
+        return cls(thresholds=th.T)          # (F, levels)
+
+    @property
+    def levels(self) -> int:
+        return int(self.thresholds.shape[1])
+
+    def out_features(self, n_in: int) -> int:
+        return n_in * self.levels
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        bits = (x[..., :, None] > self.thresholds).astype(jnp.uint8)
+        return bits.reshape(*x.shape[:-1],
+                            x.shape[-1] * self.levels)
+
+
+@dataclasses.dataclass(frozen=True)
+class Pipeline:
+    """Left-to-right composition of encoders (all pure → still jit-able)."""
+
+    steps: tuple
+
+    def out_features(self, n_in: int) -> int:
+        for step in self.steps:
+            n_in = step.out_features(n_in)
+        return n_in
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        for step in self.steps:
+            x = step(x)
+        return x
+
+
+def build(spec: str, pool: jnp.ndarray | None = None):
+    """Parse an encoding spec string into an encoder.
+
+    Accepted forms: ``bool`` / ``bool:<threshold>``,
+    ``thermometer:<levels>`` (default 4), ``quantile:<levels>`` (default
+    4; needs ``pool``, the unit-scale global pool to fit thresholds on).
+    """
+    name, _, arg = spec.partition(":")
+    if name == "bool":
+        return Booleanize(threshold=float(arg) if arg else 0.5)
+    if name == "thermometer":
+        return Thermometer(levels=int(arg) if arg else 4)
+    if name == "quantile":
+        if pool is None:
+            raise ValueError("quantile encoding needs the pool to fit on")
+        return Quantile.fit(pool, levels=int(arg) if arg else 4)
+    raise ValueError(
+        f"unknown encoding {spec!r}; choose from "
+        f"bool[:threshold] | thermometer[:levels] | quantile[:levels]")

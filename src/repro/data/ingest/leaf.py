@@ -1,0 +1,129 @@
+"""LEAF-style FEMNIST reader/writer — per-writer JSON shards.
+
+The LEAF benchmark suite (Caldas et al.) distributes FEMNIST as JSON
+shards, each holding a block of writers::
+
+    {"users":       ["f0000_14", ...],
+     "num_samples": [104, ...],
+     "user_data":   {"f0000_14": {"x": [[784 floats in [0,1]], ...],
+                                  "y": [int, ...]}, ...}}
+
+The *writer* is the natural client: each user's samples come from one
+hand, so partitioning by user reproduces the canonical natural non-IID
+split (writer = client identity) without any Dirichlet simulation.
+
+:func:`read_shards` concatenates every ``*.json`` shard under a
+directory (sorted by name, users in shard order) into one flat pool plus
+a per-sample writer id — exactly what the registry hands to the natural
+partitioner.  :func:`write_shards` is the inverse used by the offline
+mirror; pixel values are written as numbers JSON round-trips exactly
+(Python ``repr`` floats), so mirror-written shards parse back
+bit-identical.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import NamedTuple, Sequence
+
+import numpy as np
+
+from repro.data.ingest import idx
+
+SHARD_PATTERN = "all_data_*.json"
+
+
+class LeafPool(NamedTuple):
+    x: np.ndarray        # (N, F) float32 — unit-scale features, flat
+    y: np.ndarray        # (N,)  int32
+    writers: np.ndarray  # (N,)  int32 — index into ``users``
+    users: tuple         # (W,)  writer names, shard order
+
+
+class LeafFormatError(ValueError):
+    """Malformed LEAF shard: missing keys or inconsistent sample counts."""
+
+
+def write_shards(root: str | pathlib.Path, users: Sequence[str],
+                 xs: Sequence[np.ndarray], ys: Sequence[np.ndarray],
+                 writers_per_shard: int = 10,
+                 checksum: bool = True) -> list[pathlib.Path]:
+    """Write per-writer data as LEAF JSON shards under ``root``.
+
+    ``xs[i]`` is writer i's (n_i, F) feature block, ``ys[i]`` the labels.
+    Returns the shard paths (``all_data_<k>.json`` + ``.sha256``
+    sidecars)."""
+    root = pathlib.Path(root)
+    root.mkdir(parents=True, exist_ok=True)
+    paths = []
+    for k in range(0, len(users), writers_per_shard):
+        block = slice(k, k + writers_per_shard)
+        names = list(users[block])
+        shard = {
+            "users": names,
+            "num_samples": [int(len(ys[i]))
+                            for i in range(*block.indices(len(users)))],
+            "user_data": {
+                name: {"x": np.asarray(xs[i]).astype(float).tolist(),
+                       "y": np.asarray(ys[i]).astype(int).tolist()}
+                for name, i in zip(names,
+                                   range(*block.indices(len(users))))},
+        }
+        path = root / f"all_data_{k // writers_per_shard}.json"
+        path.write_text(json.dumps(shard))
+        if checksum:
+            idx.write_checksum(path)
+        paths.append(path)
+    return paths
+
+
+def read_shards(root: str | pathlib.Path, verify: bool = True) -> LeafPool:
+    """Parse every LEAF shard under ``root`` into one flat writer-tagged
+    pool.  Shards are read in sorted name order and users in shard
+    order, so the writer ids are stable across runs."""
+    root = pathlib.Path(root)
+    shards = sorted(root.glob(SHARD_PATTERN))
+    if not shards:
+        raise FileNotFoundError(
+            f"no LEAF shards ({SHARD_PATTERN}) under {root}")
+    xs, ys, writers, users = [], [], [], []
+    for path in shards:
+        raw = path.read_bytes()
+        if verify:
+            idx.verify_bytes(path, raw)     # single read, no second pass
+        shard = json.loads(raw)
+        try:
+            shard_users = shard["users"]
+            user_data = shard["user_data"]
+        except KeyError as e:
+            raise LeafFormatError(f"{path}: missing key {e}") from e
+        num_samples = shard.get("num_samples")
+        if num_samples is not None and len(num_samples) != len(shard_users):
+            raise LeafFormatError(
+                f"{path}: num_samples lists {len(num_samples)} entries "
+                f"for {len(shard_users)} users")
+        for u, name in enumerate(shard_users):
+            entry = user_data.get(name)
+            if entry is None:
+                raise LeafFormatError(
+                    f"{path}: user {name!r} listed but missing from "
+                    f"user_data")
+            x = np.asarray(entry["x"], dtype=np.float32)
+            y = np.asarray(entry["y"], dtype=np.int32)
+            if x.ndim != 2 or x.shape[0] != y.shape[0]:
+                raise LeafFormatError(
+                    f"{path}: user {name!r} has x {x.shape} vs y "
+                    f"{y.shape}")
+            if num_samples is not None and num_samples[u] != y.shape[0]:
+                raise LeafFormatError(
+                    f"{path}: user {name!r} declares {num_samples[u]} "
+                    f"samples but holds {y.shape[0]}")
+            wid = len(users)
+            users.append(name)
+            xs.append(x)
+            ys.append(y)
+            writers.append(np.full((x.shape[0],), wid, np.int32))
+    return LeafPool(x=np.concatenate(xs, axis=0),
+                    y=np.concatenate(ys, axis=0),
+                    writers=np.concatenate(writers, axis=0),
+                    users=tuple(users))

@@ -1,0 +1,112 @@
+"""Natural (writer-identity) partitioning for LEAF-style pools.
+
+FEMNIST's canonical non-IID split assigns each *writer* to a client —
+the heterogeneity is real handwriting style plus genuinely unequal
+sample counts, not a simulated Dirichlet draw.  This module maps a
+writer-tagged :class:`~repro.data.ingest.registry.Pool` onto the
+rectangular :class:`~repro.data.partition.ClientData` the federated
+runtime vmaps over:
+
+* writers are grouped onto ``n_clients`` clients in contiguous
+  writer-id blocks (one writer per client when counts match; several
+  writers per client when there are more writers than clients);
+* the rectangular per-client budget (``n_train + n_test + n_conf``
+  rows, the paper's fixed-cost setup) is met by deterministic
+  subsampling when a client holds more, and by wraparound padding when
+  it holds fewer — with the held-out rows (test + conf) reserved
+  *before* the training rows, so a padded client never evaluates on
+  samples it trained on (train/eval stay disjoint whenever the client
+  has at least two samples; test and conf may share rows only when the
+  client cannot fill both);
+* ``ClientData.sizes`` records each client's *real* pre-budget sample
+  count — the heterogeneous deployment sizes that drive the runtime
+  scheduler's ``weighted`` sampling;
+* ``ClientData.mixtures`` is the client's empirical label histogram
+  (over its full writer data, not the subsampled budget), so
+  mixture-based diagnostics read the true skew.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import partition as _partition
+from repro.data.partition import ClientData
+
+# fold_in tag for the per-client budget draw: disjoint from every other
+# stream so adding clients never perturbs earlier ones
+_TAG_BUDGET = 0xFE31
+
+
+def partition_pool(pool, *, n_clients: int, n_train: int, n_test: int,
+                   n_conf: int, key: jax.Array,
+                   experiment: int = 5) -> ClientData:
+    """The one Pool → ClientData dispatch every entry point shares:
+    writer-tagged pools take the natural writer split (``experiment``
+    does not apply), the rest take the paper's Dirichlet split."""
+    if pool.writers is not None:
+        return partition_writers(pool, n_clients=n_clients,
+                                 n_train=n_train, n_test=n_test,
+                                 n_conf=n_conf, key=key)
+    return _partition.dirichlet_clients(
+        pool.x, pool.y, pool.n_classes, n_clients=n_clients,
+        experiment=experiment, key=key, n_train=n_train, n_test=n_test,
+        n_conf=n_conf)
+
+
+def partition_writers(pool, *, n_clients: int, n_train: int, n_test: int,
+                      n_conf: int, key: jax.Array) -> ClientData:
+    """Writer-natural :class:`ClientData` from a writer-tagged pool."""
+    if pool.writers is None:
+        raise ValueError(
+            f"pool {pool.name!r} carries no writer identities — use the "
+            f"Dirichlet partitioner (repro.data.partition) instead")
+    writers = np.asarray(pool.writers)
+    writer_ids = np.unique(writers)
+    if len(writer_ids) < n_clients:
+        raise ValueError(
+            f"{len(writer_ids)} writers cannot fill {n_clients} clients; "
+            f"lower --clients, or — for a mirror-written cache — clear "
+            f"the dataset's cache directory and rerun with --writers ≥ "
+            f"the client count so the mirror regenerates larger")
+    x = np.asarray(pool.x)
+    y = np.asarray(pool.y)
+    groups = np.array_split(writer_ids, n_clients)
+
+    eval_need = n_test + n_conf
+    xs, ys, sizes, mixtures = [], [], [], []
+    for i, group in enumerate(groups):
+        rows = np.nonzero(np.isin(writers, group))[0]
+        sizes.append(len(rows))
+        counts = np.bincount(y[rows], minlength=pool.n_classes)
+        mixtures.append(counts / counts.sum())
+        order = rows[np.asarray(jax.random.permutation(
+            jax.random.fold_in(jax.random.fold_in(key, _TAG_BUDGET), i),
+            len(rows)))]
+        # held-out rows first: padding must never leak a training row
+        # into test/conf, so the pools are disjoint (except the
+        # degenerate single-sample client, where there is no choice)
+        if len(order) > eval_need:
+            eval_pool, train_pool = order[:eval_need], order[eval_need:]
+        elif len(order) > 1:
+            eval_pool, train_pool = order[:-1], order[-1:]
+        else:
+            eval_pool = train_pool = order
+        picked = np.concatenate([
+            train_pool[np.arange(n_train) % len(train_pool)],
+            eval_pool[np.arange(n_test) % len(eval_pool)],
+            eval_pool[(n_test + np.arange(n_conf)) % len(eval_pool)]])
+        xs.append(x[picked])
+        ys.append(y[picked])
+
+    xs = jnp.asarray(np.stack(xs))
+    ys = jnp.asarray(np.stack(ys), jnp.int32)
+    return ClientData(
+        x_train=xs[:, :n_train], y_train=ys[:, :n_train],
+        x_test=xs[:, n_train:n_train + n_test],
+        y_test=ys[:, n_train:n_train + n_test],
+        x_conf=xs[:, n_train + n_test:], y_conf=ys[:, n_train + n_test:],
+        mixtures=jnp.asarray(np.stack(mixtures), jnp.float32),
+        sizes=jnp.asarray(np.asarray(sizes), jnp.int32),
+    )

@@ -1,0 +1,220 @@
+"""`DatasetSpec` registry: one ``load(name, data_dir)`` for every flavour.
+
+The single source of truth for dataset names — ``synthetic.DATASETS``
+and the ``fed_train`` / ``benchmarks`` argparse choices all derive from
+this module, so an unknown name fails in exactly one place, with the
+registry's listing.
+
+``load`` returns a :class:`Pool` — the encoded global sample pool the
+partitioners consume: :func:`repro.data.partition.dirichlet_clients`
+for Dirichlet flavours, :func:`repro.data.ingest.natural.partition_writers`
+when the pool carries writer identities (LEAF kinds).
+
+Resolution order, per spec kind:
+
+* ``data_dir`` given — files under ``<data_dir>/<name>/`` are parsed
+  (checksum-verified when ``.sha256`` sidecars exist).  Missing files
+  are first written by the offline mirror
+  (:mod:`repro.data.ingest.mirror`), then parsed through the *same*
+  byte-level readers — the pool is always a pure function of the file
+  bytes, so mirror-written and pre-existing (e.g. real, downloaded)
+  files are indistinguishable downstream.  Real MNIST / FashionMNIST
+  IDX pairs and real LEAF FEMNIST shards dropped into the cache are
+  used transparently; see ``docs/datasets.md`` for the layout.
+* ``data_dir=None`` — synthetic flavours fall back to the in-memory
+  generator; real flavours raise, since they are only reachable
+  through files.  For the IDX flavours the fallback is *bit-identical*
+  to the file path (the mirror stores the same bits as 0/255
+  grayscale).  ``synthfemnist`` differs by construction: its in-memory
+  fallback is the legacy Dirichlet-pool generator with no writer
+  identities (callers take the Dirichlet split), while the LEAF mirror
+  generates a per-writer pool that partitions naturally — pass a
+  ``data_dir`` whenever you want writer-natural behaviour.
+
+Raw pixel scales are normalized to [0, 1] *here* (u8 grayscale → /255,
+LEAF floats as-is, synthetic bits as-is), so the encoding pipeline
+(:mod:`repro.data.ingest.encode`) stays value-branch-free and jit-able.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.ingest import encode, idx, leaf, mirror
+
+SYNTH_DATASETS = ("synthmnist", "synthfashion", "synthfemnist")
+REAL_DATASETS = ("mnist", "fashionmnist", "femnist")
+
+T10K_IMAGES = "t10k-images-idx3-ubyte.gz"
+T10K_LABELS = "t10k-labels-idx1-ubyte.gz"
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetSpec:
+    name: str
+    kind: str              # "idx" (MNIST-family) | "leaf" (writer shards)
+    n_classes: int
+    flavour: str           # synthetic generator backing the offline mirror
+    native_side: int | None = None   # fixed image side (real formats); None
+    #                                  → the caller's ``side`` (synth mirrors)
+
+    def side_for(self, side: int | None) -> int:
+        return self.native_side or side or 12
+
+
+SPECS = {
+    "synthmnist": DatasetSpec("synthmnist", "idx", 10, "synthmnist"),
+    "synthfashion": DatasetSpec("synthfashion", "idx", 10, "synthfashion"),
+    "synthfemnist": DatasetSpec("synthfemnist", "leaf", 62, "synthfemnist"),
+    "mnist": DatasetSpec("mnist", "idx", 10, "synthmnist",
+                         native_side=28),
+    "fashionmnist": DatasetSpec("fashionmnist", "idx", 10, "synthfashion",
+                                native_side=28),
+    "femnist": DatasetSpec("femnist", "leaf", 62, "synthfemnist",
+                           native_side=28),
+}
+
+
+class Pool(NamedTuple):
+    """Encoded global pool + metadata, ready for a partitioner."""
+
+    x: jnp.ndarray                 # (N, F) uint8 bits (post-encoding)
+    y: jnp.ndarray                 # (N,) int32 labels
+    writers: jnp.ndarray | None    # (N,) int32 writer ids, or None
+    n_classes: int
+    n_features: int                # F — *after* encoding (levels included)
+    name: str
+
+
+def names() -> tuple:
+    """Every registered dataset name (argparse ``choices`` derive here)."""
+    return tuple(SPECS)
+
+
+def get(name: str) -> DatasetSpec:
+    spec = SPECS.get(name)
+    if spec is None:
+        raise ValueError(
+            f"unknown dataset {name!r}; choose from {names()}")
+    return spec
+
+
+def _find(root: pathlib.Path, gz_name: str) -> pathlib.Path | None:
+    """Accept the .gz cache name or an uncompressed drop-in — but never
+    both: a plain real file silently shadowed by a stale mirror ``.gz``
+    (or vice versa) is exactly the wrong-numbers failure the checksums
+    exist to prevent, so ambiguity fails loudly."""
+    gz, plain = root / gz_name, root / gz_name[:-len(".gz")]
+    if gz.exists() and plain.exists():
+        raise FileExistsError(
+            f"both {gz.name!r} and {plain.name!r} exist under {root} — "
+            f"remove the one you don't mean (a mirror-written .gz next "
+            f"to a real drop-in, usually), plus any stale .sha256 "
+            f"sidecar")
+    for cand in (gz, plain):
+        if cand.exists():
+            return cand
+    return None
+
+
+def _pair(root: pathlib.Path, img_name: str, lab_name: str, what: str):
+    """Resolve an images/labels IDX pair; a partial pair fails loudly
+    (never mix mirror-written halves with possibly-real drop-ins, and
+    never silently shrink the pool)."""
+    img, lab = _find(root, img_name), _find(root, lab_name)
+    if (img is None) != (lab is None):
+        raise FileNotFoundError(
+            f"partial {what} IDX pair under {root}: found "
+            f"{(img or lab).name!r} without its counterpart — drop in "
+            f"the full pair, or remove it")
+    return img, lab
+
+
+def _load_idx_pool(spec: DatasetSpec, root: pathlib.Path, n_samples: int,
+                   side: int, seed: int, verify: bool):
+    images_path, labels_path = _pair(root, mirror.IMAGES_FILE,
+                                     mirror.LABELS_FILE, "train")
+    if images_path is None:
+        if any(root.glob("t10k-*")):
+            # a real held-out pair with no train pair: never silently
+            # mix a synthetic mirror train pool into real test data
+            raise FileNotFoundError(
+                f"{root} holds t10k files but no train pair — drop in "
+                f"the real train pair too (the offline mirror refuses "
+                f"to write synthetic train data next to real files)")
+        mirror.write_idx_mirror(root, spec.flavour, n_samples, side, seed)
+        images_path = _find(root, mirror.IMAGES_FILE)
+        labels_path = _find(root, mirror.LABELS_FILE)
+    images = idx.read(images_path, verify=verify)
+    labels = idx.read(labels_path, verify=verify)
+    # a real drop-in usually brings the held-out pair too — fold it into
+    # the global pool (the partitioners draw per-client splits from it)
+    t_img, t_lab = _pair(root, T10K_IMAGES, T10K_LABELS, "t10k")
+    if t_img is not None:
+        images = np.concatenate(
+            [images, idx.read(t_img, verify=verify)], axis=0)
+        labels = np.concatenate(
+            [labels, idx.read(t_lab, verify=verify)], axis=0)
+    if images.ndim != 3 or images.shape[0] != labels.shape[0]:
+        raise idx.IDXFormatError(
+            f"{root}: images {images.shape} vs labels {labels.shape}")
+    unit = images.reshape(images.shape[0], -1).astype(np.float32) / 255.0
+    return unit, labels.astype(np.int32), None
+
+
+def _load_leaf_pool(spec: DatasetSpec, root: pathlib.Path, n_samples: int,
+                    side: int, seed: int, n_writers: int, verify: bool):
+    if not sorted(root.glob(leaf.SHARD_PATTERN)):
+        mirror.write_leaf_mirror(root, spec.flavour, n_samples, side, seed,
+                                 n_writers=n_writers)
+    pool = leaf.read_shards(root, verify=verify)
+    return pool.x, pool.y, pool.writers
+
+
+def load(name: str, data_dir: str | pathlib.Path | None = None, *,
+         encoding: str = "bool", n_samples: int = 6000,
+         side: int | None = None, seed: int = 0, n_writers: int = 25,
+         verify: bool = True) -> Pool:
+    """Load one dataset flavour as an encoded global :class:`Pool`.
+
+    ``n_samples`` / ``side`` / ``n_writers`` / ``seed`` parameterize the
+    offline mirror (and the in-memory synthetic fallback); when cache
+    files already exist they fully determine the pool and these are
+    ignored.  ``encoding`` is an :func:`repro.data.ingest.encode.build`
+    spec string.
+    """
+    spec = get(name)
+    if data_dir is None:
+        if name not in SYNTH_DATASETS:
+            raise ValueError(
+                f"dataset {name!r} is file-backed: pass a data_dir (the "
+                f"offline mirror will populate it; drop real IDX/LEAF "
+                f"files there for absolute paper numbers)")
+        from repro.data import synthetic
+        x, y, _ = synthetic.make_dataset(name, n_samples,
+                                         jax.random.PRNGKey(seed),
+                                         side=spec.side_for(side))
+        unit, labels, writers = np.asarray(x, np.float32), \
+            np.asarray(y, np.int32), None
+    else:
+        root = pathlib.Path(data_dir) / name
+        eff_side = spec.side_for(side)
+        if spec.kind == "idx":
+            unit, labels, writers = _load_idx_pool(
+                spec, root, n_samples, eff_side, seed, verify)
+        else:
+            unit, labels, writers = _load_leaf_pool(
+                spec, root, n_samples, eff_side, seed, n_writers, verify)
+
+    enc = encode.build(encoding, pool=unit)
+    bits = enc(jnp.asarray(unit, jnp.float32))
+    return Pool(x=bits, y=jnp.asarray(labels, jnp.int32),
+                writers=None if writers is None
+                else jnp.asarray(writers, jnp.int32),
+                n_classes=spec.n_classes,
+                n_features=int(bits.shape[1]), name=name)

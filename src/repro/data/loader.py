@@ -36,6 +36,18 @@ class TokenBatcher:
 
 @dataclasses.dataclass(frozen=True)
 class FederatedSampler:
+    """Per-(client, round, epoch) minibatch order, shuffled without
+    replacement.
+
+    Determinism contract (the ingest pipeline and the runtime's
+    reproducibility guarantees rely on it, and a tier-1 test pins it):
+    the order is a pure function of ``(seed, client, rnd, epoch)`` —
+    same tuple, same permutation, on any process, in any call order —
+    because each draw keys a fresh ``fold_in`` chain off the seed and
+    holds no mutable state.  Distinct tuples give independent streams,
+    so adding clients/rounds/epochs never perturbs existing orders.
+    """
+
     n_samples: int
     batch: int
     seed: int = 0

@@ -118,3 +118,8 @@ def partition(x: jnp.ndarray, y: jnp.ndarray, n_classes: int, *,
         x_conf=xs[:, n_train + n_test:], y_conf=ys[:, n_train + n_test:],
         mixtures=mixtures, sizes=sizes,
     )
+
+
+# registry-facing name: the *simulated* split, vs the writer-identity
+# split in ``repro.data.ingest.natural`` (both produce ClientData)
+dirichlet_clients = partition

@@ -25,7 +25,9 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-DATASETS = ("synthmnist", "synthfashion", "synthfemnist")
+# the ingest registry is the single source of truth for dataset names;
+# this module only knows how to *generate* the synthetic flavours
+from repro.data.ingest.registry import SYNTH_DATASETS as DATASETS
 
 
 @dataclasses.dataclass(frozen=True)

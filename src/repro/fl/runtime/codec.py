@@ -17,11 +17,14 @@ by both endpoints, so frames carry no codec/type tags):
 * ``int4`` dense — ``scale <f4`` + ``ceil(m/2)`` bytes; two's-complement
   nibbles packed two per byte, ``q ∈ [−7, 7]`` stored biased by +8.
 * sparse delta (any dtype, ``sparse=True``) — the encoder subtracts the
-  shared reference (the cluster vector the server last broadcast, which
-  both endpoints know), quantizes the *delta*, and sends only nonzero
-  entries: ``flag u1`` + [``scale <f4``] + ``count <u4`` +
+  shared reference ``ref``, quantizes the *delta*, and sends only
+  nonzero entries: ``flag u1`` + [``scale <f4``] + ``count <u4`` +
   ``count·(idx <u2 + value)``.  When the sparse frame would be larger
   than the dense one the encoder falls back to dense (``flag = 0``).
+  The reference is whatever both endpoints share out-of-band; the
+  engine tracks it *per client* (``EngineState.ref_vecs`` — the slot
+  row each client last received over the broadcast, zeros if never
+  synced), so delta savings stay honest under partial participation.
 
 ``encode`` → ``bytes``; ``decode`` → float32 numpy vector.  Round-trip is
 bit-exact for float32 and within one quantization step otherwise (the

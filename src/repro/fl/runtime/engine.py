@@ -124,6 +124,15 @@ class EngineState(NamedTuple):
     buf_weight: jnp.ndarray     # (cap,) float32     staleness discount
     buf_valid: jnp.ndarray      # (cap,) bool        masked validity
     buf_seq: jnp.ndarray        # (cap,) int32       insertion order
+    # per-client broadcast references for the sparse-delta wire: the
+    # server rows each client last *received* (zeros = never synced),
+    # and the round it received them (−1 = never).  Deltas are encoded
+    # and decoded against these — both endpoints know them, because the
+    # aggregator tracks exactly what it sent whom — so metered savings
+    # stay honest under partial participation.  Zero-size placeholders
+    # when the codec is dense (no reference to track).
+    ref_vecs: jnp.ndarray       # (n, n_slots, d) float32, or (0, 0, 0)
+    ref_round: jnp.ndarray      # (n,) int32, or (0,)
 
 
 class RoundReport(NamedTuple):
@@ -185,6 +194,13 @@ class Engine:
     def init(self, key: jax.Array) -> EngineState:
         cs, server = self.strategy.init(key, self.n)
         cap, d = self.cfg.buffer_capacity, self.strategy.vec_dim
+        if self.cfg.codec.sparse:
+            ref_vecs = jnp.zeros((self.n, self.strategy.n_slots, d),
+                                 jnp.float32)
+            ref_round = jnp.full((self.n,), -1, jnp.int32)
+        else:
+            ref_vecs = jnp.zeros((0, 0, 0), jnp.float32)
+            ref_round = jnp.zeros((0,), jnp.int32)
         return EngineState(
             round_idx=jnp.zeros((), jnp.int32),
             client_state=cs, server=server,
@@ -193,7 +209,8 @@ class Engine:
             buf_ready=jnp.zeros((cap,), jnp.int32),
             buf_weight=jnp.zeros((cap,), jnp.float32),
             buf_valid=jnp.zeros((cap,), bool),
-            buf_seq=jnp.zeros((cap,), jnp.int32))
+            buf_seq=jnp.zeros((cap,), jnp.int32),
+            ref_vecs=ref_vecs, ref_round=ref_round)
 
     def run(self, key: jax.Array, state: EngineState | None = None,
             rounds: int | None = None
@@ -250,6 +267,7 @@ class Engine:
             fused = self.executor.fused_sync_round(
                 self.strategy, sub_cs, state.server, sub_data, keys,
                 jnp.asarray(arrive))
+        refs = (state.ref_vecs, state.ref_round)
         if fused is not None:
             merged, server, counts, applied, acc_sub, slots = fused
             up_bytes = self._identity_upload_bytes(
@@ -266,9 +284,9 @@ class Engine:
                 self.strategy, sub_cs, self._wire_tx_server(state.server),
                 sub_data, keys)
 
-            # (3) the wire: encode → meter → decode
-            dec, up_bytes = self._wire_uplink(state.server, vecs, slots,
-                                              np.asarray(part.active))
+            # (3) the wire: encode → meter → decode (sparse deltas run
+            # against each client's tracked broadcast reference)
+            dec, up_bytes = self._wire_uplink(state, vecs, slots, part)
 
             # (4) aggregation
             if sync:
@@ -294,6 +312,8 @@ class Engine:
             merged = self.executor.apply_merge(
                 self.strategy, new_sub, applied, rx_server, sub_cs, recv)
             acc_sub = None
+            refs = self._update_refs(state, part, arrive, applied,
+                                     rx_server, r)
 
         if sync:   # barrier bookkeeping, identical for fused and staged
             n_agg = int((np.asarray(slots)[arrive] >= 0).sum())
@@ -301,7 +321,7 @@ class Engine:
             n_buf = n_evict = 0
 
         new_state, acc, assignment = self._scatter_eval(
-            state, part.idx, merged, applied, server, buf, acc_sub)
+            state, part.idx, merged, applied, server, buf, refs, acc_sub)
 
         rep = RoundReport(
             round_idx=r, mean_accuracy=acc.mean(),
@@ -333,26 +353,33 @@ class Engine:
         return (state.buf_vecs, state.buf_slots, state.buf_ready,
                 state.buf_weight, state.buf_valid, state.buf_seq)
 
-    def _wire_uplink(self, server, vecs, slots, active):
+    def _wire_uplink(self, state: EngineState, vecs, slots,
+                     part: Participation):
         """Encode every surviving upload to real bytes; decode what the
         aggregator would see.  Frame = slot id (<i4) + encoded vector.
         Slot −1 ("nothing shared", e.g. below ``conf_threshold``) sends
         no frame, so selective sharing really does cut metered bytes.
 
-        Sparse-delta mode encodes against the aggregator's current slot
-        row, assuming reference sync (the server mirrors what clients
-        hold); with sparse partial participation that overstates the
-        achievable delta — see ROADMAP follow-ups for per-client
-        reference tracking."""
+        Sparse-delta mode encodes against the *per-client tracked
+        reference* — the slot row this client last received over the
+        broadcast (``state.ref_vecs``; zeros if it never synced), which
+        the aggregator knows because it recorded what it sent.  A client
+        that missed recent broadcasts therefore pays for its real,
+        larger delta: the metered savings are honest under partial
+        participation."""
         cfg = self.cfg.codec
         np_slots = np.asarray(slots)
+        active = np.asarray(part.active)
         if self._wire_is_identity():
             # bit-exact identity wire: skip the host round-trip, meter
             # arithmetically.  Keeps the default round free of
             # per-frame Python.
             return vecs, self._identity_upload_bytes(np_slots, active)
         np_vecs = np.asarray(vecs, np.float32)
-        np_server = np.asarray(server, np.float32)
+        # gather the K participants' reference rows on device — never
+        # pull the full (n, n_slots, d) population tensor to the host
+        np_refs = np.asarray(state.ref_vecs[jnp.asarray(part.idx)],
+                             np.float32) if cfg.sparse else None
         dec = np.zeros_like(np_vecs)
         total = 0
         for c in range(np_vecs.shape[0]):
@@ -362,11 +389,47 @@ class Engine:
                 s = int(np_slots[c, j])
                 if s < 0:
                     continue                # nothing shared in this slot
-                ref = np_server[s] if cfg.sparse else None
+                ref = np_refs[c, s] if cfg.sparse else None
                 frame = encode(np_vecs[c, j], cfg, ref=ref)
                 total += 4 + len(frame)
                 dec[c, j] = decode(frame, np_vecs.shape[2], cfg, ref=ref)
         return jnp.asarray(dec), total
+
+    def _update_refs(self, state: EngineState, part: Participation,
+                     arrive, applied, rx_server, r: int):
+        """Advance the per-client broadcast references: every receiving
+        participant now holds the roundtripped rows it was just sent —
+        its applied slots under ``downloads="assigned"``, the whole
+        server matrix under ``"all_slots"`` (mirroring exactly what
+        :meth:`_wire_downlink` billed).  Non-participants, drops, and
+        stragglers keep their old references — that is the point."""
+        if not self.cfg.codec.sparse:
+            return state.ref_vecs, state.ref_round
+        # work on the K sampled rows only (idx is without-replacement,
+        # so the device scatter below touches each row once); the
+        # untouched population rows never cross the host boundary
+        idx = jnp.asarray(part.idx)
+        sub = np.array(state.ref_vecs[idx])          # K rows, writable
+        sub_rounds = np.array(state.ref_round[idx])
+        np_applied = np.asarray(applied)
+        rx = np.asarray(rx_server, np.float32)
+        for c in range(sub.shape[0]):
+            if not arrive[c]:
+                continue
+            if self.strategy.downloads == "all_slots":
+                sub[c] = rx
+                sub_rounds[c] = r
+            else:
+                got = False
+                for j in range(np_applied.shape[1]):
+                    s = int(np_applied[c, j])
+                    if s >= 0:
+                        sub[c, s] = rx[s]
+                        got = True
+                if got:
+                    sub_rounds[c] = r
+        return (state.ref_vecs.at[idx].set(jnp.asarray(sub)),
+                state.ref_round.at[idx].set(jnp.asarray(sub_rounds)))
 
     def _roundtrip_rows(self, server):
         """Encode→decode every server row through the *dense* wire codec
@@ -521,7 +584,7 @@ class Engine:
         return server, counts, n_agg, int(valid.sum()), evicted, buf
 
     def _scatter_eval(self, state: EngineState, idx, merged, applied,
-                      server, buf, acc_sub):
+                      server, buf, refs, acc_sub):
         """Scatter the merged sub-pytree back into the population,
         evaluate everyone, build the next state.  ``acc_sub`` is the
         fused program's per-client accuracy (full population when the
@@ -548,5 +611,6 @@ class Engine:
         new_state = EngineState(
             round_idx=state.round_idx + 1, client_state=cs, server=server,
             buf_vecs=buf[0], buf_slots=buf[1], buf_ready=buf[2],
-            buf_weight=buf[3], buf_valid=buf[4], buf_seq=buf[5])
+            buf_weight=buf[3], buf_valid=buf[4], buf_seq=buf[5],
+            ref_vecs=refs[0], ref_round=refs[1])
         return new_state, acc, assignment

@@ -193,19 +193,21 @@ def abstract_async_inputs(tm_cfg: tm.TMConfig, fed_cfg: federation.FedConfig,
 # ---------------------------------------------------------------------------
 
 def _build_strategy(name: str, tm_cfg: tm.TMConfig,
-                    fed_cfg: federation.FedConfig, dcfg):
+                    fed_cfg: federation.FedConfig, pool):
+    """``pool`` is anything with ``n_features`` / ``n_classes`` (an
+    ingest :class:`~repro.data.ingest.registry.Pool`)."""
     from repro.fl.runtime.strategy import build_baseline_strategy
     if name == "tpfl":
         return federation._strategy(tm_cfg, fed_cfg)
     return build_baseline_strategy(
-        name, n_features=dcfg.n_features, n_classes=dcfg.n_classes,
+        name, n_features=pool.n_features, n_classes=pool.n_classes,
         local_epochs=fed_cfg.local_epochs)
 
 
 def main(argv: list[str] | None = None) -> dict:
     import argparse
 
-    from repro.data import partition, synthetic
+    from repro.data.ingest import natural, registry as datasets
     from repro.fl.runtime import (CodecConfig, Engine, RuntimeConfig,
                                   SchedulerConfig, checkpointing)
 
@@ -214,9 +216,23 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--strategy", default="tpfl",
                     choices=("tpfl", "fedavg", "fedprox", "ifca"))
     ap.add_argument("--dataset", default="synthmnist",
-                    choices=synthetic.DATASETS)
+                    choices=datasets.names())
+    ap.add_argument("--data-dir", default=None,
+                    help="dataset cache (IDX/LEAF files; the offline "
+                         "mirror populates it, real files are used "
+                         "transparently — see docs/datasets.md).  "
+                         "Required for the real flavours; synth* fall "
+                         "back to in-memory generation without it")
+    ap.add_argument("--encoding", default="bool", metavar="SPEC",
+                    help="feature encoding: bool[:threshold] | "
+                         "thermometer[:levels] | quantile[:levels]")
     ap.add_argument("--experiment", type=int, default=5,
                     help="paper setup 1..5 (fraction of non-IID clients)")
+    ap.add_argument("--writers", type=int, default=None,
+                    help="LEAF mirror size (writers ≥ clients; default "
+                         "max(25, clients)).  Only shapes a cache being "
+                         "written — existing shards win; clear the "
+                         "data dir to regenerate")
     ap.add_argument("--clients", type=int, default=20)
     ap.add_argument("--rounds", type=int, default=5)
     ap.add_argument("--local-epochs", type=int, default=2)
@@ -260,17 +276,20 @@ def main(argv: list[str] | None = None) -> dict:
     args = ap.parse_args(argv)
 
     key = jax.random.PRNGKey(args.seed)
-    x, y, dcfg = synthetic.make_dataset(args.dataset, 6000,
-                                        jax.random.PRNGKey(args.seed),
-                                        side=12)
-    data = partition.partition(
-        x, y, dcfg.n_classes, n_clients=args.clients,
-        experiment=args.experiment,
+    pool = datasets.load(args.dataset, data_dir=args.data_dir,
+                         encoding=args.encoding, n_samples=6000, side=12,
+                         seed=args.seed,
+                         n_writers=args.writers or max(25, args.clients))
+    # writer-tagged pools take the natural writer-identity split (the
+    # real per-writer ``sizes`` drive --sampling weighted), the rest
+    # the paper's Dirichlet split
+    data = natural.partition_pool(
+        pool, n_clients=args.clients, n_train=80, n_test=40, n_conf=40,
         key=jax.random.PRNGKey(args.seed + 1),
-        n_train=80, n_test=40, n_conf=40)
+        experiment=args.experiment)
 
-    tm_cfg = tm.TMConfig(n_classes=dcfg.n_classes, n_clauses=args.clauses,
-                         n_features=dcfg.n_features, n_states=63,
+    tm_cfg = tm.TMConfig(n_classes=pool.n_classes, n_clauses=args.clauses,
+                         n_features=pool.n_features, n_states=63,
                          s=5.0, T=40)
     fed_cfg = federation.FedConfig(n_clients=args.clients,
                                    rounds=args.rounds,
@@ -299,7 +318,7 @@ def main(argv: list[str] | None = None) -> dict:
         mesh_collective=args.collective,
         checkpoint_dir=args.ckpt_dir, checkpoint_every=args.ckpt_every)
 
-    strategy = _build_strategy(args.strategy, tm_cfg, fed_cfg, dcfg)
+    strategy = _build_strategy(args.strategy, tm_cfg, fed_cfg, pool)
     engine = Engine(strategy, data, rt_cfg, mesh=mesh)
 
     state, remaining = None, None
@@ -323,7 +342,10 @@ def main(argv: list[str] | None = None) -> dict:
     where = "in-process" if mesh is None else \
         f"shard_map over {engine.executor.n_shards}-device clients mesh " \
         f"({args.collective})"
-    print(f"{args.strategy} on {args.dataset} exp{args.experiment}: "
+    split = "writer-natural" if pool.writers is not None \
+        else f"exp{args.experiment}"
+    print(f"{args.strategy} on {args.dataset} [{args.encoding}, "
+          f"{pool.n_features}f] {split}: "
           f"{args.clients} clients, K={engine.scheduler.k}/round, "
           f"dropout={args.dropout}, codec={args.codec}"
           f"{'+sparse' if args.sparse else ''}, mode={args.mode}, "

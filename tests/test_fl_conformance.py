@@ -389,7 +389,9 @@ def test_codec_sparse_delta_decode_encode_idempotent(name):
 
 def test_engine_metered_bytes_equal_reencoded_buffer_lengths(data):
     """The engine's upload meter is Σ (4-byte slot id + len(frame)) of
-    the actual frames — recompute it from the wire-visible uploads."""
+    the actual frames — recompute it from the wire-visible uploads.
+    Sparse frames encode against the *per-client tracked reference*
+    (all-zeros on a fresh engine: no client has ever synced)."""
     strat = TPFLStrategy(TM_CFG, local_epochs=1)
     for wire in (CodecConfig("float32"), CodecConfig("int8"),
                  CodecConfig("int8", sparse=True)):
@@ -399,8 +401,7 @@ def test_engine_metered_bytes_equal_reencoded_buffer_lengths(data):
         keys = jax.random.split(jax.random.PRNGKey(1), N_CLIENTS)
         _, vecs, slots = engine.executor.train(
             strat, state.client_state, state.server, data, keys)
-        _, up_bytes = engine._wire_uplink(
-            state.server, vecs, slots, np.asarray(part.active))
+        _, up_bytes = engine._wire_uplink(state, vecs, slots, part)
         expect = 0
         np_vecs, np_slots = np.asarray(vecs), np.asarray(slots)
         for c in range(N_CLIENTS):
@@ -408,10 +409,122 @@ def test_engine_metered_bytes_equal_reencoded_buffer_lengths(data):
                 s = int(np_slots[c, j])
                 if s < 0:
                     continue
-                ref = np.asarray(state.server)[s] if wire.sparse else None
+                ref = np.asarray(state.ref_vecs)[c, s] if wire.sparse \
+                    else None
                 expect += 4 + len(codec.encode(np_vecs[c, j], wire,
                                                ref=ref))
         assert up_bytes == expect
+
+
+# ---------------------------------------------------------------------------
+# sparse-delta per-client broadcast-reference tracking
+# ---------------------------------------------------------------------------
+
+def test_sparse_refs_track_what_each_client_received(data):
+    """After one full-participation sparse round, each client's
+    reference holds exactly the broadcast rows it applied (its assigned
+    slot), zeros elsewhere, and ``ref_round`` records the sync."""
+    strat = TPFLStrategy(TM_CFG, local_epochs=1)
+    engine = Engine(strat, data, RuntimeConfig(
+        rounds=1, codec=CodecConfig("float32", sparse=True)))
+    state, reports = engine.run(jax.random.PRNGKey(0))
+    refs = np.asarray(state.ref_vecs)
+    server = np.asarray(state.server)
+    assign = np.asarray(reports[0].assignment)
+    for c in range(N_CLIENTS):
+        got = {int(s) for s in assign[c] if s >= 0}
+        for s in range(strat.n_slots):
+            if s in got:
+                assert (refs[c, s] == server[s]).all()
+            else:
+                assert (refs[c, s] == 0).all()
+    assert (np.asarray(state.ref_round) == 0).all()
+
+
+def test_sparse_uplink_encodes_against_tracked_reference(data):
+    """The metering honesty contract under partial participation: every
+    round's upload bytes equal a from-scratch re-encoding against the
+    references each client held *entering* the round — stale or zero
+    for clients that missed recent broadcasts — and clients the
+    round-robin window has not reached yet remain unsynced (``ref_round
+    == −1``, zero reference)."""
+    wire = CodecConfig("int8", sparse=True)
+    strat = IFCAStrategy(n_features=100, n_classes=10, n_hidden=16,
+                         k=3, local_epochs=1)    # server init ≠ 0: a
+    # tracked zero reference is distinguishable from the server row
+    engine = Engine(strat, data, RuntimeConfig(
+        rounds=2, codec=wire,
+        scheduler=SchedulerConfig(participation=0.5,
+                                  sampling="round_robin")))
+    key = jax.random.PRNGKey(0)
+    k_init, k_rounds = jax.random.split(key)
+    state = engine.init(k_init)
+    for r in range(2):
+        prev = state
+        rk = jax.random.fold_in(k_rounds, r)
+        part = engine.scheduler.sample(r, rk)
+        state, rep = engine.run_round(state, rk)
+
+        # replay the round's wire from prev.ref_vecs, independently
+        idx = np.asarray(part.idx)
+        keys = jax.random.split(rk, N_CLIENTS)[part.idx]
+        sub_cs = jax.tree.map(lambda a: a[part.idx], prev.client_state)
+        sub_data = jax.tree.map(lambda a: a[part.idx], data)
+        _, vecs, slots = engine.executor.train(
+            strat, sub_cs, engine._wire_tx_server(prev.server),
+            sub_data, keys)
+        np_vecs, np_slots = np.asarray(vecs), np.asarray(slots)
+        expect = 0
+        for c in range(idx.shape[0]):
+            for j in range(np_slots.shape[1]):
+                s = int(np_slots[c, j])
+                if s < 0:
+                    continue
+                ref = np.asarray(prev.ref_vecs)[int(idx[c]), s]
+                expect += 4 + len(codec.encode(np_vecs[c, j], wire,
+                                               ref=ref))
+        assert rep.upload_bytes == expect
+
+        synced = np.zeros(N_CLIENTS, bool)
+        for rr in range(r + 1):
+            synced[np.asarray(
+                engine.scheduler.sample(
+                    rr, jax.random.fold_in(k_rounds, rr)).idx)] = True
+        ref_round = np.asarray(state.ref_round)
+        assert (ref_round[~synced] == -1).all()
+        assert (np.asarray(state.ref_vecs)[~synced] == 0).all()
+        assert (ref_round[synced] >= 0).all()
+    # disjoint round-robin windows: everyone synced after 2 half-rounds
+    assert (np.asarray(state.ref_round) >= 0).all()
+
+
+def test_sparse_refs_ride_checkpoints(tmp_path, data):
+    """The reference lanes are part of the state pytree: a sparse run
+    checkpointed and restored resumes with bit-identical references and
+    byte totals."""
+    from repro.fl.runtime import checkpointing
+    strat = TPFLStrategy(TM_CFG, local_epochs=1)
+    cfg = RuntimeConfig(
+        rounds=2, codec=CodecConfig("int8", sparse=True),
+        scheduler=SchedulerConfig(participation=0.5, dropout=0.25))
+    key = jax.random.PRNGKey(0)
+
+    full_state, full_reports = Engine(strat, data, cfg).run(key)
+
+    engine = Engine(strat, data, cfg)
+    half, _ = engine.run(key, rounds=1)
+    path = checkpointing.save(tmp_path, half)
+    restored = checkpointing.restore(path, engine.init(jax.random.PRNGKey(0)))
+    assert (np.asarray(restored.ref_vecs)
+            == np.asarray(half.ref_vecs)).all()
+    assert (np.asarray(restored.ref_round)
+            == np.asarray(half.ref_round)).all()
+    resumed, resumed_reports = engine.run(key, state=restored, rounds=1)
+    assert resumed_reports[0].upload_bytes == full_reports[1].upload_bytes
+    assert (np.asarray(resumed.ref_vecs)
+            == np.asarray(full_state.ref_vecs)).all()
+    assert (np.asarray(resumed.ref_round)
+            == np.asarray(full_state.ref_round)).all()
 
 
 # ---------------------------------------------------------------------------

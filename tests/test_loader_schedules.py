@@ -31,6 +31,27 @@ def test_federated_sampler_permutation_without_replacement():
     assert (np.asarray(b) != np.asarray(b2)).any()
 
 
+def test_federated_sampler_is_deterministic_per_tuple():
+    """The contract the ingest pipeline relies on (see the
+    FederatedSampler docstring): the per-epoch order is a pure function
+    of (seed, client, rnd, epoch) — identical across instances and call
+    orders — and each tuple component selects an independent stream."""
+    a = loader.FederatedSampler(n_samples=40, batch=10, seed=7)
+    b = loader.FederatedSampler(n_samples=40, batch=10, seed=7)
+    # same tuple → same order, across instances and call interleavings
+    o1 = np.asarray(a.epoch_order(client=3, rnd=2, epoch=1))
+    _ = a.epoch_order(client=0, rnd=0, epoch=0)     # unrelated draw
+    o2 = np.asarray(b.epoch_order(client=3, rnd=2, epoch=1))
+    assert (o1 == np.asarray(a.epoch_order(client=3, rnd=2, epoch=1))).all()
+    assert (o1 == o2).all()
+    # every tuple coordinate (and the seed) perturbs the order
+    assert (o1 != np.asarray(a.epoch_order(client=4, rnd=2, epoch=1))).any()
+    assert (o1 != np.asarray(a.epoch_order(client=3, rnd=3, epoch=1))).any()
+    assert (o1 != np.asarray(a.epoch_order(client=3, rnd=2, epoch=2))).any()
+    c = loader.FederatedSampler(n_samples=40, batch=10, seed=8)
+    assert (o1 != np.asarray(c.epoch_order(client=3, rnd=2, epoch=1))).any()
+
+
 def test_schedule_warmup_and_decay():
     cfg = schedules.ScheduleConfig(peak_lr=1.0, warmup_steps=10,
                                    total_steps=110, end_lr_frac=0.1)
