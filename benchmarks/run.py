@@ -9,6 +9,7 @@ then the per-table JSON artifacts land in benchmarks/artifacts/.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 from pathlib import Path
@@ -18,6 +19,57 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 from benchmarks import (ablation_multiclass, common, convergence,  # noqa: E402
                         kernel_bench, roofline, table4_tpfl,
                         table5_comparison)
+
+ART = Path(__file__).resolve().parent / "artifacts"
+
+
+def emit_bench(dataset: str, scale, backend: str,
+               data_dir: str | None = None,
+               encoding: str = "bool") -> dict:
+    """Per-strategy sync-round wall time → BENCH_round_latency.json.
+
+    One warm-up round (compile + jit-cache fill) then one timed round
+    per strategy, through the same engine the tables use — strategies
+    come from the CLI's one name→Strategy factory
+    (``fed_train._build_strategy`` over ``fed_train.STRATEGY_CHOICES``),
+    so the bench can't drift from what ``fed_train`` runs.  CI's
+    conformance-mesh-8 job runs this with ``--mesh`` on the 8-device
+    clients mesh and uploads the JSON as an artifact, so the perf
+    trajectory of the shard-mapped round finally has data points."""
+    import time as _time
+
+    import jax
+
+    from repro.core import federation
+    from repro.fl.runtime import Engine, RuntimeConfig
+    from repro.launch import fed_train
+
+    data, pool = common.make_fed_dataset(dataset, 5, scale, 0,
+                                         data_dir=data_dir,
+                                         encoding=encoding)
+    tm_cfg = common.bench_tm_config(dataset, pool, scale)
+    fed_cfg = federation.FedConfig(n_clients=scale.n_clients, rounds=2,
+                                   local_epochs=scale.local_epochs)
+    out = {"dataset": dataset, "backend": backend,
+           "n_devices": len(jax.devices()),
+           "n_clients": scale.n_clients, "rounds_timed": 1,
+           "round_wall_s": {}}
+    for name in fed_train.STRATEGY_CHOICES:
+        strat = fed_train._build_strategy(name, tm_cfg, fed_cfg, pool)
+        engine = Engine(strat, data, RuntimeConfig(rounds=2,
+                                                   backend=backend))
+        key = jax.random.PRNGKey(0)
+        k_init, k_rounds = jax.random.split(key)
+        state = engine.init(k_init)
+        state, _ = engine.run_round(state, jax.random.fold_in(k_rounds, 0))
+        t0 = _time.time()
+        engine.run_round(state, jax.random.fold_in(k_rounds, 1))
+        out["round_wall_s"][name] = round(_time.time() - t0, 4)
+        print(f"bench_round_latency,{out['round_wall_s'][name]*1e6:.0f},"
+              f"strategy={name}", flush=True)
+    ART.mkdir(exist_ok=True)
+    (ART / "BENCH_round_latency.json").write_text(json.dumps(out, indent=2))
+    return out
 
 
 def main() -> None:
@@ -39,6 +91,10 @@ def main() -> None:
     ap.add_argument("--encoding", default="bool",
                     help="feature encoding spec, e.g. bool | "
                          "thermometer:4 | quantile:8")
+    ap.add_argument("--emit-bench", action="store_true",
+                    help="only time one sync round per strategy and "
+                         "write artifacts/BENCH_round_latency.json "
+                         "(the conformance-mesh-8 CI artifact)")
     args = ap.parse_args()
     backend = "shardmap" if args.mesh else "inprocess"
     wanted = [n.strip() for n in args.datasets.split(",") if n.strip()]
@@ -58,6 +114,12 @@ def main() -> None:
     scale = common.Scale(n_clients=10, n_train=40, n_test=20, n_conf=20,
                          rounds=2, local_epochs=1) if args.quick \
         else common.Scale()
+
+    if args.emit_bench:
+        print("name,us_per_call,derived")
+        emit_bench(table_datasets[0], scale, backend,
+                   data_dir=args.data_dir, encoding=args.encoding)
+        return
 
     print("name,us_per_call,derived")
     for row in kernel_bench.run():

@@ -1,12 +1,17 @@
-"""Paper Table 5: TPFL vs FedAvg / FedProx / IFCA / FLIS / FedTM under the
-fully non-IID setup (experiment 5), accuracy + per-model upload cost.
+"""Paper Table 5: TPFL vs FedAvg / FedProx / IFCA / FLIS-DC / FLIS-HC /
+FedTM under the fully non-IID setup (experiment 5), accuracy +
+per-model upload cost.
 
-TPFL and the FedAvg / FedProx / IFCA baselines all run through the
-federated runtime engine (one ``Strategy`` each), so their communication
-columns are metered byte-exact from the wire codec's encoded buffers and
-every method is subject to the same scheduler.  FLIS (dynamic cluster
-count — no fixed server-slot matrix) and FedTM keep their reference
-implementations in ``core/baselines.py``.
+All seven method rows run through the federated runtime engine — one
+``Strategy`` each, under the same scheduler — so every communication
+column is metered byte-exact from the wire codec's encoded buffers
+(``len(buffer)``, not arithmetic).  FLIS runs its dynamic per-round
+clustering as the engine's server-side ``assign`` hook (DC and HC
+flavours, capped at ``flis_max_slots`` server rows); FedTM is the
+one-slot full-weight TM strategy on the same ``tm.py`` parameters as
+TPFL.  The straight-line loops in ``core/baselines.py`` are no longer
+run here — they are the bit-parity references the conformance suite
+pins these engine rows against.
 """
 from __future__ import annotations
 
@@ -18,21 +23,15 @@ import jax
 
 from benchmarks import common
 from repro.core import baselines, federation
-from repro.fl.runtime import Engine, RuntimeConfig
+from repro.fl.runtime import Engine, FedTMStrategy, RuntimeConfig
 from repro.fl.runtime.strategy import build_baseline_strategy
 
 ART = Path(__file__).resolve().parent / "artifacts"
 
+ENGINE_BASELINES = ("fedavg", "fedprox", "ifca", "flis_dc", "flis_hc")
 
-def _run_engine_baseline(name: str, data, dcfg, bcfg, scale, key,
-                         backend: str = "inprocess") -> tuple:
-    # hyperparameters come from the same BaselineConfig as the FLIS/FedTM
-    # reference rows, so Table 5 stays apples-to-apples
-    strat = build_baseline_strategy(
-        name, n_features=dcfg.n_features, n_classes=dcfg.n_classes,
-        n_hidden=bcfg.n_hidden, local_epochs=bcfg.local_epochs,
-        batch=bcfg.batch, lr=bcfg.lr, prox_mu=bcfg.prox_mu,
-        ifca_k=bcfg.ifca_k)
+
+def _run_engine(strat, data, scale, key, backend: str) -> tuple:
     engine = Engine(strat, data, RuntimeConfig(rounds=scale.rounds,
                                                backend=backend))
     _, reports = engine.run(key)
@@ -45,11 +44,10 @@ def _run_engine_baseline(name: str, data, dcfg, bcfg, scale, key,
 def run(dataset: str = "synthmnist", scale: common.Scale | None = None,
         seed: int = 0, backend: str = "inprocess",
         data_dir: str | None = None, encoding: str = "bool") -> list[dict]:
-    """``backend="shardmap"``: TPFL and the engine baselines run their
-    sync rounds shard-mapped over a ``clients`` mesh (bit-identical
-    numbers; FLIS/FedTM reference rows stay in-process).  ``data_dir``
-    routes the dataset through the ingest cache — real files when
-    present, the offline mirror otherwise."""
+    """``backend="shardmap"``: every row's sync rounds run shard-mapped
+    over a ``clients`` mesh (bit-identical numbers — the conformance
+    contract).  ``data_dir`` routes the dataset through the ingest
+    cache — real files when present, the offline mirror otherwise."""
     scale = scale or common.Scale()
     data, dcfg = common.make_fed_dataset(dataset, 5, scale, seed,
                                          data_dir=data_dir,
@@ -79,27 +77,33 @@ def run(dataset: str = "synthmnist", scale: common.Scale | None = None,
     up, down = federation.total_comm_mb(hist)
     add("tpfl", [float(h.mean_accuracy) for h in hist], up, down, t0)
 
+    # hyperparameters come from the same BaselineConfig as the reference
+    # loops the conformance suite pins, so Table 5 stays apples-to-apples
     bcfg = baselines.BaselineConfig(
         n_clients=scale.n_clients, rounds=scale.rounds,
         local_epochs=scale.local_epochs, ifca_k=min(10, dcfg.n_classes))
 
-    # engine-run DL baselines (byte-exact metering, same scheduler)
-    for name in ("fedavg", "fedprox", "ifca"):
+    # engine-run baselines (byte-exact metering, same scheduler) —
+    # including FLIS, whose dynamic clustering is the assign hook
+    for name in ENGINE_BASELINES:
         t0 = time.time()
-        accs, up, down = _run_engine_baseline(
-            name, data, dcfg, bcfg, scale, jax.random.PRNGKey(2),
-            backend=backend)
+        strat = build_baseline_strategy(
+            name, n_features=dcfg.n_features, n_classes=dcfg.n_classes,
+            n_hidden=bcfg.n_hidden, local_epochs=bcfg.local_epochs,
+            batch=bcfg.batch, lr=bcfg.lr, prox_mu=bcfg.prox_mu,
+            ifca_k=bcfg.ifca_k, max_slots=bcfg.flis_max_slots,
+            probe_size=bcfg.flis_probe,
+            flis_threshold=bcfg.flis_threshold)
+        accs, up, down = _run_engine(strat, data, scale,
+                                     jax.random.PRNGKey(2), backend)
         add(name, accs, up, down, t0)
 
-    # reference implementations without a fixed server-slot matrix
+    # FedTM: full-weight TM averaging on the engine, same TM as TPFL
     t0 = time.time()
-    h = baselines.run_flis(data, bcfg, jax.random.PRNGKey(2),
-                           dcfg.n_features, dcfg.n_classes)
-    add("flis", h.accuracy, h.upload_mb, h.download_mb, t0)
-
-    t0 = time.time()
-    h = baselines.run_fedtm(data, tm_cfg, bcfg, jax.random.PRNGKey(3))
-    add("fedtm", h.accuracy, h.upload_mb, h.download_mb, t0)
+    accs, up, down = _run_engine(
+        FedTMStrategy(tm_cfg, local_epochs=scale.local_epochs), data,
+        scale, jax.random.PRNGKey(3), backend)
+    add("fedtm", accs, up, down, t0)
 
     ART.mkdir(exist_ok=True)
     (ART / "table5_comparison.json").write_text(json.dumps(rows, indent=2))

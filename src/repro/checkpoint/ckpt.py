@@ -60,8 +60,13 @@ def restore(path: str | pathlib.Path, like: Any,
                 f"checkpoint {path} lacks leaf {key!r} — it was saved "
                 f"by an older state layout; restart without --resume "
                 f"(or delete the stale checkpoint directory)")
-        assert tuple(arr.shape) == tuple(leaf.shape), \
-            f"shape mismatch for {key}"
+        if tuple(arr.shape) != tuple(leaf.shape):
+            # explicit raise, not assert: layout-drift detection (e.g. a
+            # server state saved under a different slot count) must
+            # survive `python -O`
+            raise ValueError(
+                f"checkpoint {path}: shape mismatch for {key!r} — saved "
+                f"{tuple(arr.shape)}, expected {tuple(leaf.shape)}")
         out.append(jnp.asarray(arr, dtype=leaf.dtype))
     tree = jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(like), out)

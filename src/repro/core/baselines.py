@@ -1,18 +1,38 @@
-"""The paper's five baselines (Table 3/5), reimplemented in JAX.
+"""The paper's five baselines (Table 3/5): the executable references.
 
 * FedAvg  (McMahan et al. 2017)          — single global model, full averaging.
 * FedProx (Li et al. 2018, µ=0.1)        — FedAvg + proximal local objective.
 * IFCA    (Ghosh et al. 2020)            — k global models, loss-minimizing
                                             cluster choice, within-cluster avg.
-* FLIS-DC (Morafah et al. 2023, flavour) — clusters from inference similarity
-                                            on a shared probe set (no fixed k).
+* FLIS    (Morafah et al. 2023, flavour) — clusters recomputed each round
+                                            from inference similarity on a
+                                            shared probe set; DC (thresholded
+                                            connected components) and HC
+                                            (average-linkage agglomerative).
 * FedTM   (Qi et al. 2023, flavour)      — TM with *full* (all-classes) weight
                                             averaging, no personalization.
 
+Every Table-5 row now *runs through the federated runtime engine*
+(``benchmarks/table5_comparison.py`` — one ``Strategy`` per method, one
+scheduler, byte-exact wire metering).  This module is no longer the
+primary path: the FLIS and FedTM loops below are the straight-line
+host-side **bit-parity references** the conformance suite
+(``tests/test_fl_conformance.py``) pins the engine strategies against —
+same key chain as the engine (``k_init, k_rounds = split(key)``; round
+r uses ``split(fold_in(k_rounds, r), n)``), same Alg. 2 aggregation
+primitive (``clustering.aggregate`` on the flattened wire format), but
+with no scheduler / codec / executor machinery in between, so a
+divergence is attributable to the engine.  ``_similarity_clusters`` /
+``_average_linkage_clusters`` are independent numpy implementations of
+the clusterings the engine runs as jit-able programs
+(``strategy.flis_dc_labels`` / ``flis_hc_labels``) — the suite pins the
+labellings equal.
+
 DL baselines run on the repo MLP (`core/mlp.py`); FedTM runs on the same TM
 as TPFL so the TPFL-vs-FedTM delta isolates the paper's contribution
-(confidence clustering + selective per-class upload).  Communication is
-metered from the true parameter byte counts.
+(confidence clustering + selective per-class upload).  Communication here
+is metered from the true parameter byte counts (arithmetic); the engine
+rows meter ``len(buffer)``-exact from the wire codec.
 """
 from __future__ import annotations
 
@@ -39,12 +59,14 @@ class BaselineConfig:
     ifca_k: int = 10
     flis_threshold: float = 0.9
     flis_probe: int = 64
+    flis_max_slots: int = 8    # server rows: dynamic clusters are capped
 
 
 class History(NamedTuple):
     accuracy: list[float]            # mean client accuracy per round
     upload_mb: float                 # totals over all rounds
     download_mb: float
+    assignments: list | None = None  # per-round cluster ids (FLIS/FedTM)
 
 
 def _client_keys(key: jax.Array, n: int, r: int) -> jax.Array:
@@ -143,11 +165,15 @@ def run_ifca(data: ClientData, cfg: BaselineConfig, key: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# FLIS (dynamic-clustering flavour)
+# FLIS (dynamic clustering) — the engine's bit-parity reference loop
 # ---------------------------------------------------------------------------
 
 def _similarity_clusters(sim: np.ndarray, threshold: float) -> np.ndarray:
-    """Connected components of the thresholded similarity graph."""
+    """FLIS-DC: connected components of the thresholded similarity
+    graph, labelled in order of first appearance (= minimum member
+    index).  Independent numpy implementation of the engine's jit-able
+    ``strategy.flis_dc_labels`` — the conformance suite pins the two
+    labellings equal."""
     n = sim.shape[0]
     labels = -np.ones(n, dtype=np.int64)
     cur = 0
@@ -166,83 +192,151 @@ def _similarity_clusters(sim: np.ndarray, threshold: float) -> np.ndarray:
     return labels
 
 
-def run_flis(data: ClientData, cfg: BaselineConfig, key: jax.Array,
-             n_features: int, n_classes: int) -> History:
-    k_init, k_probe, k_train = jax.random.split(key, 3)
-    global_params = mlp.init(k_init, n_features, cfg.n_hidden, n_classes)
-    pbytes = mlp.n_bytes(global_params)
-    # shared unlabeled probe set (server-side, standard FLIS assumption)
-    probe = data.x_conf.reshape(-1, n_features)
-    idx = jax.random.choice(k_probe, probe.shape[0], (cfg.flis_probe,),
-                            replace=False)
-    probe = probe[idx]
+def _average_linkage_clusters(sim: np.ndarray, threshold: float,
+                              max_clusters: int) -> np.ndarray:
+    """FLIS-HC: average-linkage agglomerative clustering.  Repeatedly
+    merge the pair of clusters with the highest average cross-
+    similarity while that maximum stays ≥ ``threshold`` — or
+    unconditionally while more than ``max_clusters`` remain.  Merges
+    fold the larger root into the smaller, so a cluster's root is its
+    minimum member index and the dense renumbering matches the DC
+    convention.  Arithmetic (float32 adds, row-major argmax tie-break)
+    mirrors the engine's ``strategy.flis_hc_labels`` step for step —
+    the conformance suite pins them equal."""
+    n = sim.shape[0]
+    size = np.ones(n, np.float32)
+    active = np.ones(n, bool)
+    cross = sim.astype(np.float32).copy()
+    np.fill_diagonal(cross, 0.0)
+    labels = np.arange(n)
+    while True:
+        pair_ok = active[:, None] & active[None, :] & ~np.eye(n, dtype=bool)
+        avg = np.where(pair_ok,
+                       cross / np.maximum(np.outer(size, size),
+                                          np.float32(1.0)),
+                       -np.inf).astype(np.float32)
+        flat = int(np.argmax(avg))
+        a, b = flat // n, flat % n
+        best = avg.reshape(-1)[flat]
+        n_active = int(active.sum())
+        if not (np.isfinite(best) and n_active > 1
+                and (n_active > max_clusters or best >= threshold)):
+            break
+        row = cross[a] + cross[b]
+        row[a] = 0.0
+        row[b] = 0.0
+        cross[a, :] = row
+        cross[:, a] = row
+        cross[b, :] = 0.0
+        cross[:, b] = 0.0
+        size[a] += size[b]
+        size[b] = 0.0
+        active[b] = False
+        labels[labels == b] = a
+    rank = np.cumsum(active.astype(np.int64)) - 1
+    return rank[labels]
 
+
+def run_flis(data: ClientData, cfg: BaselineConfig, key: jax.Array,
+             n_features: int, n_classes: int,
+             linkage: str = "dc") -> History:
+    """The straight-line FLIS loop the engine's ``FLISStrategy`` is
+    pinned against: same key chain as ``Engine.run`` (``k_init,
+    k_rounds = split(key)``; ``FLISStrategy.init`` splits ``k_init``
+    into params/probe), same shared similarity kernel
+    (``strategy.flis_similarity``), same Alg. 2 aggregation primitive
+    on the flattened wire format — but host-side clustering
+    (``_similarity_clusters`` / ``_average_linkage_clusters``) and no
+    scheduler/codec in between."""
+    from repro.core import clustering
+    from repro.fl.runtime.strategy import (_flatten_mlp, _mlp_layout,
+                                           _unflatten_mlp,
+                                           flis_similarity)
+    layout = _mlp_layout(n_features, cfg.n_hidden, n_classes)
+    k_init, k_rounds = jax.random.split(key)
+    k_params, k_probe = jax.random.split(k_init)
     stacked = jax.vmap(lambda k: mlp.init(k, n_features, cfg.n_hidden,
                                           n_classes))(
-        jax.random.split(k_init, cfg.n_clients))
-    cluster_of = np.zeros(cfg.n_clients, dtype=np.int64)
-    accs = []
+        jax.random.split(k_params, cfg.n_clients))
+    pbytes = mlp.n_bytes(jax.tree.map(lambda a: a[0], stacked))
+    # shared unlabeled probe set (server-side, standard FLIS assumption)
+    pool = data.x_conf.reshape(-1, n_features)
+    idx = jax.random.choice(k_probe, pool.shape[0], (cfg.flis_probe,),
+                            replace=False)
+    probe = pool[idx]
+
+    accs, assignments = [], []
     for r in range(cfg.rounds):
-        ks = _client_keys(k_train, cfg.n_clients, r)
+        ks = _client_keys(k_rounds, cfg.n_clients, r)
         stacked = jax.vmap(lambda p, xt, yt, k: mlp.local_train(
             p, xt, yt, k, epochs=cfg.local_epochs, batch=cfg.batch,
             lr=cfg.lr))(stacked, data.x_train, data.y_train, ks)
 
-        # inference similarity on the probe set
-        preds = jax.vmap(lambda p: jax.nn.softmax(mlp.apply(p, probe)))(
-            stacked)                                     # (n, P, C)
-        flat = preds.reshape(cfg.n_clients, -1)
-        flat = flat / jnp.linalg.norm(flat, axis=1, keepdims=True)
-        sim = np.asarray(flat @ flat.T)
-        cluster_of = _similarity_clusters(sim, cfg.flis_threshold)
+        flat = jax.vmap(lambda p: _flatten_mlp(p, layout))(stacked)
+        sim = np.asarray(flis_similarity(flat, probe, layout))
+        if linkage == "dc":
+            labels = np.minimum(_similarity_clusters(sim,
+                                                     cfg.flis_threshold),
+                                cfg.flis_max_slots - 1)
+        else:
+            labels = _average_linkage_clusters(sim, cfg.flis_threshold,
+                                               cfg.flis_max_slots)
 
-        onehot = jax.nn.one_hot(jnp.asarray(cluster_of),
-                                int(cluster_of.max()) + 1)
-        counts = onehot.sum(0)
-
-        def agg(a):
-            s = jnp.einsum("n...,nk->k...", a, onehot)
-            return s / jnp.maximum(counts, 1).reshape(
-                (-1,) + (1,) * (a.ndim - 1))
-
-        cluster_models = jax.tree.map(agg, stacked)
-        stacked = jax.tree.map(
-            lambda cm: cm[jnp.asarray(cluster_of)], cluster_models)
+        res = clustering.aggregate(flat, jnp.asarray(labels, jnp.int32),
+                                   cfg.flis_max_slots)
+        new_flat = res.cluster_weights[jnp.asarray(labels)]
+        stacked = jax.vmap(lambda v: _unflatten_mlp(v, layout))(new_flat)
 
         acc = jax.vmap(mlp.accuracy)(stacked, data.x_test,
                                      data.y_test).mean()
         accs.append(float(acc))
+        assignments.append(np.asarray(labels, np.int64))
     total = cfg.rounds * cfg.n_clients * pbytes / 1e6
-    return History(accs, total, total)
+    return History(accs, total, total, assignments)
+
+
+def run_flis_hc(data: ClientData, cfg: BaselineConfig, key: jax.Array,
+                n_features: int, n_classes: int) -> History:
+    return run_flis(data, cfg, key, n_features, n_classes, linkage="hc")
 
 
 # ---------------------------------------------------------------------------
-# FedTM (full-model TM averaging, no personalization)
+# FedTM (full-model TM averaging) — the engine's bit-parity reference
 # ---------------------------------------------------------------------------
 
 def run_fedtm(data: ClientData, tm_cfg: tm.TMConfig, cfg: BaselineConfig,
               key: jax.Array) -> History:
-    k_init, k_train = jax.random.split(key)
+    """The straight-line FedTM loop ``FedTMStrategy`` is pinned against:
+    same key chain as the engine, same flattened one-slot Alg. 2
+    aggregation (integer sums are exact in float32, so the rounded
+    global mean is bit-identical)."""
+    from repro.core import clustering
+    k_init, k_rounds = jax.random.split(key)
     params = jax.vmap(lambda k: tm.init_params(tm_cfg, k))(
         jax.random.split(k_init, cfg.n_clients))
     wbytes = tm_cfg.n_classes * tm_cfg.n_clauses * 4   # all-classes weights
 
-    accs = []
+    accs, assignments = [], []
     for r in range(cfg.rounds):
-        ks = _client_keys(k_train, cfg.n_clients, r)
+        ks = _client_keys(k_rounds, cfg.n_clients, r)
         params = jax.vmap(lambda p, xt, yt, k: tm.train(
             p, xt, yt, k, tm_cfg, epochs=cfg.local_epochs))(
             params, data.x_train, data.y_train, ks)
-        # full (C, m) weight averaging across every client — no clustering
-        w_global = jnp.round(params.weights.astype(jnp.float32)
-                             .mean(axis=0)).astype(jnp.int32)
+        # full (C, m) weight averaging across every client — one global
+        # slot, no clustering
+        flat = params.weights.astype(jnp.float32).reshape(cfg.n_clients, -1)
+        res = clustering.aggregate(
+            flat, jnp.zeros((cfg.n_clients,), jnp.int32), 1)
+        w_global = jnp.round(res.cluster_weights[0]).astype(
+            jnp.int32).reshape(tm_cfg.n_classes, tm_cfg.n_clauses)
         params = params._replace(
             weights=jnp.broadcast_to(w_global, params.weights.shape))
         acc = jax.vmap(lambda p, x, y: tm.accuracy(p, x, y, tm_cfg))(
             params, data.x_test, data.y_test).mean()
         accs.append(float(acc))
+        assignments.append(np.zeros(cfg.n_clients, np.int64))
     total = cfg.rounds * cfg.n_clients * wbytes / 1e6
-    return History(accs, total, total)
+    return History(accs, total, total, assignments)
 
 
 BASELINES: dict[str, Callable] = {
@@ -250,4 +344,5 @@ BASELINES: dict[str, Callable] = {
     "fedprox": run_fedprox,
     "ifca": run_ifca,
     "flis": run_flis,
+    "flis_hc": run_flis_hc,
 }

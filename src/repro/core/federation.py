@@ -168,7 +168,7 @@ def run(data: ClientData, tm_cfg: tm.TMConfig, fed_cfg: FedConfig,
             download_bytes_per_client=rep.download_bytes_per_client)
         for rep in reports
     ]
-    return TPFLState(end.client_state, end.server), history
+    return TPFLState(end.client_state, end.server.slots), history
 
 
 def total_comm_mb(history: list[RoundMetrics]) -> tuple[float, float]:

@@ -87,7 +87,6 @@ def clustered_weighted_mean(vals: jnp.ndarray, assignment: jnp.ndarray,
 def clustered_mean_gathered(local_vals: jnp.ndarray,
                             local_slots: jnp.ndarray,
                             n_clusters: int, axis_name: str,
-                            prev: jnp.ndarray,
                             n_valid: int | None = None
                             ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Inside shard_map: bit-exact sharded lowering of the Alg. 2 mean.
@@ -104,15 +103,17 @@ def clustered_mean_gathered(local_vals: jnp.ndarray,
     K to a multiple of the mesh axis) so the reduction shape — and hence
     the float summation order — matches the unpadded in-process einsum.
 
-    Returns ``(server, counts)``: (C, m) per-slot means with empty slots
-    keeping ``prev``, and the (C,) member counts.
+    Returns ``(mean, counts)``: the *raw* (C, m) per-slot means (zeros
+    where empty) and the (C,) member counts.  Empty-slot retention is
+    the strategy's ``server_update`` decision (server-state API v2) —
+    the old merged-with-``prev`` return moved there.
     """
     vals = jax.lax.all_gather(local_vals, axis_name, tiled=True)
     slots = jax.lax.all_gather(local_slots, axis_name, tiled=True)
     if n_valid is not None:
         vals = vals[:n_valid]
         slots = slots[:n_valid]
-    res = clustering.aggregate(vals, slots, n_clusters, prev=prev)
+    res = clustering.aggregate(vals, slots, n_clusters)
     return res.cluster_weights, res.counts
 
 

@@ -4,9 +4,12 @@ The subsystem that replaces the monolithic ``federation.run`` loop:
 
 * :mod:`repro.fl.runtime.scheduler` — K-of-N client sampling (uniform /
   weighted / round-robin) with dropout and straggler-staleness injection.
-* :mod:`repro.fl.runtime.strategy` — the ``Strategy`` protocol unifying
-  sync/async TPFL and the FedAvg / FedProx / IFCA baselines behind one
-  ``client_step / aggregate / broadcast`` surface.
+* :mod:`repro.fl.runtime.strategy` — the ``Strategy`` protocol (v2)
+  unifying sync/async TPFL and the FedAvg / FedProx / IFCA / FLIS-DC /
+  FLIS-HC / FedTM baselines behind one ``client_step / aggregate /
+  broadcast`` surface, with strategy-owned :class:`ServerState` and the
+  optional server-side ``assign`` / ``server_update`` hooks (dynamic
+  per-round cluster assignment, custom empty-slot retention).
 * :mod:`repro.fl.runtime.codec` — quantized (int8/int4) + sparse-delta
   wire encoding of the uploaded vectors, with byte-exact metering
   (``len(buffer)``, not arithmetic).
@@ -36,4 +39,6 @@ from repro.fl.runtime.executors import (                # noqa: F401
 from repro.fl.runtime.scheduler import (                # noqa: F401
     Participation, Scheduler, SchedulerConfig)
 from repro.fl.runtime.strategy import (                 # noqa: F401
-    FedAvgStrategy, IFCAStrategy, Strategy, TPFLStrategy, Upload)
+    DOWNLOADS, FedAvgStrategy, FedTMStrategy, FLISStrategy, IFCAStrategy,
+    ServerState, Strategy, TPFLStrategy, Upload, build_baseline_strategy,
+    default_server_update)

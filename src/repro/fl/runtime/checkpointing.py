@@ -1,9 +1,10 @@
 """Round-granular checkpoint/resume for the federated engine.
 
 Thin layer over :mod:`repro.checkpoint.ckpt`: an :class:`EngineState` is
-one pytree (client population, server matrix, the six async
-device-buffer lanes, round counter), so a checkpoint is a single
-msgpack tensor store named by the round it starts.  Because the engine
+one pytree (client population, the strategy-owned ``ServerState`` —
+slot matrix plus aux such as FLIS's probe set and membership table —
+the six async device-buffer lanes, round counter), so a checkpoint is a
+single msgpack tensor store named by the round it starts.  Because the engine
 keys round r with ``fold_in(k_rounds, r)`` on the *absolute* round
 index, a resumed run is bit-identical to the uninterrupted one — and
 because the buffer lanes (payloads, slot ids, maturity rounds,
@@ -53,5 +54,21 @@ def latest(directory: str | pathlib.Path) -> pathlib.Path | None:
 
 def restore(path: str | pathlib.Path, like):
     """Rebuild an :class:`EngineState` from ``path`` into the structure of
-    ``like`` (e.g. a fresh ``engine.init(...)`` state)."""
-    return ckpt.restore(path, like)
+    ``like`` (e.g. a fresh ``engine.init(...)`` state).
+
+    Server-state layout drift fails *loudly*: the server subtree is
+    strategy-owned (slot matrix + aux pytree — probe sets, membership
+    tables), so a checkpoint written under a different strategy, slot
+    count, or aux layout raises with the drifted leaves named instead
+    of silently reshaping or zero-filling."""
+    try:
+        return ckpt.restore(path, like)
+    except (KeyError, ValueError) as e:
+        raise ValueError(
+            f"checkpoint {path} does not match the current engine state "
+            f"layout: {e}.  The server state is strategy-owned "
+            f"(ServerState.slots + aux) — restoring a checkpoint from a "
+            f"different strategy, --max-slots, or aux layout is refused "
+            f"rather than silently coerced.  Re-run with the original "
+            f"strategy/config, or start fresh without --resume."
+        ) from e

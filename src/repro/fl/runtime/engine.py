@@ -24,9 +24,17 @@ Round anatomy (sync mode)
    decoded back before aggregation, so lossy codecs perturb the math
    exactly as they would in deployment).  A sync barrier treats uploads
    that miss the deadline (staleness > 0) like drops.
-4. Per-slot masked mean aggregation (slot −1 contributes nothing; empty
-   slots keep their previous value, per Alg. 2).
-5. Broadcast: each surviving participant applies its slot's new server
+4. **Server-side assignment** (server-state API v2): if the strategy
+   defines an ``assign`` hook, the slot id of every decoded upload is
+   recomputed here — FLIS derives cluster membership per round from
+   inference similarity on its probe set.  Metering (step 3) always
+   uses the *client-proposed* tags: what crossed the wire crossed the
+   wire.  Strategies without the hook keep their proposed ids.
+5. Per-slot masked mean aggregation (slot −1 contributes nothing),
+   folded into the strategy-owned :class:`ServerState` by its
+   ``server_update`` hook — the default keeps empty slots' previous
+   rows bit-for-bit, per Alg. 2.
+6. Broadcast: each surviving participant applies its slot's new server
    row; dropped/straggling clients keep their pre-round state.  Download
    bytes are metered from the encoded broadcast frames.
 
@@ -62,6 +70,7 @@ replicated/host-visible.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Any, NamedTuple
 
 import jax
@@ -77,6 +86,9 @@ from repro.fl.runtime.executors import (COLLECTIVES, InProcessExecutor,
                                         ShardMapExecutor)
 from repro.fl.runtime.scheduler import (Participation, Scheduler,
                                         SchedulerConfig)
+from repro.fl.runtime.strategy import (DOWNLOADS, ServerState,
+                                       ensure_server_state,
+                                       resolve_server_update)
 
 BACKENDS = ("inprocess", "shardmap")
 
@@ -117,7 +129,10 @@ class RuntimeConfig:
 class EngineState(NamedTuple):
     round_idx: jnp.ndarray      # () int32 — next round to run
     client_state: Any           # strategy pytree, leading axis = clients
-    server: jnp.ndarray         # (n_slots, d) float32
+    server: ServerState         # strategy-owned pytree: (n_slots, d)
+    #                             slot matrix + opaque aux (probe sets,
+    #                             membership tables, ...), checkpointed
+    #                             as one subtree
     buf_vecs: jnp.ndarray       # (cap, d) float32   async upload buffer
     buf_slots: jnp.ndarray      # (cap,) int32       (−1 = empty)
     buf_ready: jnp.ndarray      # (cap,) int32       round the entry matures
@@ -159,6 +174,26 @@ class Engine:
         self.data = data
         self.cfg = cfg
         self.n = int(data.x_train.shape[0])
+        # --- server-state API v2 contract checks -------------------------
+        # downloads is a validated vocabulary, not free text: a typo used
+        # to silently fall through to assigned-slot broadcast/billing
+        downloads = getattr(strategy, "downloads", None)
+        if downloads not in DOWNLOADS:
+            raise ValueError(
+                f"strategy.downloads must be one of {DOWNLOADS}, got "
+                f"{downloads!r} — 'assigned' broadcasts each client its "
+                f"own slot row, 'all_slots' the whole matrix (IFCA)")
+        self._assign = getattr(strategy, "assign", None)
+        self._server_update = resolve_server_update(strategy)
+        if cfg.aggregation == "async" and (
+                self._assign is not None
+                or getattr(strategy, "server_update", None) is not None):
+            raise ValueError(
+                "dynamic server-side assignment / custom server_update "
+                "are round-synchronous server decisions — run this "
+                "strategy with aggregation='sync' (the async buffer "
+                "holds uploads across rounds, so there is no single "
+                "round membership to recompute)")
         if client_weights is None and cfg.scheduler.sampling == "weighted":
             # weighted sampling defaults to the real per-client dataset
             # sizes the partitioner recorded (clients with more data are
@@ -192,7 +227,23 @@ class Engine:
     # -- lifecycle ---------------------------------------------------------
 
     def init(self, key: jax.Array) -> EngineState:
-        cs, server = self.strategy.init(key, self.n)
+        # v2 strategies take the client data (FLIS draws its server-side
+        # probe set from the confidence split); a leftover v1 signature
+        # still works, and a bare matrix return is coerced to ServerState.
+        # Dispatch on positional capacity, not raw parameter count — a
+        # v1 `init(key, n_clients, **kw)` must not be handed `data`
+        # positionally.
+        kinds = [p.kind for p in
+                 inspect.signature(self.strategy.init).parameters.values()]
+        takes_data = (inspect.Parameter.VAR_POSITIONAL in kinds
+                      or sum(k in (inspect.Parameter.POSITIONAL_ONLY,
+                                   inspect.Parameter.POSITIONAL_OR_KEYWORD)
+                             for k in kinds) >= 3)
+        if takes_data:
+            cs, server = self.strategy.init(key, self.n, self.data)
+        else:
+            cs, server = self.strategy.init(key, self.n)
+        server = ensure_server_state(server)
         cap, d = self.cfg.buffer_capacity, self.strategy.vec_dim
         if self.cfg.codec.sparse:
             ref_vecs = jnp.zeros((self.n, self.strategy.n_slots, d),
@@ -261,9 +312,12 @@ class Engine:
         # identity wire + sync barrier: the executor may run the whole
         # round (train → masked collective → apply → eval) as one
         # compiled sharded program; bytes are metered arithmetically
-        # (float32 frames are bit-exact, len = 4 + 4·d — codec-pinned)
+        # (float32 frames are bit-exact, len = 4 + 4·d — codec-pinned).
+        # Strategies with a server-side assign hook always take the
+        # staged path: assignment is its own sharded stage there.
         fused = None
-        if sync and self._identity and self._wire_is_identity():
+        if sync and self._identity and self._wire_is_identity() \
+                and self._assign is None:
             fused = self.executor.fused_sync_round(
                 self.strategy, sub_cs, state.server, sub_data, keys,
                 jnp.asarray(arrive))
@@ -273,7 +327,7 @@ class Engine:
             up_bytes = self._identity_upload_bytes(
                 np.asarray(slots), np.asarray(part.active))
             _, down_bc, down_pc = self._wire_downlink(
-                server, counts, arrive, applied)
+                server.slots, counts, arrive, applied)
         else:
             # (2) local work on the K sampled clients.  Training starts
             # from the codec-roundtripped broadcast rows — what a client
@@ -281,24 +335,38 @@ class Engine:
             # aggregator's full-precision state (identity wire: same
             # thing, zero cost).
             new_sub, vecs, slots = self.executor.train(
-                self.strategy, sub_cs, self._wire_tx_server(state.server),
-                sub_data, keys)
+                self.strategy, sub_cs,
+                self._wire_tx_server(state.server.slots), sub_data, keys)
 
             # (3) the wire: encode → meter → decode (sparse deltas run
-            # against each client's tracked broadcast reference)
+            # against each client's tracked broadcast reference).
+            # Metering sees the client-proposed slot tags — the frames
+            # that crossed the wire — never the post-assign ids.
             dec, up_bytes = self._wire_uplink(state, vecs, slots, part)
 
-            # (4) aggregation
+            # (3b) server-side assignment (v2): recompute every upload's
+            # slot id from the decoded payloads — FLIS's per-round
+            # dynamic clustering; absent hook = keep proposed ids
+            if self._assign is not None:
+                slots = self.executor.assign(
+                    self.strategy, state.server, dec, slots,
+                    jnp.asarray(arrive))
+
+            # (4) aggregation, folded into the strategy-owned server
+            # state by its server_update hook (default: Alg. 2
+            # retention — empty slots keep their previous row)
             if sync:
-                server, counts = self.executor.masked_mean(
-                    self.strategy, dec, slots, jnp.asarray(arrive),
-                    state.server)
+                agg, counts = self.executor.masked_mean(
+                    self.strategy, dec, slots, jnp.asarray(arrive))
+                server = self._server_update(state.server, agg, counts)
             elif self.cfg.async_buffer == "host":
-                server, counts, n_agg, n_buf, n_evict, buf = \
+                srv_mat, counts, n_agg, n_buf, n_evict, buf = \
                     self._aggregate_async_host(state, dec, slots, part, r)
+                server = state.server._replace(slots=srv_mat)
             else:
-                server, counts, n_agg, n_buf, n_evict, buf = \
+                srv_mat, counts, n_agg, n_buf, n_evict, buf = \
                     self._aggregate_async(state, dec, slots, part)
+                server = state.server._replace(slots=srv_mat)
 
             # (5) broadcast + scatter + evaluate.  A slot row is only
             # pushed to clients when it actually received an aggregate
@@ -308,7 +376,7 @@ class Engine:
             recv = jnp.asarray(arrive)
             applied = executors.applied_slots(slots, counts, recv)
             rx_server, down_bc, down_pc = self._wire_downlink(
-                server, counts, arrive, applied)
+                server.slots, counts, arrive, applied)
             merged = self.executor.apply_merge(
                 self.strategy, new_sub, applied, rx_server, sub_cs, recv)
             acc_sub = None
@@ -514,7 +582,7 @@ class Engine:
         server, counts, n_agg, n_buf, n_evict, buf = \
             self.executor.async_update(
                 self.strategy, self._buf_of(state), up, state.round_idx,
-                state.server, self.cfg.async_min_uploads)
+                state.server.slots, self.cfg.async_min_uploads)
         return (server, counts, int(n_agg), int(n_buf), int(n_evict), buf)
 
     def _aggregate_async_host(self, state, dec, slots, part: Participation,
@@ -572,11 +640,11 @@ class Engine:
                 jnp.asarray(vecs), s, w, self.strategy.n_slots)
             counts = jax.nn.one_hot(
                 s, self.strategy.n_slots, dtype=jnp.float32).sum(0)
-            server = jnp.where(counts[:, None] > 0, mean, state.server)
+            server = jnp.where(counts[:, None] > 0, mean, state.server.slots)
             valid = valid & ~mature
             n_agg = int(contrib.sum())
         else:
-            server = state.server
+            server = state.server.slots
             counts = jnp.zeros((self.strategy.n_slots,), jnp.float32)
             n_agg = 0
         buf = (jnp.asarray(vecs), jnp.asarray(bslots), jnp.asarray(ready),

@@ -53,11 +53,16 @@ ids, arrival masks, uploads) are sharded ``P(axis)`` — one contiguous
 block per shard; the server matrix, cluster counts, the async buffer
 lanes, and the round index are replicated ``P()``.
 
-* ``_train_program``       — per-shard vmap of ``client_step``; server
-  replicated in, per-shard (state, uploads) out.  No collective.
-* ``_agg_program``         — per-shard uploads in, replicated (server,
-  counts) out via **one** ``all_gather`` (gather mode) or **one**
-  ``psum`` of the (C, m) accumulator (psum mode).
+* ``_train_program``       — per-shard vmap of ``client_step``; slot
+  matrix replicated in, per-shard (state, uploads) out.  No collective.
+* ``_assign_program``      — the v2 server-side assignment stage: one
+  tiled ``all_gather`` per upload lane into canonical client order,
+  the strategy's ``assign`` hook replayed identically on every shard
+  (replicated server state in), per-shard slot-id blocks out.
+* ``_agg_program``         — per-shard uploads in, replicated raw
+  (mean, counts) out via **one** ``all_gather`` (gather mode) or
+  **one** ``psum`` of the (C, m) accumulator (psum mode); empty-slot
+  retention is applied by the strategy's ``server_update``.
 * ``_apply_program``       — per-shard broadcast-apply/merge; server
   replicated in.  No collective.
 * ``_eval_program``        — per-shard vmap of ``evaluate``.  No
@@ -81,6 +86,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import clustering
 from repro.fl import masked_collectives
+from repro.fl.runtime.strategy import resolve_server_update
 
 COLLECTIVES = ("gather", "psum")
 
@@ -124,13 +130,21 @@ class InProcessExecutor:
             sub_cs, server, sub_data, keys)
         return new_sub, upload.vecs, upload.slots     # (K,j,d), (K,j)
 
-    def masked_mean(self, strategy, dec, slots, arrive, prev):
+    def assign(self, strategy, server, dec, slots, arrive):
+        """Run the strategy's server-side assignment hook eagerly (pure
+        jax on fully materialized arrays — the reference semantics the
+        shard-mapped assign stage is pinned against)."""
+        return strategy.assign(server, dec, slots, arrive)
+
+    def masked_mean(self, strategy, dec, slots, arrive):
         """The exact Alg. 2 masked mean (weights all 1), bit-identical
-        to ``clustering.aggregate``."""
+        to ``clustering.aggregate``.  Returns the *raw* per-slot mean
+        (zeros where empty) — empty-slot retention is the strategy's
+        ``server_update`` decision, applied by the engine."""
         masked = jnp.where(arrive[:, None], slots, -1)
         res = clustering.aggregate(
             dec.reshape(-1, strategy.vec_dim), masked.reshape(-1),
-            strategy.n_slots, prev=prev)
+            strategy.n_slots)
         return res.cluster_weights, res.counts
 
     def apply_merge(self, strategy, new_sub, applied, rx_server, old_sub,
@@ -183,36 +197,42 @@ def _unpad(tree, n: int):
 # the shard-mapped sync round (one compiled program)
 # ---------------------------------------------------------------------------
 
-def _sharded_masked_mean(vals, slots, n_slots, axis, collective, n_valid,
-                         prev):
-    """Per-shard uploads → replicated (server, counts), one collective."""
+def _sharded_masked_mean(vals, slots, n_slots, axis, collective, n_valid):
+    """Per-shard uploads → replicated raw (mean, counts), one
+    collective.  Empty-slot retention is ``server_update``'s decision —
+    this returns the bare per-slot mean (zeros where empty)."""
     if collective == "gather":
         return masked_collectives.clustered_mean_gathered(
-            vals, slots, n_slots, axis, prev, n_valid=n_valid)
-    means, counts = masked_collectives.clustered_weighted_mean_sharded(
+            vals, slots, n_slots, axis, n_valid=n_valid)
+    return masked_collectives.clustered_weighted_mean_sharded(
         vals, slots, jnp.ones_like(slots, jnp.float32), n_slots, axis)
-    server = jnp.where(counts[:, None] > 0, means, prev)
-    return server, counts
 
 
 def _sync_round_body(strategy, axis: str, collective: str,
                      n_valid: int | None):
     """Per-shard body of one full sync round (train → masked collective
-    → broadcast-apply → evaluate).  Only valid for the identity wire
-    (dense float32): lossy codecs need the host codec boundary, which
-    splits the round into the stage programs below."""
+    → server_update → broadcast-apply → evaluate).  Only valid for the
+    identity wire (dense float32) and strategies without a server-side
+    ``assign`` hook: lossy codecs need the host codec boundary and
+    dynamic assignment is its own sharded stage, both of which split
+    the round into the stage programs below.  ``server`` is the
+    strategy-owned :class:`~repro.fl.runtime.strategy.ServerState`
+    pytree, replicated; its ``server_update`` hook (or the Alg. 2
+    default) folds the collective's result in, inside the program."""
+    server_update = resolve_server_update(strategy)
 
     def body(sub_cs, server, sub_data, keys, arrive):
         new_sub, up = jax.vmap(
             strategy.client_step, in_axes=(0, None, 0, 0))(
-            sub_cs, server, sub_data, keys)
+            sub_cs, server.slots, sub_data, keys)
         masked = jnp.where(arrive[:, None], up.slots, -1)
-        server2, counts = _sharded_masked_mean(
+        agg, counts = _sharded_masked_mean(
             up.vecs.reshape(-1, strategy.vec_dim), masked.reshape(-1),
-            strategy.n_slots, axis, collective, n_valid, server)
+            strategy.n_slots, axis, collective, n_valid)
+        server2 = server_update(server, agg, counts)
         applied = applied_slots(up.slots, counts, arrive)
         merged = _broadcast_apply_merge(strategy, new_sub, applied,
-                                        server2, sub_cs, arrive)
+                                        server2.slots, sub_cs, arrive)
         acc = jax.vmap(strategy.evaluate)(
             merged, sub_data.x_test, sub_data.y_test)
         return merged, server2, counts, applied, acc, up.slots
@@ -224,12 +244,15 @@ def build_sharded_round(strategy, mesh, axis_name: str = "clients",
                         collective: str = "psum",
                         n_clients: int | None = None):
     """One full sync round as a single shard-mappable callable —
-    ``(sub_cs, server, sub_data, keys, arrive) → (new_cs, server,
-    counts, applied, per_client_acc, slots)`` with clients sharded over
-    ``axis_name``.  This is what the dry-run lowers on the production
-    mesh (clients over the ``data`` axis) to measure the masked
-    collective's bytes in the partitioned HLO, and what the
-    :class:`ShardMapExecutor` runs for the identity-wire fast path.
+    ``(sub_cs, server_state, sub_data, keys, arrive) → (new_cs,
+    server_state, counts, applied, per_client_acc, slots)`` with clients
+    sharded over ``axis_name`` and the
+    :class:`~repro.fl.runtime.strategy.ServerState` pytree replicated
+    both ways (the strategy's ``server_update`` runs inside the
+    program).  This is what the dry-run lowers on the production mesh
+    (clients over the ``data`` axis) to measure the masked collective's
+    bytes in the partitioned HLO, and what the :class:`ShardMapExecutor`
+    runs for the identity-wire fast path.
     """
     if collective not in COLLECTIVES:
         raise ValueError(f"unknown collective {collective!r}")
@@ -264,19 +287,50 @@ def _train_program(strategy, mesh, axis, sub_cs, server, sub_data, keys):
 
 @partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5))
 def _agg_program(n_slots, dim, mesh, axis, collective, n_valid,
-                 dec, slots, arrive, prev):
+                 dec, slots, arrive):
     spec = P(axis)
 
-    def body(dec_, slots_, arrive_, prev_):
+    def body(dec_, slots_, arrive_):
         masked = jnp.where(arrive_[:, None], slots_, -1)
         return _sharded_masked_mean(
             dec_.reshape(-1, dim), masked.reshape(-1), n_slots, axis,
-            collective, n_valid, prev_)
+            collective, n_valid)
 
     return shard_map(body, mesh=mesh,
-                     in_specs=(spec, spec, spec, P()),
+                     in_specs=(spec, spec, spec),
                      out_specs=(P(), P()),
-                     check_rep=False)(dec, slots, arrive, prev)
+                     check_rep=False)(dec, slots, arrive)
+
+
+@partial(jax.jit, static_argnums=(0, 1, 2, 3, 4))
+def _assign_program(strategy, mesh, axis, k, k_padded,
+                    server, dec, slots, arrive):
+    """The server-side assignment stage, shard-mapped: one tiled
+    ``all_gather`` per upload lane reassembles the round's decoded
+    uploads in canonical client order (trimmed to the true K), every
+    shard computes the *identical* replicated assignment via the
+    strategy's ``assign`` hook (cross-client math — similarity graphs,
+    clustering — is allowed exactly here), and each shard slices back
+    its own block of the new slot ids."""
+    spec = P(axis)
+    n_shards = int(mesh.shape[axis])
+    blk = k_padded // n_shards
+
+    def body(server_, dec_, slots_, arrive_):
+        g = lambda a: jax.lax.all_gather(a, axis, tiled=True)[:k]
+        new = strategy.assign(server_, g(dec_), g(slots_), g(arrive_))
+        new = new.astype(jnp.int32)
+        pad = k_padded - k
+        if pad:
+            new = jnp.concatenate(
+                [new, jnp.full((pad,) + new.shape[1:], -1, jnp.int32)])
+        i = jax.lax.axis_index(axis)
+        return jax.lax.dynamic_slice_in_dim(new, i * blk, blk)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(), spec, spec, spec),
+                     out_specs=spec, check_rep=False)(
+        server, dec, slots, arrive)
 
 
 @partial(jax.jit, static_argnums=(0, 1, 2))
@@ -513,14 +567,28 @@ class ShardMapExecutor:
         new_sub = _unpad(new_sub, k)
         return new_sub, upload.vecs[:k], upload.slots[:k]
 
-    def masked_mean(self, strategy, dec, slots, arrive, prev):
+    def assign(self, strategy, server, dec, slots, arrive):
+        """Shard-mapped server-side assignment: uploads sharded over
+        ``axis`` (padded with inert slot-−1 / non-arrived rows), the
+        server state replicated, the gathered assignment replayed
+        identically on every shard — see :func:`_assign_program`."""
+        k = slots.shape[0]
+        k_padded = k + ((-k) % self.n_shards)
+        out = _assign_program(
+            strategy, self.mesh, self.axis, k, k_padded, server,
+            _pad_rows(dec, self.n_shards),
+            _pad_rows(slots, self.n_shards, fill=-1),
+            _pad_rows(arrive, self.n_shards, fill=False))
+        return out[:k]
+
+    def masked_mean(self, strategy, dec, slots, arrive):
         k = dec.shape[0]
         return _agg_program(
             strategy.n_slots, strategy.vec_dim, self.mesh, self.axis,
             self.collective, k * strategy.j_slots,
             _pad_rows(dec, self.n_shards),
             _pad_rows(slots, self.n_shards, fill=-1),
-            _pad_rows(arrive, self.n_shards, fill=False), prev)
+            _pad_rows(arrive, self.n_shards, fill=False))
 
     def apply_merge(self, strategy, new_sub, applied, rx_server, old_sub,
                     recv):

@@ -18,7 +18,10 @@ CLI — run any federation scenario through `repro.fl.runtime`:
 reports per-round mean accuracy plus byte-exact upload/download totals
 (metered from the actual encoded wire buffers).  Default knobs (full
 participation, sync, float32) reproduce the legacy ``federation.run``
-metrics exactly.  ``--mesh clients:8`` runs the same round shard-mapped
+metrics exactly.  ``--strategy`` selects any Table-5 method — including
+``flis_dc`` / ``flis_hc`` (dynamic server-side clustering, capped at
+``--max-slots`` rows, probe set of ``--probe-size`` samples) and
+``fedtm`` — see ``docs/baselines.md``.  ``--mesh clients:8`` runs the same round shard-mapped
 over an 8-device ``clients`` mesh axis (bit-identical to in-process —
 the conformance suite pins it; spawn virtual CPU devices with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).  ``--mode
@@ -134,8 +137,11 @@ def abstract_round_inputs(tm_cfg: tm.TMConfig, fed_cfg: federation.FedConfig,
     :func:`abstract_fed_inputs` set (single round key included, for the
     legacy-builder baselines) plus per-client rng keys and the arrival
     mask, and the client axis name the round collectives run over.
-    What the dry-run lowers on the production mesh."""
+    The server matrix is wrapped in the v2 strategy-owned
+    :class:`~repro.fl.runtime.strategy.ServerState` pytree (TPFL
+    carries no aux) — what the dry-run lowers on the production mesh."""
     from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.fl.runtime.strategy import ServerState
     from repro.sharding import rules
 
     params, cw, data, key = abstract_fed_inputs(tm_cfg, fed_cfg, mesh,
@@ -149,7 +155,7 @@ def abstract_round_inputs(tm_cfg: tm.TMConfig, fed_cfg: federation.FedConfig,
 
     keys = sds((n, 2), jnp.uint32, P(b, None))
     arrive = sds((n,), jnp.bool_, P(b))
-    return params, cw, data, key, keys, arrive, b
+    return params, ServerState(cw), data, key, keys, arrive, b
 
 
 def abstract_async_inputs(tm_cfg: tm.TMConfig, fed_cfg: federation.FedConfig,
@@ -192,16 +198,27 @@ def abstract_async_inputs(tm_cfg: tm.TMConfig, fed_cfg: federation.FedConfig,
 # CLI: scenario runner on the federated runtime
 # ---------------------------------------------------------------------------
 
+STRATEGY_CHOICES = ("tpfl", "fedavg", "fedprox", "ifca", "flis_dc",
+                    "flis_hc", "fedtm")
+
+
 def _build_strategy(name: str, tm_cfg: tm.TMConfig,
-                    fed_cfg: federation.FedConfig, pool):
+                    fed_cfg: federation.FedConfig, pool,
+                    max_slots: int = 8, probe_size: int = 64):
     """``pool`` is anything with ``n_features`` / ``n_classes`` (an
-    ingest :class:`~repro.data.ingest.registry.Pool`)."""
-    from repro.fl.runtime.strategy import build_baseline_strategy
+    ingest :class:`~repro.data.ingest.registry.Pool`).  The TM-based
+    strategies (TPFL, FedTM) take the TM config; the MLP baselines size
+    themselves from the pool."""
+    from repro.fl.runtime.strategy import (FedTMStrategy,
+                                           build_baseline_strategy)
     if name == "tpfl":
         return federation._strategy(tm_cfg, fed_cfg)
+    if name == "fedtm":
+        return FedTMStrategy(tm_cfg, local_epochs=fed_cfg.local_epochs)
     return build_baseline_strategy(
         name, n_features=pool.n_features, n_classes=pool.n_classes,
-        local_epochs=fed_cfg.local_epochs)
+        local_epochs=fed_cfg.local_epochs, max_slots=max_slots,
+        probe_size=probe_size)
 
 
 def main(argv: list[str] | None = None) -> dict:
@@ -214,7 +231,13 @@ def main(argv: list[str] | None = None) -> dict:
     ap = argparse.ArgumentParser(
         description="Federated runtime scenario runner")
     ap.add_argument("--strategy", default="tpfl",
-                    choices=("tpfl", "fedavg", "fedprox", "ifca"))
+                    choices=STRATEGY_CHOICES)
+    ap.add_argument("--max-slots", type=int, default=8,
+                    help="FLIS: server slot rows — dynamic clusters are "
+                         "recomputed each round and capped at this many")
+    ap.add_argument("--probe-size", type=int, default=64,
+                    help="FLIS: size of the server-side probe set drawn "
+                         "from the confidence split")
     ap.add_argument("--dataset", default="synthmnist",
                     choices=datasets.names())
     ap.add_argument("--data-dir", default=None,
@@ -261,6 +284,11 @@ def main(argv: list[str] | None = None) -> dict:
                          "masked update per round (works with --mesh), "
                          "host = the numpy reference loop")
     # execution backend
+    ap.add_argument("--backend", default=None,
+                    choices=("inprocess", "shardmap"),
+                    help="round executor; 'shardmap' without --mesh uses "
+                         "a clients mesh of all visible devices "
+                         "(equivalent to --mesh clients)")
     ap.add_argument("--mesh", default=None, metavar="clients[:N]",
                     help="run the round shard-mapped over a clients mesh "
                          "axis of N devices (default: all visible); "
@@ -295,7 +323,11 @@ def main(argv: list[str] | None = None) -> dict:
                                    rounds=args.rounds,
                                    local_epochs=args.local_epochs)
     mesh = None
+    if args.mesh is None and args.backend == "shardmap":
+        args.mesh = "clients"            # all visible devices
     if args.mesh is not None:
+        if args.backend == "inprocess":
+            raise SystemExit("--backend inprocess contradicts --mesh")
         from repro.launch.mesh import make_clients_mesh
         name, _, count = args.mesh.partition(":")
         if name != "clients":
@@ -318,7 +350,9 @@ def main(argv: list[str] | None = None) -> dict:
         mesh_collective=args.collective,
         checkpoint_dir=args.ckpt_dir, checkpoint_every=args.ckpt_every)
 
-    strategy = _build_strategy(args.strategy, tm_cfg, fed_cfg, pool)
+    strategy = _build_strategy(args.strategy, tm_cfg, fed_cfg, pool,
+                               max_slots=args.max_slots,
+                               probe_size=args.probe_size)
     engine = Engine(strategy, data, rt_cfg, mesh=mesh)
 
     state, remaining = None, None

@@ -17,18 +17,22 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import federation, tm
+from repro.core import baselines, federation, tm
 from repro.data import partition, synthetic
 from repro.fl import masked_collectives
 from repro.fl.runtime import (CodecConfig, Engine, FedAvgStrategy,
-                              IFCAStrategy, RuntimeConfig, Scheduler,
-                              SchedulerConfig, TPFLStrategy, codec)
+                              FedTMStrategy, FLISStrategy, IFCAStrategy,
+                              RuntimeConfig, Scheduler, SchedulerConfig,
+                              TPFLStrategy, codec)
 from repro.sharding import compat
 
 TM_CFG = tm.TMConfig(n_classes=10, n_clauses=20, n_features=100,
                      n_states=63, s=5.0, T=20)
 N_CLIENTS = 8
 ROUNDS = 2
+
+FLIS_KW = dict(n_features=100, n_classes=10, n_hidden=16, local_epochs=1,
+               max_slots=4, probe_size=16)
 
 STRATEGIES = {
     "tpfl": lambda: TPFLStrategy(TM_CFG, local_epochs=1),
@@ -39,6 +43,12 @@ STRATEGIES = {
                                       prox_mu=0.1),
     "ifca": lambda: IFCAStrategy(n_features=100, n_classes=10, n_hidden=16,
                                  k=3, local_epochs=1),
+    # server-state API v2: FLIS assigns slots *server-side* per round
+    # (dynamic clustering through the assign hook), FedTM is the one-slot
+    # full-weight TM strategy — both must hold the same backend parity
+    "flis_dc": lambda: FLISStrategy(linkage="dc", **FLIS_KW),
+    "flis_hc": lambda: FLISStrategy(linkage="hc", **FLIS_KW),
+    "fedtm": lambda: FedTMStrategy(TM_CFG, local_epochs=1),
 }
 WIRES = {
     "float32": CodecConfig("float32"),
@@ -82,7 +92,11 @@ def _assert_bitwise_equal_runs(sa, ra, sb, rb):
         assert a.download_bytes_broadcast == b.download_bytes_broadcast
         assert a.download_bytes_per_client == b.download_bytes_per_client
         assert a.aggregated_uploads == b.aggregated_uploads
-    assert (np.asarray(sa.server) == np.asarray(sb.server)).all()
+    # the whole strategy-owned server pytree: slot matrix + aux (FLIS's
+    # probe set and membership table ride along)
+    for la, lb in zip(jax.tree.leaves(sa.server),
+                      jax.tree.leaves(sb.server)):
+        assert (np.asarray(la) == np.asarray(lb)).all()
     for la, lb in zip(jax.tree.leaves(sa.client_state),
                       jax.tree.leaves(sb.client_state)):
         assert (np.asarray(la) == np.asarray(lb)).all()
@@ -150,8 +164,8 @@ def test_psum_collective_matches_within_float_tolerance(data):
         assert (np.asarray(a.cluster_counts)
                 == np.asarray(b.cluster_counts)).all()
         assert a.upload_bytes == b.upload_bytes
-    assert np.allclose(np.asarray(sa.server), np.asarray(sb.server),
-                       atol=1e-4)
+    assert np.allclose(np.asarray(sa.server.slots),
+                       np.asarray(sb.server.slots), atol=1e-4)
 
 
 def test_sharded_weighted_mean_matches_host_form():
@@ -278,8 +292,8 @@ def test_async_shardmap_psum_matches_within_float_tolerance(data):
     for a, b in zip(ra, rb):
         assert (np.asarray(a.assignment) == np.asarray(b.assignment)).all()
         assert a.upload_bytes == b.upload_bytes
-    assert np.allclose(np.asarray(sa.server), np.asarray(sb.server),
-                       atol=1e-4)
+    assert np.allclose(np.asarray(sa.server.slots),
+                       np.asarray(sb.server.slots), atol=1e-4)
     assert (np.asarray(sa.buf_valid) == np.asarray(sb.buf_valid)).all()
 
 
@@ -335,6 +349,180 @@ def test_shardmap_plus_host_buffer_is_rejected():
     with pytest.raises(ValueError, match="host-buffered"):
         RuntimeConfig(backend="shardmap", aggregation="async",
                       async_buffer="host")
+
+
+# ---------------------------------------------------------------------------
+# server-state API v2: engine FLIS/FedTM == core/baselines reference loops
+# ---------------------------------------------------------------------------
+
+BCFG = baselines.BaselineConfig(n_clients=N_CLIENTS, rounds=ROUNDS,
+                                local_epochs=1, n_hidden=16,
+                                flis_probe=16, flis_max_slots=4)
+
+
+@pytest.mark.parametrize("linkage", ["dc", "hc"])
+def test_engine_flis_matches_reference_loop(linkage, data):
+    """The new-strategy parity contract: the engine's FLIS — clients
+    train and upload, the server recomputes cluster membership per
+    round through the ``assign`` hook (jit-able DC label propagation /
+    HC agglomerative merges) — reproduces the straight-line host
+    reference loop in ``core/baselines.py`` exactly: same per-round
+    assignment, same accuracy, float for float."""
+    strat = FLISStrategy(linkage=linkage, **FLIS_KW)
+    _, reports = Engine(strat, data, RuntimeConfig(rounds=ROUNDS)).run(
+        jax.random.PRNGKey(2))
+    ref = baselines.run_flis(data, BCFG, jax.random.PRNGKey(2), 100, 10,
+                             linkage=linkage)
+    for r in range(ROUNDS):
+        assert float(reports[r].mean_accuracy) == ref.accuracy[r]
+        assert (np.asarray(reports[r].assignment)[:, 0]
+                == ref.assignments[r]).all()
+    # the reported cluster counts are the reference labelling's counts
+    counts = np.bincount(ref.assignments[-1], minlength=4)
+    assert (np.asarray(reports[-1].cluster_counts) == counts).all()
+
+
+def test_engine_fedtm_matches_reference_loop(data):
+    """Engine FedTM (one slot, full-weight TM averaging through the
+    wire codec) == the ``core/baselines.py`` reference loop: integer
+    weight sums are exact in float32, so the rounded global mean — and
+    hence every accuracy — is bit-identical."""
+    _, reports = Engine(FedTMStrategy(TM_CFG, local_epochs=1), data,
+                        RuntimeConfig(rounds=ROUNDS)).run(
+        jax.random.PRNGKey(3))
+    ref = baselines.run_fedtm(data, TM_CFG, BCFG, jax.random.PRNGKey(3))
+    for r in range(ROUNDS):
+        assert float(reports[r].mean_accuracy) == ref.accuracy[r]
+
+
+def test_flis_dynamic_assignment_is_serverside(data):
+    """Clients upload placeholder slot 0; the round report's assignment
+    is the server-side clustering — proof the ids were recomputed
+    between uplink and aggregation, not taken from the clients."""
+    strat = FLISStrategy(linkage="dc", **FLIS_KW)
+    engine = Engine(strat, data, RuntimeConfig(rounds=1))
+    state = engine.init(jax.random.PRNGKey(0))
+    keys = jax.random.split(jax.random.PRNGKey(1), N_CLIENTS)
+    _, _, proposed = engine.executor.train(
+        strat, state.client_state, state.server.slots, data, keys)
+    assert (np.asarray(proposed) == 0).all()          # placeholder tags
+    _, rep = engine.run_round(state, jax.random.PRNGKey(1))
+    assert len(set(np.asarray(rep.assignment)[:, 0].tolist())) > 1
+
+
+def test_flis_requires_sync_aggregation(data):
+    """Dynamic per-round assignment has no meaning against a cross-round
+    upload buffer — the engine rejects the combination at init."""
+    with pytest.raises(ValueError, match="sync"):
+        Engine(FLISStrategy(**FLIS_KW), data,
+               RuntimeConfig(aggregation="async"))
+
+
+def test_stringly_downloads_typo_is_rejected(data):
+    """`downloads` is a validated vocabulary now: a typo used to fall
+    through silently to assigned-slot broadcast/billing."""
+    bad = TPFLStrategy(TM_CFG, local_epochs=1)
+    object.__setattr__(bad, "downloads", "al_slots")   # the typo
+    with pytest.raises(ValueError, match="downloads"):
+        Engine(bad, data, RuntimeConfig())
+
+
+# ---------------------------------------------------------------------------
+# empty-slot retention (Alg. 2 invariant) under the v2 server_update hook
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["inprocess", "shardmap"])
+def test_empty_slot_masked_mean_keeps_prev_row_bitwise(backend):
+    """Property test: the per-slot masked mean with zero contributors
+    keeps the previous server row bit-for-bit, through the raw-mean +
+    ``server_update`` split, on both executors.  Randomized slot
+    patterns with guaranteed-empty slots (fixed seed)."""
+    from repro.fl.runtime.executors import (InProcessExecutor,
+                                            ShardMapExecutor)
+    from repro.fl.runtime.strategy import ServerState, default_server_update
+
+    class _Spec:
+        n_slots, vec_dim, j_slots = 6, 5, 1
+
+    executor = (InProcessExecutor() if backend == "inprocess"
+                else ShardMapExecutor())
+    rng = np.random.default_rng(17)
+    for _ in range(10):
+        k = int(rng.integers(2, 9))
+        empty = set(rng.choice(6, size=int(rng.integers(1, 4)),
+                               replace=False).tolist())
+        pool = [s for s in range(6) if s not in empty] + [-1]
+        slots = jnp.asarray(rng.choice(pool, size=(k, 1)), jnp.int32)
+        dec = jnp.asarray(rng.normal(size=(k, 1, 5)), jnp.float32)
+        arrive = jnp.asarray(rng.random(k) < 0.8)
+        prev = jnp.asarray(rng.normal(size=(6, 5)), jnp.float32)
+        agg, counts = executor.masked_mean(_Spec, dec, slots, arrive)
+        server = default_server_update(ServerState(prev), agg, counts)
+        np_counts = np.asarray(counts)
+        for s in range(6):
+            if np_counts[s] == 0:
+                assert (np.asarray(server.slots[s])
+                        == np.asarray(prev[s])).all(), (backend, s)
+        assert set(np.asarray(
+            jnp.nonzero(counts)[0]).tolist()).isdisjoint(empty)
+
+
+@pytest.mark.parametrize("backend", ["inprocess", "shardmap"])
+def test_flis_server_update_retains_unfed_rows(backend, data):
+    """Engine-level, under the custom ``server_update`` hook: FLIS rows
+    whose (dynamic) cluster received no contributors this round keep
+    their previous value bit-for-bit, and the aux membership table
+    matches the round's counts."""
+    strat = FLISStrategy(linkage="dc", **FLIS_KW)
+    engine = Engine(strat, data, RuntimeConfig(rounds=1, backend=backend))
+    state = engine.init(jax.random.PRNGKey(0))
+    seeded = state._replace(server=state.server._replace(
+        slots=jnp.arange(4 * strat.vec_dim,
+                         dtype=jnp.float32).reshape(4, -1)))
+    new_state, rep = engine.run_round(seeded, jax.random.PRNGKey(1))
+    counts = np.asarray(rep.cluster_counts)
+    for s in range(4):
+        if counts[s] == 0:
+            assert (np.asarray(new_state.server.slots[s])
+                    == np.asarray(seeded.server.slots[s])).all()
+        else:
+            assert not (np.asarray(new_state.server.slots[s])
+                        == np.asarray(seeded.server.slots[s])).all()
+    assert (np.asarray(new_state.server.aux.members) == counts).all()
+
+
+def test_server_state_checkpoint_rides_and_drift_is_loud(tmp_path, data):
+    """The strategy-owned server pytree (slots + FLIS aux) rides
+    checkpoints bit-for-bit; restoring under a different server-state
+    layout (other strategy / max_slots) fails loudly instead of
+    silently coercing."""
+    from repro.fl.runtime import checkpointing
+    strat = FLISStrategy(linkage="dc", **FLIS_KW)
+    engine = Engine(strat, data, RuntimeConfig(rounds=1))
+    state, _ = engine.run(jax.random.PRNGKey(0))
+    path = checkpointing.save(tmp_path, state)
+    restored = checkpointing.restore(
+        path, engine.init(jax.random.PRNGKey(0)))
+    for la, lb in zip(jax.tree.leaves(state.server),
+                      jax.tree.leaves(restored.server)):
+        assert (np.asarray(la) == np.asarray(lb)).all()
+
+    other = Engine(TPFLStrategy(TM_CFG, local_epochs=1), data,
+                   RuntimeConfig(rounds=1))
+    with pytest.raises(ValueError, match="layout"):
+        checkpointing.restore(path, other.init(jax.random.PRNGKey(0)))
+
+
+def test_fed_train_flis_mesh_cli_runs_end_to_end():
+    """The acceptance CLI: `fed_train --strategy flis_dc --max-slots 8
+    --backend shardmap` runs a real shard-mapped federation and meters
+    nonzero bytes."""
+    from repro.launch import fed_train
+    out = fed_train.main(["--strategy", "flis_dc", "--max-slots", "8",
+                          "--backend", "shardmap", "--clients", "8",
+                          "--rounds", "2", "--local-epochs", "1"])
+    assert len(out["acc_per_round"]) == 2
+    assert out["upload_bytes"] > 0
 
 
 # ---------------------------------------------------------------------------
@@ -400,7 +588,7 @@ def test_engine_metered_bytes_equal_reencoded_buffer_lengths(data):
         part = engine.scheduler.sample(0, jax.random.PRNGKey(1))
         keys = jax.random.split(jax.random.PRNGKey(1), N_CLIENTS)
         _, vecs, slots = engine.executor.train(
-            strat, state.client_state, state.server, data, keys)
+            strat, state.client_state, state.server.slots, data, keys)
         _, up_bytes = engine._wire_uplink(state, vecs, slots, part)
         expect = 0
         np_vecs, np_slots = np.asarray(vecs), np.asarray(slots)
@@ -429,7 +617,7 @@ def test_sparse_refs_track_what_each_client_received(data):
         rounds=1, codec=CodecConfig("float32", sparse=True)))
     state, reports = engine.run(jax.random.PRNGKey(0))
     refs = np.asarray(state.ref_vecs)
-    server = np.asarray(state.server)
+    server = np.asarray(state.server.slots)
     assign = np.asarray(reports[0].assignment)
     for c in range(N_CLIENTS):
         got = {int(s) for s in assign[c] if s >= 0}
@@ -471,7 +659,7 @@ def test_sparse_uplink_encodes_against_tracked_reference(data):
         sub_cs = jax.tree.map(lambda a: a[part.idx], prev.client_state)
         sub_data = jax.tree.map(lambda a: a[part.idx], data)
         _, vecs, slots = engine.executor.train(
-            strat, sub_cs, engine._wire_tx_server(prev.server),
+            strat, sub_cs, engine._wire_tx_server(prev.server.slots),
             sub_data, keys)
         np_vecs, np_slots = np.asarray(vecs), np.asarray(slots)
         expect = 0

@@ -127,11 +127,11 @@ def test_dropped_sole_member_leaves_its_cluster_untouched():
     eng = _tpfl_engine(data, RuntimeConfig(
         rounds=1, scheduler=SchedulerConfig(dropout=1.0)))
     state = eng.init(jax.random.PRNGKey(0))
-    seeded = state._replace(
-        server=jnp.arange(TM_CFG.n_classes * TM_CFG.n_clauses,
-                          dtype=jnp.float32).reshape(TM_CFG.n_classes, -1))
+    seeded = state._replace(server=state.server._replace(
+        slots=jnp.arange(TM_CFG.n_classes * TM_CFG.n_clauses,
+                         dtype=jnp.float32).reshape(TM_CFG.n_classes, -1)))
     new_state, rep = eng.run_round(seeded, jax.random.PRNGKey(1))
-    assert (new_state.server == seeded.server).all()
+    assert (new_state.server.slots == seeded.server.slots).all()
     assert int(rep.cluster_counts.sum()) == 0
     assert int(rep.upload_bytes) == 0
     # the dropped clients' local state is also untouched (crashed mid-round)
@@ -213,7 +213,7 @@ def test_async_below_threshold_broadcasts_nothing(buffer):
     state = eng.init(jax.random.PRNGKey(0))
     new_state, rep = eng.run_round(state, jax.random.PRNGKey(1))
     assert rep.aggregated_uploads == 0
-    assert (new_state.server == state.server).all()
+    assert (new_state.server.slots == state.server.slots).all()
     assert (rep.assignment == -1).all()          # nothing applied
     assert rep.download_bytes_per_client == 0    # nothing billed either
     # clients keep their local training: accuracy ≈ isolated-TM level
@@ -246,13 +246,14 @@ def test_async_zero_staleness_weight_never_populates_a_slot(buffer):
         staleness_discount=0.0, async_buffer=buffer,
         scheduler=SchedulerConfig(straggler=1.0, max_staleness=1)))
     state = eng.init(jax.random.PRNGKey(0))
-    seeded = state._replace(server=jnp.full_like(state.server, 7.0))
+    seeded = state._replace(server=state.server._replace(
+        slots=jnp.full_like(state.server.slots, 7.0)))
     # round 0 buffers everything (staleness 1); round 1 matures them
     mid, rep0 = eng.run_round(seeded, jax.random.PRNGKey(1))
     new_state, rep1 = eng.run_round(mid, jax.random.PRNGKey(2))
     assert rep0.aggregated_uploads == 0
     assert rep1.aggregated_uploads == 0          # weight-0 ≠ contribution
-    assert (new_state.server == seeded.server).all()
+    assert (new_state.server.slots == seeded.server.slots).all()
     assert (rep1.assignment == -1).all()         # nothing broadcast
 
 
@@ -328,7 +329,7 @@ def test_client_step_consumes_codec_roundtripped_broadcast():
     eng.executor.train = spy
     eng.run_round(state, jax.random.PRNGKey(1))
 
-    full = np.asarray(state.server, np.float32)
+    full = np.asarray(state.server.slots, np.float32)
     dense = CodecConfig("int8")
     expect = np.stack([
         codec_mod.decode(codec_mod.encode(full[s], dense), full.shape[1],
@@ -391,7 +392,7 @@ def test_lossy_downlink_is_applied_to_clients():
         s = int(rep.assignment[i, 0])
         if s < 0:
             continue
-        row = np.asarray(new_state.server[s], np.float32)
+        row = np.asarray(new_state.server.slots[s], np.float32)
         rx = codec.decode(codec.encode(row, dense), TM_CFG.n_clauses,
                           dense)
         expect = np.round(rx).astype(np.int32)

@@ -460,3 +460,89 @@ def test_fed_train_synthfemnist_mirror_is_writer_natural(tmp_path):
                                n_conf=4, key=jax.random.PRNGKey(1))
     sizes = np.asarray(cd.sizes)
     assert len(set(sizes.tolist())) > 1
+
+
+# ---------------------------------------------------------------------------
+# fetch-and-verify (offline: mirror files + file:// URLs, no network)
+# ---------------------------------------------------------------------------
+
+def test_fetch_place_verifies_then_lands_in_registry_cache(tmp_path):
+    """verify→place drops a file into exactly the layout the registry
+    reads, with the .sha256 sidecar idx.read checks — exercised against
+    an offline-mirror-written archive standing in for a real download."""
+    from repro.data.ingest import fetch, mirror
+    from repro.data.ingest import registry as datasets
+    staging = tmp_path / "staging"
+    mirror.write_idx_mirror(staging, "synthmnist", 60, 8, 0)
+    for f in staging.glob("*.sha256"):
+        f.unlink()                      # a raw download has no sidecar
+    cache = tmp_path / "cache"
+    for name in (mirror.IMAGES_FILE, mirror.LABELS_FILE):
+        src = staging / name
+        digest = fetch.sha256_path(src)
+        dest = fetch.place(src, cache, "synthmnist", name, expect=digest)
+        assert dest.exists() and idx.checksum_path(dest).exists()
+    pool = datasets.load("synthmnist", cache, side=8, n_samples=60, seed=0)
+    assert int(pool.x.shape[0]) == 60
+
+
+def test_fetch_wrong_digest_places_nothing(tmp_path):
+    from repro.data.ingest import fetch, mirror
+    staging = tmp_path / "staging"
+    mirror.write_idx_mirror(staging, "synthmnist", 40, 8, 0)
+    src = staging / mirror.IMAGES_FILE
+    cache = tmp_path / "cache"
+    with pytest.raises(fetch.FetchError, match="sha256 mismatch"):
+        fetch.place(src, cache, "synthmnist", mirror.IMAGES_FILE,
+                    expect="0" * 64)
+    assert not (cache / "synthmnist").exists()
+    assert src.exists()                 # the suspect file stays put
+
+
+def test_fetch_refuses_to_overwrite_cache_files(tmp_path):
+    from repro.data.ingest import fetch, mirror
+    mirror.write_idx_mirror(tmp_path / "mnist", "synthmnist", 40, 8, 0)
+    staging = tmp_path / "staging"
+    mirror.write_idx_mirror(staging, "synthmnist", 40, 8, 1)
+    src = staging / mirror.IMAGES_FILE
+    with pytest.raises(fetch.FetchError, match="refusing to overwrite"):
+        fetch.place(src, tmp_path, "mnist", mirror.IMAGES_FILE,
+                    expect=fetch.sha256_path(src))
+
+
+def test_fetch_downloads_via_file_urls_offline(tmp_path, monkeypatch):
+    """The full fetch path — download, pinned-digest verify, place —
+    without a socket: file:// URL overrides point at mirror-written
+    archives whose digests are pinned for the test."""
+    from repro.data.ingest import fetch, mirror
+    staging = tmp_path / "staging"
+    mirror.write_idx_mirror(staging, "synthmnist", 40, 8, 0)
+    urls, digests = {}, {}
+    for f in sorted(staging.glob("*.gz")):
+        urls[f.name] = f.as_uri()
+        digests[f.name] = fetch.sha256_path(f)
+    monkeypatch.setitem(fetch.ARCHIVES, "mnist", digests)
+    cache = tmp_path / "cache"
+    placed = fetch.fetch("mnist", cache, urls=urls)
+    assert sorted(p.name for p in placed) == sorted(digests)
+    for p in placed:
+        assert p.parent == cache / "mnist"
+        fetch.verify_file(p, digests[p.name])
+    # resumable: a second call is a no-op, not an overwrite error
+    assert fetch.fetch("mnist", cache, urls=urls) == []
+
+
+def test_fetch_unknown_dataset_lists_choices(tmp_path):
+    from repro.data.ingest import fetch
+    with pytest.raises(ValueError, match="femnist"):
+        fetch.fetch("femnist", tmp_path)
+
+
+def test_fetch_rejects_mirror_standins_masquerading_as_real(tmp_path):
+    """Resume must re-verify: an offline-mirror stand-in sitting under
+    the real archive's cache name is never silently accepted as the
+    pinned real archive."""
+    from repro.data.ingest import fetch, mirror
+    mirror.write_idx_mirror(tmp_path / "mnist", "synthmnist", 40, 8, 0)
+    with pytest.raises(fetch.FetchError, match="stand-in"):
+        fetch.fetch("mnist", tmp_path, urls={})
