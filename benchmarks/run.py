@@ -25,22 +25,37 @@ ART = Path(__file__).resolve().parent / "artifacts"
 
 def emit_bench(dataset: str, scale, backend: str,
                data_dir: str | None = None,
-               encoding: str = "bool") -> dict:
+               encoding: str = "bool", rounds_timed: int = 5,
+               warmup_rounds: int = 1) -> dict:
     """Per-strategy sync-round wall time → BENCH_round_latency.json.
 
-    One warm-up round (compile + jit-cache fill) then one timed round
-    per strategy, through the same engine the tables use — strategies
-    come from the CLI's one name→Strategy factory
+    ``warmup_rounds`` warm-up rounds (compile + jit-cache fill) then
+    the **median of ≥5 timed rounds** per strategy — each round
+    bracketed by ``time.perf_counter`` with an explicit
+    ``jax.block_until_ready`` fence on the round's output state, so a
+    timing covers the device work, not just Python dispatch.  Each
+    engine runs with a telemetry :class:`~repro.fl.obs.RunRecorder`
+    (in-memory, no run dir), so the artifact also records the
+    **per-phase wall-time breakdown** (median per phase over the timed
+    rounds) — where round time actually goes, per strategy.
+
+    Strategies come from the CLI's one name→Strategy factory
     (``fed_train._build_strategy`` over ``fed_train.STRATEGY_CHOICES``),
     so the bench can't drift from what ``fed_train`` runs.  CI's
     conformance-mesh-8 job runs this with ``--mesh`` on the 8-device
     clients mesh and uploads the JSON as an artifact, so the perf
-    trajectory of the shard-mapped round finally has data points."""
+    trajectory of the shard-mapped round has real data points.
+
+    Artifact schema: ``rounds_timed`` / ``warmup_rounds`` (ints),
+    ``round_wall_s`` ({strategy: median seconds}), ``phase_wall_s``
+    ({strategy: {phase: median seconds}})."""
+    import statistics
     import time as _time
 
     import jax
 
     from repro.core import federation
+    from repro.fl.obs import RunRecorder
     from repro.fl.runtime import Engine, RuntimeConfig
     from repro.launch import fed_train
 
@@ -48,23 +63,44 @@ def emit_bench(dataset: str, scale, backend: str,
                                          data_dir=data_dir,
                                          encoding=encoding)
     tm_cfg = common.bench_tm_config(dataset, pool, scale)
-    fed_cfg = federation.FedConfig(n_clients=scale.n_clients, rounds=2,
+    n_rounds = warmup_rounds + rounds_timed
+    fed_cfg = federation.FedConfig(n_clients=scale.n_clients,
+                                   rounds=n_rounds,
                                    local_epochs=scale.local_epochs)
     out = {"dataset": dataset, "backend": backend,
            "n_devices": len(jax.devices()),
-           "n_clients": scale.n_clients, "rounds_timed": 1,
-           "round_wall_s": {}}
+           "n_clients": scale.n_clients,
+           "rounds_timed": rounds_timed,
+           "warmup_rounds": warmup_rounds,
+           "round_wall_s": {}, "phase_wall_s": {}}
     for name in fed_train.STRATEGY_CHOICES:
         strat = fed_train._build_strategy(name, tm_cfg, fed_cfg, pool)
-        engine = Engine(strat, data, RuntimeConfig(rounds=2,
-                                                   backend=backend))
+        rec = RunRecorder()          # in-memory: phase spans, no run dir
+        engine = Engine(strat, data, RuntimeConfig(rounds=n_rounds,
+                                                   backend=backend),
+                        telemetry=rec)
         key = jax.random.PRNGKey(0)
         k_init, k_rounds = jax.random.split(key)
         state = engine.init(k_init)
-        state, _ = engine.run_round(state, jax.random.fold_in(k_rounds, 0))
-        t0 = _time.time()
-        engine.run_round(state, jax.random.fold_in(k_rounds, 1))
-        out["round_wall_s"][name] = round(_time.time() - t0, 4)
+        wall = []
+        for r in range(n_rounds):
+            t0 = _time.perf_counter()
+            state, rep = engine.run_round(state,
+                                          jax.random.fold_in(k_rounds, r))
+            jax.block_until_ready(state)
+            dt = _time.perf_counter() - t0
+            rec.on_round(rep)        # pops this round's phase spans
+            if r >= warmup_rounds:
+                wall.append(dt)
+        out["round_wall_s"][name] = round(statistics.median(wall), 4)
+        timed = rec.history[warmup_rounds:]
+        phases: dict[str, list[float]] = {}
+        for evt in timed:
+            for ph, s in (evt["phases"] or {}).items():
+                phases.setdefault(ph, []).append(s)
+        out["phase_wall_s"][name] = {
+            ph: round(statistics.median(v), 4)
+            for ph, v in sorted(phases.items())}
         print(f"bench_round_latency,{out['round_wall_s'][name]*1e6:.0f},"
               f"strategy={name}", flush=True)
     ART.mkdir(exist_ok=True)
@@ -92,9 +128,15 @@ def main() -> None:
                     help="feature encoding spec, e.g. bool | "
                          "thermometer:4 | quantile:8")
     ap.add_argument("--emit-bench", action="store_true",
-                    help="only time one sync round per strategy and "
-                         "write artifacts/BENCH_round_latency.json "
-                         "(the conformance-mesh-8 CI artifact)")
+                    help="only run the round-latency bench: per "
+                         "strategy, 1 warm-up round then the median of "
+                         "5 perf_counter-timed, block_until_ready-"
+                         "fenced sync rounds, plus the per-phase "
+                         "wall-time breakdown from the telemetry "
+                         "tracer — written to artifacts/"
+                         "BENCH_round_latency.json (rounds_timed, "
+                         "warmup_rounds, round_wall_s, phase_wall_s; "
+                         "the conformance-mesh-8 CI artifact)")
     args = ap.parse_args()
     backend = "shardmap" if args.mesh else "inprocess"
     wanted = [n.strip() for n in args.datasets.split(",") if n.strip()]

@@ -56,6 +56,29 @@ import jax.numpy as jnp
 from repro.core import clustering
 
 
+def collective_payload_bytes(collective: str, n_uploads: int, dim: int,
+                             n_clusters: int) -> int:
+    """Per-device payload bytes the aggregation collective moves — the
+    telemetry plane's static gauge for what a round's reduction costs
+    on the mesh (``repro.fl.obs`` records it in the run manifest; the
+    partitioned-HLO measurement in ``fed_dryrun`` is the ground truth
+    this predicts).
+
+    * ``gather`` — one tiled ``all_gather`` of every upload: the full
+      (n_uploads, dim) float32 matrix lands on each device.
+    * ``psum``   — one all-reduce of the (n_clusters, dim) accumulator
+      plus its (n_clusters,) weight totals: independent of how many
+      clients upload.
+
+    Pure host arithmetic — never called from compiled code, so it
+    cannot perturb the round."""
+    if collective == "gather":
+        return 4 * n_uploads * dim
+    if collective == "psum":
+        return 4 * n_clusters * (dim + 1)
+    raise ValueError(f"unknown collective {collective!r}")
+
+
 def clustered_mean(vals: jnp.ndarray, assignment: jnp.ndarray,
                    n_clusters: int) -> jnp.ndarray:
     """vals: (n, ...) → (n_clusters, ...) per-cluster means (0 if empty)."""

@@ -1,0 +1,6 @@
+"""``python -m repro.fl.obs summarize <run-dir>`` — see summarize.py."""
+import sys
+
+from repro.fl.obs.summarize import main
+
+sys.exit(main())

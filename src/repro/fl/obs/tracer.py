@@ -1,0 +1,137 @@
+"""Phase-span tracing for the federated round.
+
+A :class:`PhaseTracer` times named host-side spans around the round's
+stages — broadcast encode, client step, uplink codec, server-side
+assign, aggregation, server_update, downlink, apply/merge, eval — with
+explicit ``jax.block_until_ready`` fences so a span's wall time covers
+the device work it launched, not just the Python dispatch.  The engine
+calls ``span(name)`` / ``fence(values)`` unconditionally; with
+telemetry disabled both resolve to the :data:`NULL` no-ops below (a
+shared null context manager and a pass), so the un-instrumented round
+is exactly the pre-telemetry round.
+
+The **neutrality invariant**: tracing only ever *reads* — it times,
+fences, and copies scalars off device.  It never feeds a value back
+into the round's math, so obs-on and obs-off runs are bit-identical
+(``tests/test_fl_conformance.py`` pins this across both backends and
+both aggregation modes).  Fences change *when* the host waits, never
+what the arrays hold.
+
+Optional deep capture: :func:`profile_trace` wraps a run in
+``jax.profiler.start_trace`` / ``stop_trace`` so ``--profile-dir`` on
+``fed_train`` drops a TensorBoard-loadable device trace next to the
+telemetry run directory.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+
+import jax
+
+
+class _NullSpan:
+    """Reusable zero-cost context manager — the disabled span."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class NullTracer:
+    """Telemetry off: every hook is a no-op (no timing, no fences)."""
+
+    enabled = False
+
+    def span(self, name: str):
+        return _NULL_SPAN
+
+    def fence(self, *values):
+        pass
+
+    def discard(self, name: str):
+        pass
+
+    def take(self) -> dict:
+        return {}
+
+
+class _Span:
+    """One live span: records ``perf_counter`` deltas into the tracer."""
+
+    __slots__ = ("_tracer", "_name", "_t0")
+
+    def __init__(self, tracer: "PhaseTracer", name: str):
+        self._tracer = tracer
+        self._name = name
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self._tracer._record(self._name, time.perf_counter() - self._t0)
+        return False
+
+
+class PhaseTracer:
+    """Host-side wall-time spans, accumulated per round.
+
+    ``span(name)`` returns a context manager; re-entering the same name
+    within one round accumulates (the async host-reference loop times
+    its insert per upload).  ``take()`` pops the current round's
+    ``{name: seconds}`` dict — the recorder calls it once per round, so
+    spans never leak across rounds.
+    """
+
+    enabled = True
+
+    def __init__(self):
+        self._spans: dict[str, float] = {}
+
+    def span(self, name: str) -> _Span:
+        return _Span(self, name)
+
+    def _record(self, name: str, dt: float) -> None:
+        self._spans[name] = self._spans.get(name, 0.0) + dt
+
+    def fence(self, *values) -> None:
+        """Block until every array in ``values`` (pytrees allowed) is
+        computed, so the enclosing span bills the device work to the
+        phase that launched it instead of whichever later phase first
+        touches the result."""
+        jax.block_until_ready([v for v in values if v is not None])
+
+    def discard(self, name: str) -> None:
+        """Drop a span that turned out to be vacuous (e.g. the engine
+        probed an executor's fused form and it answered "no fused
+        path") so events report only phases that really ran."""
+        self._spans.pop(name, None)
+
+    def take(self) -> dict[str, float]:
+        spans, self._spans = self._spans, {}
+        return spans
+
+
+NULL = NullTracer()
+
+
+@contextlib.contextmanager
+def profile_trace(profile_dir: str | None):
+    """``jax.profiler`` capture scoped to a ``with`` block — a no-op
+    when ``profile_dir`` is None (the default: span timing only)."""
+    if profile_dir is None:
+        yield
+        return
+    jax.profiler.start_trace(str(profile_dir))
+    try:
+        yield
+    finally:
+        jax.profiler.stop_trace()

@@ -24,7 +24,14 @@ The subsystem that replaces the monolithic ``federation.run`` loop:
   ``tests/test_fl_conformance.py``).
 * :mod:`repro.fl.runtime.checkpointing` — round-granular save/resume on
   top of ``repro.checkpoint.ckpt`` (the async buffer lanes are part of
-  the state pytree, so async runs resume bit-identically too).
+  the state pytree, so async runs resume bit-identically too); the
+  telemetry run manifest rides along as provenance.
+
+The telemetry plane lives next door in :mod:`repro.fl.obs`: pass a
+``RunRecorder`` as ``Engine(telemetry=...)`` to get phase-span wall
+times and structured per-round JSONL events — instrumentation is
+read-only and conformance-pinned to never perturb the round
+(``docs/observability.md``).
 
 See ``README.md`` next to this file for the backend architecture and
 how to run the conformance matrix locally, and ``docs/`` at the repo

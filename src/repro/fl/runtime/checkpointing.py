@@ -20,22 +20,36 @@ checkpoint mature in the resumed run exactly as they would have
 """
 from __future__ import annotations
 
+import json
 import pathlib
 import re
 
 from repro.checkpoint import ckpt
 
 _PAT = re.compile(r"round_(\d+)\.msgpack$")
+MANIFEST_NAME = "manifest.json"
 
 
 def path_for(directory: str | pathlib.Path, round_idx: int) -> pathlib.Path:
     return pathlib.Path(directory) / f"round_{round_idx:06d}.msgpack"
 
 
-def save(directory: str | pathlib.Path, state) -> pathlib.Path:
-    """Persist ``state``; the filename records the next round to run."""
+def save(directory: str | pathlib.Path, state,
+         manifest: dict | None = None) -> pathlib.Path:
+    """Persist ``state``; the filename records the next round to run.
+
+    ``manifest`` (the telemetry run manifest — config, seed, mesh, git
+    sha; see ``repro.fl.obs.manifest``) rides along as
+    ``manifest.json`` in the checkpoint directory, so a checkpoint can
+    always answer what produced it.  It is provenance only: ``restore``
+    never reads it, and a run without telemetry writes none."""
     path = path_for(directory, int(state.round_idx))
     ckpt.save(path, state)
+    if manifest is not None:
+        from repro.fl.obs.events import to_jsonable
+        (path.parent / MANIFEST_NAME).write_text(
+            json.dumps(to_jsonable(manifest), indent=2, sort_keys=True)
+            + "\n")
     return path
 
 

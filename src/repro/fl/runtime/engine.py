@@ -79,6 +79,7 @@ import numpy as np
 
 from repro.data.partition import ClientData
 from repro.fl import masked_collectives
+from repro.fl.obs.recorder import NULL as NULL_TELEMETRY
 from repro.fl.runtime import checkpointing
 from repro.fl.runtime.codec import CodecConfig, decode, encode
 from repro.fl.runtime import executors
@@ -169,11 +170,19 @@ class Engine:
     """Round orchestrator for one strategy over one client population."""
 
     def __init__(self, strategy, data: ClientData, cfg: RuntimeConfig,
-                 client_weights: jnp.ndarray | None = None, mesh=None):
+                 client_weights: jnp.ndarray | None = None, mesh=None,
+                 telemetry=None):
         self.strategy = strategy
         self.data = data
         self.cfg = cfg
         self.n = int(data.x_train.shape[0])
+        # the telemetry plane (repro.fl.obs): span/fence hooks around
+        # each round stage plus the per-round event sink.  Strictly
+        # read-only — it consumes reports and wall clocks, and nothing
+        # it computes flows back into the round, so the conformance
+        # suite pins obs-on == obs-off bit for bit.  The default NULL
+        # answers every hook as a no-op (no timing, no fences).
+        self.obs = telemetry if telemetry is not None else NULL_TELEMETRY
         # --- server-state API v2 contract checks -------------------------
         # downloads is a validated vocabulary, not free text: a typo used
         # to silently fall through to assigned-slot broadcast/billing
@@ -282,32 +291,42 @@ class Engine:
         start = int(state.round_idx)
         n_rounds = self.cfg.rounds if rounds is None else rounds
         for r in range(start, start + n_rounds):
-            state, rep = self.run_round(state, jax.random.fold_in(k_rounds, r))
+            with self.obs.span("round"):
+                state, rep = self.run_round(
+                    state, jax.random.fold_in(k_rounds, r))
+                self.obs.fence(state)
+            self.obs.on_round(rep)
             reports.append(rep)
             every = self.cfg.checkpoint_every
             if self.cfg.checkpoint_dir and every and (r + 1) % every == 0:
-                checkpointing.save(self.cfg.checkpoint_dir, state)
+                checkpointing.save(self.cfg.checkpoint_dir, state,
+                                   manifest=self.obs.manifest)
         return state, reports
 
     # -- one round ---------------------------------------------------------
 
     def run_round(self, state: EngineState, round_key: jax.Array
                   ) -> tuple[EngineState, RoundReport]:
+        obs = self.obs            # telemetry spans/fences — no-ops when off
         r = int(state.round_idx)
-        part = self.scheduler.sample(r, round_key)
-        sync = self.cfg.aggregation == "sync"
-        arrive = np.asarray(part.active)
-        if sync:
-            arrive = arrive & (np.asarray(part.staleness) == 0)
+        with obs.span("schedule"):
+            part = self.scheduler.sample(r, round_key)
+            sync = self.cfg.aggregation == "sync"
+            arrive = np.asarray(part.active)
+            if sync:
+                arrive = arrive & (np.asarray(part.staleness) == 0)
 
         # gather the sampled sub-pytree (static K) + per-client keys
-        keys = jax.random.split(round_key, self.n)
-        if self._identity:
-            sub_cs, sub_data = state.client_state, self.data
-        else:
-            keys = keys[part.idx]
-            sub_cs = jax.tree.map(lambda a: a[part.idx], state.client_state)
-            sub_data = jax.tree.map(lambda a: a[part.idx], self.data)
+        with obs.span("gather"):
+            keys = jax.random.split(round_key, self.n)
+            if self._identity:
+                sub_cs, sub_data = state.client_state, self.data
+            else:
+                keys = keys[part.idx]
+                sub_cs = jax.tree.map(lambda a: a[part.idx],
+                                      state.client_state)
+                sub_data = jax.tree.map(lambda a: a[part.idx], self.data)
+            obs.fence(keys)
 
         # identity wire + sync barrier: the executor may run the whole
         # round (train → masked collective → apply → eval) as one
@@ -318,55 +337,77 @@ class Engine:
         fused = None
         if sync and self._identity and self._wire_is_identity() \
                 and self._assign is None:
-            fused = self.executor.fused_sync_round(
-                self.strategy, sub_cs, state.server, sub_data, keys,
-                jnp.asarray(arrive))
+            with obs.span("fused_round"):
+                fused = self.executor.fused_sync_round(
+                    self.strategy, sub_cs, state.server, sub_data, keys,
+                    jnp.asarray(arrive))
+                obs.fence(fused)
+            if fused is None:
+                obs.discard("fused_round")   # in-process: no fused form
         refs = (state.ref_vecs, state.ref_round)
         if fused is not None:
             merged, server, counts, applied, acc_sub, slots = fused
-            up_bytes = self._identity_upload_bytes(
-                np.asarray(slots), np.asarray(part.active))
-            _, down_bc, down_pc = self._wire_downlink(
-                server.slots, counts, arrive, applied)
+            with obs.span("downlink"):
+                up_bytes = self._identity_upload_bytes(
+                    np.asarray(slots), np.asarray(part.active))
+                _, down_bc, down_pc = self._wire_downlink(
+                    server.slots, counts, arrive, applied)
         else:
             # (2) local work on the K sampled clients.  Training starts
             # from the codec-roundtripped broadcast rows — what a client
             # actually holds after a lossy downlink — not the
             # aggregator's full-precision state (identity wire: same
             # thing, zero cost).
-            new_sub, vecs, slots = self.executor.train(
-                self.strategy, sub_cs,
-                self._wire_tx_server(state.server.slots), sub_data, keys)
+            with obs.span("broadcast_encode"):
+                tx_server = self._wire_tx_server(state.server.slots)
+                obs.fence(tx_server)
+            with obs.span("client_step"):
+                new_sub, vecs, slots = self.executor.train(
+                    self.strategy, sub_cs, tx_server, sub_data, keys)
+                obs.fence(new_sub, vecs, slots)
 
             # (3) the wire: encode → meter → decode (sparse deltas run
             # against each client's tracked broadcast reference).
             # Metering sees the client-proposed slot tags — the frames
             # that crossed the wire — never the post-assign ids.
-            dec, up_bytes = self._wire_uplink(state, vecs, slots, part)
+            with obs.span("uplink_codec"):
+                dec, up_bytes = self._wire_uplink(state, vecs, slots, part)
+                obs.fence(dec)
 
             # (3b) server-side assignment (v2): recompute every upload's
             # slot id from the decoded payloads — FLIS's per-round
             # dynamic clustering; absent hook = keep proposed ids
             if self._assign is not None:
-                slots = self.executor.assign(
-                    self.strategy, state.server, dec, slots,
-                    jnp.asarray(arrive))
+                with obs.span("assign"):
+                    slots = self.executor.assign(
+                        self.strategy, state.server, dec, slots,
+                        jnp.asarray(arrive))
+                    obs.fence(slots)
 
             # (4) aggregation, folded into the strategy-owned server
             # state by its server_update hook (default: Alg. 2
             # retention — empty slots keep their previous row)
             if sync:
-                agg, counts = self.executor.masked_mean(
-                    self.strategy, dec, slots, jnp.asarray(arrive))
-                server = self._server_update(state.server, agg, counts)
+                with obs.span("aggregate"):
+                    agg, counts = self.executor.masked_mean(
+                        self.strategy, dec, slots, jnp.asarray(arrive))
+                    obs.fence(agg, counts)
+                with obs.span("server_update"):
+                    server = self._server_update(state.server, agg, counts)
+                    obs.fence(server)
             elif self.cfg.async_buffer == "host":
-                srv_mat, counts, n_agg, n_buf, n_evict, buf = \
-                    self._aggregate_async_host(state, dec, slots, part, r)
-                server = state.server._replace(slots=srv_mat)
+                with obs.span("aggregate"):
+                    srv_mat, counts, n_agg, n_buf, n_evict, buf = \
+                        self._aggregate_async_host(state, dec, slots,
+                                                   part, r)
+                    server = state.server._replace(slots=srv_mat)
+                    obs.fence(server, counts)
             else:
-                srv_mat, counts, n_agg, n_buf, n_evict, buf = \
-                    self._aggregate_async(state, dec, slots, part)
-                server = state.server._replace(slots=srv_mat)
+                with obs.span("aggregate"):
+                    srv_mat, counts, n_agg, n_buf, n_evict, buf = \
+                        self._aggregate_async(state, dec, slots, part)
+                    server = state.server._replace(slots=srv_mat)
+                    obs.fence(server, counts)
 
             # (5) broadcast + scatter + evaluate.  A slot row is only
             # pushed to clients when it actually received an aggregate
@@ -374,22 +415,32 @@ class Engine:
             # or a never-fed cluster) the zero-initialized/stale server
             # row would overwrite the client's freshly trained weights.
             recv = jnp.asarray(arrive)
-            applied = executors.applied_slots(slots, counts, recv)
-            rx_server, down_bc, down_pc = self._wire_downlink(
-                server.slots, counts, arrive, applied)
-            merged = self.executor.apply_merge(
-                self.strategy, new_sub, applied, rx_server, sub_cs, recv)
+            with obs.span("downlink"):
+                applied = executors.applied_slots(slots, counts, recv)
+                rx_server, down_bc, down_pc = self._wire_downlink(
+                    server.slots, counts, arrive, applied)
+                obs.fence(rx_server)
+            with obs.span("apply_merge"):
+                merged = self.executor.apply_merge(
+                    self.strategy, new_sub, applied, rx_server, sub_cs,
+                    recv)
+                obs.fence(merged)
             acc_sub = None
-            refs = self._update_refs(state, part, arrive, applied,
-                                     rx_server, r)
+            with obs.span("ref_track"):
+                refs = self._update_refs(state, part, arrive, applied,
+                                         rx_server, r)
+                obs.fence(refs)
 
         if sync:   # barrier bookkeeping, identical for fused and staged
             n_agg = int((np.asarray(slots)[arrive] >= 0).sum())
             buf = self._buf_of(state)
             n_buf = n_evict = 0
 
-        new_state, acc, assignment = self._scatter_eval(
-            state, part.idx, merged, applied, server, buf, refs, acc_sub)
+        with obs.span("eval"):
+            new_state, acc, assignment = self._scatter_eval(
+                state, part.idx, merged, applied, server, buf, refs,
+                acc_sub)
+            obs.fence(acc)
 
         rep = RoundReport(
             round_idx=r, mean_accuracy=acc.mean(),
@@ -406,6 +457,17 @@ class Engine:
         """Dense float32 encode→decode is a bit-exact identity (pinned by
         the codec tests) — the round needs no host codec boundary."""
         return self.cfg.codec.name == "float32" and not self.cfg.codec.sparse
+
+    def collective_payload_bytes(self) -> int | None:
+        """Per-device payload of this engine's aggregation collective on
+        the mesh — the static telemetry gauge recorded in the run
+        manifest (None in-process: aggregation is a local einsum)."""
+        if self.cfg.backend != "shardmap":
+            return None
+        return masked_collectives.collective_payload_bytes(
+            self.cfg.mesh_collective,
+            self.scheduler.k * self.strategy.j_slots,
+            self.strategy.vec_dim, self.strategy.n_slots)
 
     def _identity_upload_bytes(self, np_slots, active) -> int:
         """Identity-wire metering: frame = 4-byte slot id + 4·d payload,

@@ -74,6 +74,17 @@ lanes, and the round index are replicated ``P()``.
   per-shard in, everything else replicated both ways; one
   ``all_gather`` per upload lane (canonical insert order), plus the
   ``psum`` of :func:`buffered_weighted_mean_sharded` in psum mode.
+
+Telemetry span boundaries (``repro.fl.obs``): the engine wraps each
+executor call in a phase span and fences its outputs with
+``jax.block_until_ready``, so a stage program's span bills the whole
+compiled program — dispatch *and* device execution — to that phase
+(``client_step`` = ``_train_program``, ``assign`` =
+``_assign_program``, ``aggregate`` = ``_agg_program`` or the async
+update, ``apply_merge``/``eval`` likewise, and ``fused_round`` the
+whole ``_fused_program``).  Executors stay telemetry-free: nothing
+observability-related crosses into compiled code, which is what keeps
+obs-on == obs-off bit-exact.
 """
 from __future__ import annotations
 

@@ -34,6 +34,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 SAMPLING = ("uniform", "weighted", "round_robin")
 
@@ -61,6 +62,25 @@ class Participation(NamedTuple):
     idx: jnp.ndarray        # (K,) int32 — sampled client ids
     active: jnp.ndarray     # (K,) bool  — survived dropout
     staleness: jnp.ndarray  # (K,) int32 — 0 = on time, s ≥ 1 = straggler
+
+    def summary(self) -> dict:
+        """Host-side participation gauges for the telemetry plane
+        (``repro.fl.obs``): sampled / dropped / straggler counts and
+        the staleness histogram of surviving uploads (index = rounds of
+        delay; index 0 = on time).  Pure derivation — reading it cannot
+        perturb the round."""
+        active = np.asarray(self.active)
+        stale = np.asarray(self.staleness)
+        surviving = stale[active]
+        hist = (np.bincount(surviving) if surviving.size
+                else np.zeros(1, np.int64))
+        return {
+            "sampled": int(active.shape[0]),
+            "dropped": int((~active).sum()),
+            "arrived_on_time": int((active & (stale == 0)).sum()),
+            "stragglers": int((active & (stale > 0)).sum()),
+            "staleness_hist": hist.tolist(),
+        }
 
 
 class Scheduler:

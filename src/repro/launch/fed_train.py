@@ -29,6 +29,18 @@ async`` composes with ``--mesh``: the upload buffer is device state and
 the buffered round runs shard-mapped end-to-end (``--async-buffer
 host`` keeps the in-process numpy reference).  See
 ``docs/async-runtime.md``.
+
+Telemetry: ``--telemetry-dir RUN_DIR`` records the run through the
+observability plane (``repro.fl.obs``) — a manifest (config, seed,
+mesh, git sha, jax version) plus one structured JSONL event per round
+(accuracy deciles, cluster churn/occupancy, staleness histograms, wire
+bytes, per-phase wall times) — rendered afterwards by ``python -m
+repro.fl.obs summarize RUN_DIR``.  ``--profile-dir`` additionally
+captures a ``jax.profiler`` device trace.  Instrumentation never
+perturbs the round: obs-on == obs-off bit for bit, pinned by the
+conformance suite.  Round output always includes the worst-decile
+client accuracy (the distributional pFL metric), telemetry or not.
+See ``docs/observability.md``.
 """
 from __future__ import annotations
 
@@ -301,6 +313,17 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--resume", action="store_true")
+    # telemetry (repro.fl.obs — docs/observability.md)
+    ap.add_argument("--telemetry-dir", default=None, metavar="RUN_DIR",
+                    help="record the run: manifest.json + per-round "
+                         "events.jsonl (accuracy deciles, cluster "
+                         "churn, staleness, wire bytes, phase wall "
+                         "times); render with `python -m repro.fl.obs "
+                         "summarize RUN_DIR`.  Never perturbs the "
+                         "round (obs-on == obs-off, conformance-pinned)")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="additionally capture a jax.profiler device "
+                         "trace (TensorBoard-loadable) for the run")
     args = ap.parse_args(argv)
 
     key = jax.random.PRNGKey(args.seed)
@@ -353,7 +376,21 @@ def main(argv: list[str] | None = None) -> dict:
     strategy = _build_strategy(args.strategy, tm_cfg, fed_cfg, pool,
                                max_slots=args.max_slots,
                                probe_size=args.probe_size)
-    engine = Engine(strategy, data, rt_cfg, mesh=mesh)
+
+    telemetry = None
+    if args.telemetry_dir or args.profile_dir:
+        from repro.fl import obs
+        telemetry = obs.RunRecorder(run_dir=args.telemetry_dir,
+                                    profile_dir=args.profile_dir)
+    engine = Engine(strategy, data, rt_cfg, mesh=mesh, telemetry=telemetry)
+    if telemetry is not None:
+        telemetry.start(obs.build_manifest(
+            config=rt_cfg, seed=args.seed, mesh=mesh,
+            extra={"strategy": args.strategy, "dataset": args.dataset,
+                   "encoding": args.encoding, "n_clients": args.clients,
+                   "rounds": args.rounds, "argv": argv,
+                   "collective_payload_bytes":
+                       engine.collective_payload_bytes()}))
 
     state, remaining = None, None
     if args.resume and args.ckpt_dir:
@@ -389,7 +426,16 @@ def main(argv: list[str] | None = None) -> dict:
         print(f"weighted sampling from partition sizes: "
               f"p in [{float(p.min()):.4f}, {float(p.max()):.4f}]",
               flush=True)
-    state, reports = engine.run(key, state=state, rounds=remaining)
+    try:
+        state, reports = engine.run(key, state=state, rounds=remaining)
+    finally:
+        if telemetry is not None:
+            telemetry.close()
+
+    # worst-decile / per-decile client accuracy — the distributional
+    # personalization metric (ROADMAP item 5's "honest pFL metric"),
+    # derived from the report's per_client_accuracy; no engine change
+    from repro.fl.obs.events import accuracy_deciles, worst_decile_mean
 
     up = down_bc = down_pc = 0
     for rep in reports:
@@ -403,6 +449,7 @@ def main(argv: list[str] | None = None) -> dict:
                      f" evict={rep.evicted_uploads}")
         print(f"round {rep.round_idx:3d}: "
               f"acc={float(rep.mean_accuracy):.4f} "
+              f"w10%={worst_decile_mean(rep.per_client_accuracy):.4f} "
               f"up={rep.upload_bytes}B "
               f"down_bc={rep.download_bytes_broadcast}B "
               f"down_pc={rep.download_bytes_per_client}B "
@@ -412,8 +459,19 @@ def main(argv: list[str] | None = None) -> dict:
           f"download_broadcast={down_bc}B ({down_bc/1e6:.4f}MB) "
           f"download_per_client={down_pc}B ({down_pc/1e6:.4f}MB)",
           flush=True)
+    deciles = accuracy_deciles(reports[-1].per_client_accuracy)
+    print("final per-client accuracy deciles: "
+          + " ".join(f"p{10 * i}={d:.3f}" for i, d in enumerate(deciles)),
+          flush=True)
+    if args.telemetry_dir:
+        print(f"telemetry: {args.telemetry_dir} — render with "
+              f"`python -m repro.fl.obs summarize {args.telemetry_dir}`",
+              flush=True)
     return {"final_accuracy": float(reports[-1].mean_accuracy),
             "acc_per_round": [float(r.mean_accuracy) for r in reports],
+            "final_accuracy_deciles": deciles,
+            "final_worst_decile_mean": worst_decile_mean(
+                reports[-1].per_client_accuracy),
             "upload_bytes": up, "download_bytes_broadcast": down_bc,
             "download_bytes_per_client": down_pc}
 

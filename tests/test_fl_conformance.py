@@ -793,3 +793,42 @@ def test_async_buffer_never_holds_an_upload_older_than_max_staleness(data):
         state, _ = engine.run_round(state, jax.random.PRNGKey(r))
         ready = np.asarray(state.buf_ready)[np.asarray(state.buf_valid)]
         assert (ready <= r + max_staleness).all()
+
+
+# ---------------------------------------------------------------------------
+# telemetry neutrality: obs-on == obs-off, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("aggregation", ["sync", "async"])
+@pytest.mark.parametrize("backend", ["inprocess", "shardmap"])
+def test_telemetry_is_bit_neutral(backend, aggregation, data, tmp_path):
+    """The obs plane only reads: a fully instrumented run (RunRecorder
+    writing a run dir, spans + fences live) produces bit-identical
+    RoundReports and final state to the un-instrumented run, on both
+    backends and both aggregation modes."""
+    from repro.fl.obs import RunRecorder, build_manifest, read_events
+
+    cfg = RuntimeConfig(
+        rounds=3, aggregation=aggregation, async_min_uploads=2,
+        backend=backend,
+        scheduler=SchedulerConfig(participation=0.75, dropout=0.25,
+                                  straggler=0.5, max_staleness=2))
+    s_off, r_off = Engine(TPFLStrategy(TM_CFG, local_epochs=1),
+                          data, cfg).run(jax.random.PRNGKey(0))
+
+    run_dir = tmp_path / f"{backend}-{aggregation}"
+    rec = RunRecorder(run_dir=run_dir)
+    rec.start(build_manifest(config=cfg, seed=0))
+    try:
+        s_on, r_on = Engine(TPFLStrategy(TM_CFG, local_epochs=1),
+                            data, cfg, telemetry=rec
+                            ).run(jax.random.PRNGKey(0))
+    finally:
+        rec.close()
+
+    _assert_bitwise_equal_runs(s_off, r_off, s_on, r_on)
+    # ...and the instrumented run really materialized its run dir
+    assert (run_dir / "manifest.json").is_file()
+    events = read_events(run_dir / "events.jsonl")
+    assert [e["round"] for e in events] == [0, 1, 2]
+    assert all(e["phases"] for e in events)
