@@ -1,7 +1,10 @@
-"""TM kernel micro-bench: clause-eval oracle wall time (CPU) + Pallas
-kernel validation timing.  (The Pallas kernels target TPU; CPU interpret
-mode is a correctness harness, so the derived column reports the kernel's
-*analytic* TPU roofline time, not CPU wall time.)
+"""TM kernel micro-bench: jnp oracle vs interpret-mode Pallas kernels.
+
+Times both the pure-jnp clause-eval oracle and the actual Pallas
+kernels (interpret mode on this CPU container — the kernels target TPU,
+so the derived column reports the kernel's *analytic* TPU roofline
+time alongside the CPU wall time), plus the fused train-epoch kernel
+against its reference-scan equivalent.
 """
 from __future__ import annotations
 
@@ -11,13 +14,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import tm
-from repro.kernels import ref
+from repro.kernels import clause_eval, ref
 from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
 
 
 def bench(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    out = fn(*args)                  # warm-up: compile + first run, once
+    jax.block_until_ready(out)
     t0 = time.time()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
@@ -31,13 +34,47 @@ def run() -> list[str]:
         key = jax.random.PRNGKey(0)
         include = jax.random.bernoulli(key, 0.1, (C * m, L)).astype(jnp.int8)
         lits = jax.random.bernoulli(key, 0.5, (B, L)).astype(jnp.int8)
-        f = jax.jit(lambda i, l: ref.clause_outputs_ref(i, l))
-        us = bench(f, include, lits)
         flops = 2.0 * B * C * m * L
         bytes_ = (include.size + lits.size + B * C * m * 4)
         t_tpu = max(flops / PEAK_FLOPS_BF16, bytes_ / HBM_BW) * 1e6
+
+        f = jax.jit(lambda i, l: ref.clause_outputs_ref(i, l))
+        us = bench(f, include, lits)
         rows.append(f"clause_eval_C{C}_m{m}_B{B},{us:.1f},"
                     f"tpu_roofline_us={t_tpu:.2f}")
+
+        # the Pallas kernel itself, interpret mode (CPU correctness
+        # harness; same analytic TPU roofline as the oracle row).  Big
+        # tiles keep the interpret grid small — per-step overhead
+        # dominates interpret wall time, and tile invariance is pinned
+        # by tests/test_kernels.py, so the tiling is a free choice here.
+        us_k = bench(lambda i, l: clause_eval.clause_outputs_pallas(
+            i, l, bt=B, ct=512, lt=512), include, lits)
+        rows.append(f"clause_eval_pallas_interp_C{C}_m{m}_B{B},{us_k:.1f},"
+                    f"tpu_roofline_us={t_tpu:.2f}")
+
+    # fused train-epoch kernel vs the reference per-sample scan, at the
+    # quick-bench federated scale (one round's client cohort)
+    N, S, C, m, o = 10, 40, 10, 48, 100
+    cfg = tm.TMConfig(n_classes=C, n_clauses=m, n_features=o,
+                      n_states=63, s=5.0, T=40)
+    kcfg = tm.TMConfig(n_classes=C, n_clauses=m, n_features=o,
+                       n_states=63, s=5.0, T=40, use_kernel=True)
+    key = jax.random.PRNGKey(1)
+    params = jax.vmap(lambda k: tm.init_params(cfg, k))(
+        jax.random.split(key, N))
+    xs = (jax.random.uniform(jax.random.fold_in(key, 1),
+                             (N, S, o)) < 0.5).astype(jnp.int32)
+    ys = jax.random.randint(jax.random.fold_in(key, 2), (N, S), 0, C)
+    keys = jax.random.split(jax.random.fold_in(key, 3), N)
+    us_fused = bench(
+        lambda p, x, y, k: tm.train_batched(p, x, y, k, kcfg),
+        params, xs, ys, keys, iters=3)
+    us_ref = bench(
+        lambda p, x, y, k: tm.train_batched(p, x, y, k, cfg),
+        params, xs, ys, keys, iters=3)
+    rows.append(f"train_epoch_fused_interp_N{N}_S{S}_C{C}_m{m},"
+                f"{us_fused:.1f},ref_scan_us={us_ref:.1f}")
     return rows
 
 

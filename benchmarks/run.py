@@ -41,14 +41,20 @@ def emit_bench(dataset: str, scale, backend: str,
 
     Strategies come from the CLI's one name→Strategy factory
     (``fed_train._build_strategy`` over ``fed_train.STRATEGY_CHOICES``),
-    so the bench can't drift from what ``fed_train`` runs.  CI's
-    conformance-mesh-8 job runs this with ``--mesh`` on the 8-device
-    clients mesh and uploads the JSON as an artifact, so the perf
-    trajectory of the shard-mapped round has real data points.
+    so the bench can't drift from what ``fed_train`` runs.  The two TM
+    strategies (tpfl, fedtm) are additionally timed per ``tm_backend``
+    (the reference jnp path and the fused Pallas kernel path — same
+    round outputs bit-for-bit, conformance-pinned), so the artifact
+    carries the kernel-vs-ref perf trajectory.  CI's conformance-mesh-8
+    job runs this with ``--mesh`` on the 8-device clients mesh and
+    uploads the JSON as an artifact, so the perf trajectory of the
+    shard-mapped round has real data points.
 
     Artifact schema: ``rounds_timed`` / ``warmup_rounds`` (ints),
-    ``round_wall_s`` ({strategy: median seconds}), ``phase_wall_s``
-    ({strategy: {phase: median seconds}})."""
+    ``round_wall_s`` ({strategy: {tm_backend: median seconds}}),
+    ``phase_wall_s`` ({strategy: {tm_backend: {phase: median
+    seconds}}}).  MLP strategies have a ``ref`` entry only (the TM
+    backend is a no-op for them)."""
     import statistics
     import time as _time
 
@@ -67,6 +73,7 @@ def emit_bench(dataset: str, scale, backend: str,
     fed_cfg = federation.FedConfig(n_clients=scale.n_clients,
                                    rounds=n_rounds,
                                    local_epochs=scale.local_epochs)
+    tm_strategies = ("tpfl", "fedtm")
     out = {"dataset": dataset, "backend": backend,
            "n_devices": len(jax.devices()),
            "n_clients": scale.n_clients,
@@ -74,35 +81,42 @@ def emit_bench(dataset: str, scale, backend: str,
            "warmup_rounds": warmup_rounds,
            "round_wall_s": {}, "phase_wall_s": {}}
     for name in fed_train.STRATEGY_CHOICES:
-        strat = fed_train._build_strategy(name, tm_cfg, fed_cfg, pool)
-        rec = RunRecorder()          # in-memory: phase spans, no run dir
-        engine = Engine(strat, data, RuntimeConfig(rounds=n_rounds,
-                                                   backend=backend),
-                        telemetry=rec)
-        key = jax.random.PRNGKey(0)
-        k_init, k_rounds = jax.random.split(key)
-        state = engine.init(k_init)
-        wall = []
-        for r in range(n_rounds):
-            t0 = _time.perf_counter()
-            state, rep = engine.run_round(state,
-                                          jax.random.fold_in(k_rounds, r))
-            jax.block_until_ready(state)
-            dt = _time.perf_counter() - t0
-            rec.on_round(rep)        # pops this round's phase spans
-            if r >= warmup_rounds:
-                wall.append(dt)
-        out["round_wall_s"][name] = round(statistics.median(wall), 4)
-        timed = rec.history[warmup_rounds:]
-        phases: dict[str, list[float]] = {}
-        for evt in timed:
-            for ph, s in (evt["phases"] or {}).items():
-                phases.setdefault(ph, []).append(s)
-        out["phase_wall_s"][name] = {
-            ph: round(statistics.median(v), 4)
-            for ph, v in sorted(phases.items())}
-        print(f"bench_round_latency,{out['round_wall_s'][name]*1e6:.0f},"
-              f"strategy={name}", flush=True)
+        backends = ("ref", "pallas") if name in tm_strategies else ("ref",)
+        out["round_wall_s"][name] = {}
+        out["phase_wall_s"][name] = {}
+        for tb in backends:
+            strat = fed_train._build_strategy(name, tm_cfg, fed_cfg, pool)
+            rec = RunRecorder()      # in-memory: phase spans, no run dir
+            engine = Engine(strat, data,
+                            RuntimeConfig(rounds=n_rounds, backend=backend,
+                                          tm_backend=tb),
+                            telemetry=rec)
+            key = jax.random.PRNGKey(0)
+            k_init, k_rounds = jax.random.split(key)
+            state = engine.init(k_init)
+            wall = []
+            for r in range(n_rounds):
+                t0 = _time.perf_counter()
+                state, rep = engine.run_round(
+                    state, jax.random.fold_in(k_rounds, r))
+                jax.block_until_ready(state)
+                dt = _time.perf_counter() - t0
+                rec.on_round(rep)    # pops this round's phase spans
+                if r >= warmup_rounds:
+                    wall.append(dt)
+            out["round_wall_s"][name][tb] = round(statistics.median(wall),
+                                                  4)
+            timed = rec.history[warmup_rounds:]
+            phases: dict[str, list[float]] = {}
+            for evt in timed:
+                for ph, s in (evt["phases"] or {}).items():
+                    phases.setdefault(ph, []).append(s)
+            out["phase_wall_s"][name][tb] = {
+                ph: round(statistics.median(v), 4)
+                for ph, v in sorted(phases.items())}
+            print(f"bench_round_latency,"
+                  f"{out['round_wall_s'][name][tb]*1e6:.0f},"
+                  f"strategy={name}/{tb}", flush=True)
     ART.mkdir(exist_ok=True)
     (ART / "BENCH_round_latency.json").write_text(json.dumps(out, indent=2))
     return out
@@ -129,13 +143,15 @@ def main() -> None:
                          "thermometer:4 | quantile:8")
     ap.add_argument("--emit-bench", action="store_true",
                     help="only run the round-latency bench: per "
-                         "strategy, 1 warm-up round then the median of "
-                         "5 perf_counter-timed, block_until_ready-"
-                         "fenced sync rounds, plus the per-phase "
-                         "wall-time breakdown from the telemetry "
-                         "tracer — written to artifacts/"
+                         "strategy (and per tm_backend — ref and "
+                         "pallas — for tpfl/fedtm), 1 warm-up round "
+                         "then the median of 5 perf_counter-timed, "
+                         "block_until_ready-fenced sync rounds, plus "
+                         "the per-phase wall-time breakdown from the "
+                         "telemetry tracer — written to artifacts/"
                          "BENCH_round_latency.json (rounds_timed, "
-                         "warmup_rounds, round_wall_s, phase_wall_s; "
+                         "warmup_rounds, round_wall_s, phase_wall_s, "
+                         "both keyed {strategy: {tm_backend: ...}}; "
                          "the conformance-mesh-8 CI artifact)")
     args = ap.parse_args()
     backend = "shardmap" if args.mesh else "inprocess"

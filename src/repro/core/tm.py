@@ -142,7 +142,10 @@ def predict(params: TMParams, x: jnp.ndarray, cfg: TMConfig) -> jnp.ndarray:
         w = params.weights if cfg.weighted else jnp.ones_like(params.weights)
         votes = kops.fused_votes(include_mask(params, cfg), literals(x),
                                  (pol[None] * w), predict=True)
-        return jnp.argmax(votes, axis=-1)
+        # Eq. 1 clips votes to ±T before the argmax; under saturation the
+        # clipped and raw argmax can disagree on ties, so the kernel path
+        # must clip exactly like class_votes(..., clip=True) does.
+        return jnp.argmax(jnp.clip(votes, -cfg.T, cfg.T), axis=-1)
     _, votes = forward(params, x, cfg, predict=True)
     return jnp.argmax(votes, axis=-1)
 
@@ -204,8 +207,7 @@ def _feedback_one_class(ta: jnp.ndarray, w: jnp.ndarray, lits: jnp.ndarray,
     # --- fused Type I / Type II TA transition -----------------------------
     # (Pallas kernel on TPU; jnp oracle otherwise — identical semantics,
     #  see repro/kernels/ref.py::ta_update_ref.)
-    p_inc = 1.0 if cfg.boost_true_positive else (cfg.s - 1.0) / cfg.s
-    p_dec = 1.0 / cfg.s
+    p_inc, p_dec = _feedback_probs(cfg)
     u_inc = jax.random.uniform(k_s1, (m, L))
     u_dec = jax.random.uniform(k_s2, (m, L))
     args = (ta, lits[None, :], clause_out[:, None],
@@ -257,10 +259,35 @@ def _train_one_sample(params: TMParams, x: jnp.ndarray, y: jnp.ndarray,
     return TMParams(ta_state=ta, weights=w)
 
 
+def _feedback_probs(cfg: TMConfig) -> tuple[float, float]:
+    p_inc = 1.0 if cfg.boost_true_positive else (cfg.s - 1.0) / cfg.s
+    return p_inc, 1.0 / cfg.s
+
+
 @partial(jax.jit, static_argnames=("cfg",))
 def train_epoch(params: TMParams, xs: jnp.ndarray, ys: jnp.ndarray,
                 key: jax.Array, cfg: TMConfig) -> TMParams:
-    """One sample-sequential pass over (xs, ys) — the paper's local epoch."""
+    """One sample-sequential pass over (xs, ys) — the paper's local epoch.
+
+    On the kernel path the whole epoch is a single fused ``pallas_call``
+    (clause banks stay in VMEM across samples) with the randomness
+    pre-generated under the reference key discipline — bit-identical to
+    the scan below, pinned by ``tests/test_tm.py``.
+    """
+    if cfg.use_kernel and cfg.weighted:
+        from repro.kernels import draws as kdraws
+        from repro.kernels import ops as kops
+        p_inc, p_dec = _feedback_probs(cfg)
+        offs, u_act, coin = kdraws.epoch_draws(
+            key, xs.shape[0], cfg.n_clauses, cfg.n_literals,
+            cfg.n_classes, p_inc, p_dec)
+        ys32 = ys.astype(jnp.int32)
+        cls2 = jnp.stack([ys32, (ys32 + offs) % cfg.n_classes], axis=-1)
+        ta, w = kops.train_epoch_fused(
+            params.ta_state[None], params.weights[None],
+            literals(xs)[None], cls2[None], u_act[None], coin[None],
+            n_states=cfg.n_states, T=cfg.T)
+        return TMParams(ta_state=ta[0], weights=w[0])
 
     def step(p, inp):
         x, y, k = inp
@@ -278,3 +305,88 @@ def train(params: TMParams, xs: jnp.ndarray, ys: jnp.ndarray,
         return train_epoch(p, xs, ys, k, cfg), None
     params, _ = jax.lax.scan(body, params, jax.random.split(key, epochs))
     return params
+
+
+# ---------------------------------------------------------------------------
+# Client-batched entry points (federated rounds; tm_backend="pallas")
+# ---------------------------------------------------------------------------
+# All three take params/data with a leading client axis N.  On the
+# reference path they are plain vmaps of the per-client functions; on the
+# kernel path the whole round is one client-batched kernel launch, which
+# is the fast shape (vmap of a pallas_call serializes clients via grid
+# batching).  Outputs are bit-identical either way.
+
+@partial(jax.jit, static_argnames=("cfg", "epochs"))
+def train_batched(params: TMParams, xs: jnp.ndarray, ys: jnp.ndarray,
+                  keys: jnp.ndarray, cfg: TMConfig,
+                  epochs: int = 1) -> TMParams:
+    """params stacked (N, ...); xs (N,S,o); ys (N,S); keys (N,2)."""
+    if not (cfg.use_kernel and cfg.weighted):
+        return jax.vmap(
+            lambda p, x, y, k: train(p, x, y, k, cfg, epochs)
+        )(params, xs, ys, keys)
+
+    from repro.kernels import draws as kdraws
+    from repro.kernels import ops as kops
+    p_inc, p_dec = _feedback_probs(cfg)
+    n_samples = ys.shape[1]
+    lits = literals(xs)
+    ys32 = ys.astype(jnp.int32)
+    # (epochs, N, key): same per-client split(key, epochs) as train()
+    ekeys = jnp.swapaxes(
+        jax.vmap(lambda k: jax.random.split(k, epochs))(keys), 0, 1)
+
+    def epoch_body(carry, ek):
+        ta, w = carry
+        offs, u_act, coin = jax.vmap(
+            lambda k: kdraws.epoch_draws(k, n_samples, cfg.n_clauses,
+                                         cfg.n_literals, cfg.n_classes,
+                                         p_inc, p_dec))(ek)
+        cls2 = jnp.stack([ys32, (ys32 + offs) % cfg.n_classes], axis=-1)
+        ta, w = kops.train_epoch_fused(ta, w, lits, cls2, u_act, coin,
+                                       n_states=cfg.n_states, T=cfg.T)
+        return (ta, w), None
+
+    (ta, w), _ = jax.lax.scan(epoch_body,
+                              (params.ta_state, params.weights), ekeys)
+    return TMParams(ta_state=ta, weights=w)
+
+
+@partial(jax.jit, static_argnames=("cfg", "weighted"))
+def confidence_scores_batched(params: TMParams, x_conf: jnp.ndarray,
+                              cfg: TMConfig,
+                              weighted: bool = False) -> jnp.ndarray:
+    """Stacked confidence margins: params (N, ...), x_conf (N,B,o) → (N,C)."""
+    if not cfg.use_kernel:
+        return jax.vmap(
+            lambda p, x: confidence_scores(p, x, cfg, weighted)
+        )(params, x_conf)
+
+    from repro.kernels import ops as kops
+    include = (params.ta_state > cfg.n_states).astype(jnp.int32)
+    pol = clause_polarity(cfg)
+    if weighted:
+        wpol = pol[None, None, :] * params.weights
+    else:
+        wpol = jnp.broadcast_to(pol[None, None, :], params.weights.shape)
+    margin = kops.fused_votes_batched(include, literals(x_conf), wpol,
+                                      predict=True)  # (N, B, C)
+    return margin.sum(axis=1)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def accuracy_batched(params: TMParams, x: jnp.ndarray, y: jnp.ndarray,
+                     cfg: TMConfig) -> jnp.ndarray:
+    """Stacked accuracy: params (N, ...), x (N,B,o), y (N,B) → (N,)."""
+    if not cfg.use_kernel:
+        return jax.vmap(
+            lambda p, xx, yy: accuracy(p, xx, yy, cfg))(params, x, y)
+
+    from repro.kernels import ops as kops
+    include = (params.ta_state > cfg.n_states).astype(jnp.int32)
+    pol = clause_polarity(cfg)
+    w = params.weights if cfg.weighted else jnp.ones_like(params.weights)
+    votes = kops.fused_votes_batched(include, literals(x),
+                                     pol[None, None, :] * w, predict=True)
+    pred = jnp.argmax(jnp.clip(votes, -cfg.T, cfg.T), axis=-1)
+    return (pred == y).mean(axis=-1)

@@ -92,6 +92,7 @@ from repro.fl.runtime.strategy import (DOWNLOADS, ServerState,
                                        resolve_server_update)
 
 BACKENDS = ("inprocess", "shardmap")
+TM_BACKENDS = ("ref", "pallas")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,6 +108,7 @@ class RuntimeConfig:
     backend: str = "inprocess"        # inprocess | shardmap
     mesh_axis: str = "clients"        # shard_map axis clients live on
     mesh_collective: str = "gather"   # gather (bit-exact) | psum (C·m bytes)
+    tm_backend: str = "ref"           # ref (jnp) | pallas (fused TM kernels)
     checkpoint_dir: str | None = None
     checkpoint_every: int = 0         # 0 = never
 
@@ -115,6 +117,8 @@ class RuntimeConfig:
             raise ValueError(f"unknown aggregation {self.aggregation!r}")
         if self.backend not in BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}")
+        if self.tm_backend not in TM_BACKENDS:
+            raise ValueError(f"unknown tm_backend {self.tm_backend!r}")
         if self.mesh_collective not in COLLECTIVES:
             raise ValueError(
                 f"unknown mesh_collective {self.mesh_collective!r}")
@@ -172,6 +176,17 @@ class Engine:
     def __init__(self, strategy, data: ClientData, cfg: RuntimeConfig,
                  client_weights: jnp.ndarray | None = None, mesh=None,
                  telemetry=None):
+        # tm_backend="pallas" routes TM strategies through the fused
+        # Pallas kernels: TMConfig.use_kernel flips the per-op dispatch
+        # in core/tm.py *and* makes the strategy advertise its fused
+        # client-batched hooks to the executors (strategy.py /
+        # executors._client_step_block).  Non-TM strategies (no tm_cfg)
+        # are untouched — the flag is a no-op for the MLP baselines.
+        if cfg.tm_backend == "pallas" and \
+                getattr(strategy, "tm_cfg", None) is not None:
+            strategy = dataclasses.replace(
+                strategy, tm_cfg=dataclasses.replace(
+                    strategy.tm_cfg, use_kernel=True))
         self.strategy = strategy
         self.data = data
         self.cfg = cfg

@@ -128,6 +128,35 @@ def _broadcast_apply_merge(strategy, new_sub, applied, server, old_sub,
     return jax.tree.map(keep, bc_sub, old_sub)
 
 
+def _client_step_block(strategy):
+    """The block form of ``client_step`` over a stacked client cohort.
+
+    Default: a vmap of the per-client step.  Strategies that set
+    ``use_fused_kernels`` (the engine's ``tm_backend="pallas"``) supply
+    ``fused_client_step`` — one client-batched kernel launch instead of
+    a vmap (vmap of a ``pallas_call`` batches by prepending a grid axis,
+    serializing clients).  Bit-identical outputs either way, so every
+    execution path below dispatches through here.  The branch resolves
+    at trace time: the strategy is a static (hashable) argument of each
+    stage program."""
+    if getattr(strategy, "use_fused_kernels", False):
+        return strategy.fused_client_step
+
+    def block(cs, server, d, keys):
+        return jax.vmap(strategy.client_step,
+                        in_axes=(0, None, 0, 0))(cs, server, d, keys)
+
+    return block
+
+
+def _evaluate_block(strategy):
+    """Block form of ``evaluate`` — same dispatch as
+    :func:`_client_step_block`."""
+    if getattr(strategy, "use_fused_kernels", False):
+        return strategy.fused_evaluate
+    return lambda cs, x, y: jax.vmap(strategy.evaluate)(cs, x, y)
+
+
 # ---------------------------------------------------------------------------
 # in-process backend (the reference semantics)
 # ---------------------------------------------------------------------------
@@ -136,8 +165,7 @@ class InProcessExecutor:
     """Eager vmap backend — every round is host-orchestrated jax ops."""
 
     def train(self, strategy, sub_cs, server, sub_data, keys):
-        new_sub, upload = jax.vmap(
-            strategy.client_step, in_axes=(0, None, 0, 0))(
+        new_sub, upload = _client_step_block(strategy)(
             sub_cs, server, sub_data, keys)
         return new_sub, upload.vecs, upload.slots     # (K,j,d), (K,j)
 
@@ -164,7 +192,7 @@ class InProcessExecutor:
                                       rx_server, old_sub, recv)
 
     def evaluate(self, strategy, cs, x_test, y_test):
-        return jax.vmap(strategy.evaluate)(cs, x_test, y_test)
+        return _evaluate_block(strategy)(cs, x_test, y_test)
 
     def async_update(self, strategy, buf, up, round_idx, prev,
                      min_uploads: int):
@@ -233,8 +261,7 @@ def _sync_round_body(strategy, axis: str, collective: str,
     server_update = resolve_server_update(strategy)
 
     def body(sub_cs, server, sub_data, keys, arrive):
-        new_sub, up = jax.vmap(
-            strategy.client_step, in_axes=(0, None, 0, 0))(
+        new_sub, up = _client_step_block(strategy)(
             sub_cs, server.slots, sub_data, keys)
         masked = jnp.where(arrive[:, None], up.slots, -1)
         agg, counts = _sharded_masked_mean(
@@ -244,7 +271,7 @@ def _sync_round_body(strategy, axis: str, collective: str,
         applied = applied_slots(up.slots, counts, arrive)
         merged = _broadcast_apply_merge(strategy, new_sub, applied,
                                         server2.slots, sub_cs, arrive)
-        acc = jax.vmap(strategy.evaluate)(
+        acc = _evaluate_block(strategy)(
             merged, sub_data.x_test, sub_data.y_test)
         return merged, server2, counts, applied, acc, up.slots
 
@@ -288,8 +315,7 @@ def _train_program(strategy, mesh, axis, sub_cs, server, sub_data, keys):
     spec = P(axis)
 
     def body(cs, srv, d, k):
-        return jax.vmap(strategy.client_step,
-                        in_axes=(0, None, 0, 0))(cs, srv, d, k)
+        return _client_step_block(strategy)(cs, srv, d, k)
 
     return shard_map(body, mesh=mesh,
                      in_specs=(spec, P(), spec, spec),
@@ -362,7 +388,7 @@ def _apply_program(strategy, mesh, axis, new_sub, applied, rx_server,
 def _eval_program(strategy, mesh, axis, cs, x_test, y_test):
     spec = P(axis)
     return shard_map(
-        lambda c, x, y: jax.vmap(strategy.evaluate)(c, x, y),
+        _evaluate_block(strategy),
         mesh=mesh, in_specs=(spec, spec, spec),
         out_specs=spec)(cs, x_test, y_test)
 

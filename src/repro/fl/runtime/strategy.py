@@ -210,6 +210,10 @@ class TPFLStrategy:
         if self.conf_threshold is not None:
             c_top = jnp.where(vals >= self.conf_threshold, c_top, -1)
         vecs = params.weights[jnp.clip(c_top, 0)].astype(jnp.float32)
+        # slot −1 means "share nothing" — its payload row must be zero,
+        # not class 0's weights, or the wire meters bytes for frames the
+        # server drops (conformance pins the corrected totals).
+        vecs = jnp.where((c_top >= 0)[..., None], vecs, 0.0)
         return params, Upload(vecs, c_top.astype(jnp.int32))
 
     @staticmethod
@@ -231,6 +235,36 @@ class TPFLStrategy:
     def evaluate(self, cs: tm.TMParams, x: jnp.ndarray,
                  y: jnp.ndarray) -> jnp.ndarray:
         return tm.accuracy(cs, x, y, self.tm_cfg)
+
+    # --- fused client-batched path (tm_backend="pallas") ------------------
+    # One kernel launch for the whole sampled cohort instead of a vmap of
+    # per-client steps (vmap of a pallas_call serializes clients).  The
+    # executors dispatch here when ``use_fused_kernels`` is set; outputs
+    # are bit-identical to the vmapped ``client_step``/``evaluate``.
+
+    @property
+    def use_fused_kernels(self) -> bool:
+        return self.tm_cfg.use_kernel
+
+    def fused_client_step(self, cs: tm.TMParams, slots: jnp.ndarray,
+                          d: ClientData, keys: jnp.ndarray):
+        del slots
+        cfg = self.tm_cfg
+        params = tm.train_batched(cs, d.x_train, d.y_train, keys, cfg,
+                                  epochs=self.local_epochs)
+        conf = tm.confidence_scores_batched(
+            params, d.x_conf, cfg, weighted=self.weighted_confidence)
+        vals, c_top = jax.lax.top_k(conf, self.top_classes)     # (N, j)
+        if self.conf_threshold is not None:
+            c_top = jnp.where(vals >= self.conf_threshold, c_top, -1)
+        rows = jnp.arange(c_top.shape[0])[:, None]
+        vecs = params.weights[rows, jnp.clip(c_top, 0)].astype(jnp.float32)
+        vecs = jnp.where((c_top >= 0)[..., None], vecs, 0.0)
+        return params, Upload(vecs, c_top.astype(jnp.int32))
+
+    def fused_evaluate(self, cs: tm.TMParams, x: jnp.ndarray,
+                       y: jnp.ndarray) -> jnp.ndarray:
+        return tm.accuracy_batched(cs, x, y, self.tm_cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -640,6 +674,25 @@ class FedTMStrategy:
     def evaluate(self, cs: tm.TMParams, x: jnp.ndarray,
                  y: jnp.ndarray) -> jnp.ndarray:
         return tm.accuracy(cs, x, y, self.tm_cfg)
+
+    # --- fused client-batched path (tm_backend="pallas") ------------------
+
+    @property
+    def use_fused_kernels(self) -> bool:
+        return self.tm_cfg.use_kernel
+
+    def fused_client_step(self, cs: tm.TMParams, slots: jnp.ndarray,
+                          d: ClientData, keys: jnp.ndarray):
+        del slots
+        params = tm.train_batched(cs, d.x_train, d.y_train, keys,
+                                  self.tm_cfg, epochs=self.local_epochs)
+        n = d.y_train.shape[0]
+        vecs = params.weights.astype(jnp.float32).reshape(n, 1, -1)
+        return params, Upload(vecs, jnp.zeros((n, 1), jnp.int32))
+
+    def fused_evaluate(self, cs: tm.TMParams, x: jnp.ndarray,
+                       y: jnp.ndarray) -> jnp.ndarray:
+        return tm.accuracy_batched(cs, x, y, self.tm_cfg)
 
 
 def build_baseline_strategy(name: str, *, n_features: int, n_classes: int,

@@ -22,6 +22,16 @@ Two kernels:
   `votes = fired @ (polarity·weight)` without materializing the `(B, C, m)`
   clause tensor in HBM.
 
+* :func:`fused_votes_batched_pallas` — the same fused vote with a leading
+  client axis, one launch for a whole federated round (`grid=(1,)`,
+  whole-array blocks).  The per-class reduction is a `(CM, C)` selector
+  matmul so the kernel body needs no reshape; the predict-mode
+  empty-clause rule is folded into the weight plane (`wpol · nonempty`,
+  exact in f32).  This is what the engine's `tm_backend="pallas"`
+  evaluate/confidence paths call — batching *inside* the kernel instead
+  of vmapping `fused_votes_pallas` (vmap of a `pallas_call` prepends a
+  grid axis, serializing clients).
+
 On this CPU-only container the kernels run under ``interpret=True``
 (exercised by the test suite against :mod:`repro.kernels.ref`); on real
 TPUs the same `pallas_call`s compile to Mosaic.
@@ -152,3 +162,56 @@ def fused_votes_pallas(include: jnp.ndarray, lits: jnp.ndarray,
         name="tm_fused_votes",
     )(nlit, inc, wp, ne)
     return votes[:B].astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Kernel 3: client-batched fused votes (one launch per federated round)
+# ---------------------------------------------------------------------------
+
+def _votes_batched_kernel(nlit_ref, inc_ref, wp_ref, sel_ref, out_ref):
+    nlit = nlit_ref[...].astype(jnp.float32)          # (N, B, L)
+    inc = inc_ref[...].astype(jnp.float32)            # (N, CM, L)
+    viol = jax.lax.dot_general(                        # (N, B, CM)
+        nlit, inc, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    fired = (viol == 0.0).astype(jnp.float32)
+    contrib = fired * wp_ref[...][:, None, :]          # wp: (N, CM)
+    out_ref[...] = jax.lax.dot_general(                # (N, B, C)
+        contrib, sel_ref[...], (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("predict", "interpret"))
+def fused_votes_batched_pallas(include: jnp.ndarray, lits: jnp.ndarray,
+                               wpol: jnp.ndarray, predict: bool = True,
+                               interpret: bool = True) -> jnp.ndarray:
+    """include: (N,C,m,L); lits: (N,B,L); wpol: (N,C,m) → votes (N,B,C) i32.
+
+    Empty clauses are killed by zeroing their weight instead of their
+    clause output — ``fired·(wpol·nonempty) == (fired·nonempty)·wpol``
+    exactly (small-int products are exact in f32), which keeps the kernel
+    a pair of dot_generals with no masking pass.
+    """
+    N, C, m, L = include.shape
+    B = lits.shape[1]
+    CM = C * m
+    inc = include.reshape(N, CM, L).astype(jnp.int8)
+    nlit = (1 - lits).astype(jnp.int8)
+    wp = wpol.astype(jnp.float32)
+    if predict:
+        wp = wp * (include.sum(-1) > 0).astype(jnp.float32)
+    wp = wp.reshape(N, CM)
+    sel = jax.nn.one_hot(jnp.arange(CM) // m, C, dtype=jnp.float32)
+
+    whole = [pl.BlockSpec(a.shape, lambda i, nd=a.ndim: (0,) * nd)
+             for a in (nlit, inc, wp, sel)]
+    votes = pl.pallas_call(
+        _votes_batched_kernel,
+        grid=(1,),
+        in_specs=whole,
+        out_specs=pl.BlockSpec((N, B, C), lambda i: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, B, C), jnp.float32),
+        interpret=interpret,
+        name="tm_fused_votes_batched",
+    )(nlit, inc, wp, sel)
+    return votes.astype(jnp.int32)

@@ -10,6 +10,7 @@ import jax.numpy as jnp
 
 from repro.kernels import clause_eval as _ce
 from repro.kernels import ta_update as _ta
+from repro.kernels import train_epoch as _te
 
 
 def _interpret_default() -> bool:
@@ -36,6 +37,25 @@ def fused_votes(include: jnp.ndarray, lits: jnp.ndarray, wpol: jnp.ndarray,
                 predict: bool = True) -> jnp.ndarray:
     """(C,m,L) × (B,L) × (C,m) → unclipped Eq.-1 votes (B, C)."""
     return _ce.fused_votes_pallas(include, lits, wpol, predict=predict,
+                                  interpret=_interpret_default())
+
+
+def fused_votes_batched(include: jnp.ndarray, lits: jnp.ndarray,
+                        wpol: jnp.ndarray, predict: bool = True
+                        ) -> jnp.ndarray:
+    """Client-batched Eq.-1 votes: (N,C,m,L) × (N,B,L) × (N,C,m) → (N,B,C)."""
+    return _ce.fused_votes_batched_pallas(include, lits, wpol,
+                                          predict=predict,
+                                          interpret=_interpret_default())
+
+
+def train_epoch_fused(ta: jnp.ndarray, w: jnp.ndarray, lits: jnp.ndarray,
+                      cls2: jnp.ndarray, u_act: jnp.ndarray,
+                      coin: jnp.ndarray, *, n_states: int, T: int
+                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One fused training epoch over stacked clients; see train_epoch.py."""
+    return _te.train_epoch_pallas(ta, w, lits, cls2, u_act, coin,
+                                  n_states=n_states, T=T,
                                   interpret=_interpret_default())
 
 

@@ -1,0 +1,151 @@
+"""Fused TM training-epoch kernel: one ``pallas_call`` per epoch.
+
+The reference ``tm.train_epoch`` scans samples on the host side of the
+kernel boundary: each scan step re-launches batch-1 clause evaluation
+and two TA updates, so the clause banks round-trip HBM every sample.
+This kernel inverts that — the whole parameter state (every client's
+``ta_state`` and ``weights``) is resident in VMEM for the full epoch,
+and the per-sample feedback loop runs *inside* the kernel body
+(``grid=(1,)``, whole-array blocks; the no-intermediate-HBM idiom).
+
+Layout is client-batched: a leading ``N`` axis carries all clients of a
+federated round through one launch.  This is deliberately *not* a
+per-client kernel under ``jax.vmap`` — vmap of a ``pallas_call`` batches
+by prepending a grid axis, which serializes clients and re-slices blocks
+every grid step; one launch over the stacked clients is the fast shape
+on both CPU interpret mode and a TPU core.
+
+Bit-parity with the reference scan (pinned in ``tests/test_tm.py`` and
+``tests/test_fl_conformance.py``) holds because:
+
+* randomness is pre-generated outside with the reference key discipline
+  (:mod:`repro.kernels.draws`);
+* class votes are per-class independent — ``votes[c]`` reads only class
+  ``c``'s clauses/weights, and the negative class ``ȳ ≠ y`` — so
+  processing (sample, target-role) then (sample, negative-role) as two
+  loop iterations recomputes exactly the reference's pre-sample values;
+* count accumulation uses f32 ``dot_general`` on 0/1 operands: integer
+  values below 2²⁴ are exact in f32, so ``viol == 0.0`` and the vote
+  sums match the int32 einsum bit-for-bit (same contract as
+  ``clause_eval.py``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _epoch_kernel(ta_ref, w_ref, lits_ref, cls2_ref, uact_ref, coin_ref,
+                  ta_out, w_out, *, n_states: int, T: int, n_samples: int):
+    ta_all = ta_ref[...]          # (N, C, m, L) int32
+    w_all = w_ref[...]            # (N, C, m)    int32
+    lits = lits_ref[...]          # (N, S, L)    int32 0/1
+    cls2 = cls2_ref[...]          # (N, S, 2)    int32 — [target, negative]
+    uact = uact_ref[...]          # (N, S, 2, m) float32
+    coin = coin_ref[...]          # (N, S, 2, m, L) int8 — bit1 inc, bit2 dec
+
+    N, C, m, L = ta_all.shape
+    rows = jnp.arange(N)
+    pol = jnp.where(jnp.arange(m) % 2 == 0, 1, -1)
+    pos = pol > 0
+    polf = pol.astype(jnp.float32)
+    tf = jnp.float32(T)
+
+    def body(i, carry):
+        ta_all, w_all = carry
+        s, role = i // 2, i % 2
+        is_target = role == 0
+
+        cls = jax.lax.dynamic_slice(cls2, (0, s, role), (N, 1, 1))[:, 0, 0]
+        lit = jax.lax.dynamic_slice(lits, (0, s, 0), (N, 1, L))[:, 0]
+        ua = jax.lax.dynamic_slice(uact, (0, s, role, 0), (N, 1, 1, m))[:, 0, 0]
+        cn = jax.lax.dynamic_slice(
+            coin, (0, s, role, 0, 0), (N, 1, 1, m, L))[:, 0, 0]
+
+        ta = ta_all[rows, cls]    # (N, m, L)
+        w = w_all[rows, cls]      # (N, m)
+
+        # clause outputs on this sample's literals (learning mode: empty
+        # clauses fire) — violations counted in exact-f32 dot_general
+        inc = (ta > n_states).astype(jnp.float32)
+        nlit = (1 - lit).astype(jnp.float32)
+        viol = jax.lax.dot_general(
+            inc, nlit, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+        fired = viol == 0.0       # (N, m)
+
+        votes = jnp.sum(
+            fired.astype(jnp.float32) * polf[None] * w.astype(jnp.float32),
+            axis=1)
+        v = jnp.clip(votes, -tf, tf)
+        p_act = jnp.where(is_target, tf - v, tf + v) / (2.0 * tf)
+        active = ua < p_act[:, None]                     # (N, m)
+
+        # Type I goes to same-polarity clauses on the target, opposite on
+        # the negative; Type II is the complement
+        t1 = jnp.where(is_target, pos[None], ~pos[None]) & active
+        t2 = jnp.where(is_target, ~pos[None], pos[None]) & active
+
+        litb = (lit != 0)[:, None, :]                    # (N, 1, L)
+        fb = fired[:, :, None]                           # (N, m, 1)
+        up1 = t1[:, :, None] & fb & litb & ((cn & 1) == 1)
+        down1 = t1[:, :, None] & ((fb & ~litb) | ~fb) & ((cn & 2) == 2)
+        up2 = t2[:, :, None] & fb & ~litb & (ta <= n_states)
+        delta = (up1.astype(jnp.int32) - down1.astype(jnp.int32)
+                 + up2.astype(jnp.int32))
+        ta_all = ta_all.at[rows, cls].set(
+            jnp.clip(ta + delta, 1, 2 * n_states))
+
+        winc = (t1 & fired).astype(jnp.int32)
+        wdec = (t2 & fired).astype(jnp.int32)
+        w_all = w_all.at[rows, cls].set(jnp.maximum(w + winc - wdec, 0))
+        return ta_all, w_all
+
+    ta_all, w_all = jax.lax.fori_loop(0, 2 * n_samples, body,
+                                      (ta_all, w_all))
+    ta_out[...] = ta_all
+    w_out[...] = w_all
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_states", "T", "interpret"))
+def train_epoch_pallas(ta_state: jax.Array, weights: jax.Array,
+                       lits: jax.Array, cls2: jax.Array,
+                       u_act: jax.Array, coin: jax.Array,
+                       *, n_states: int, T: int,
+                       interpret: bool = True):
+    """One TM epoch over all clients in a single kernel launch.
+
+    Args:
+      ta_state: (N, C, m, L) int32 — per-client TA banks.
+      weights:  (N, C, m) int32 — per-client clause weights.
+      lits:     (N, S, L) int32 0/1 — per-client literal planes.
+      cls2:     (N, S, 2) int32 — per (client, sample): [target, negative].
+      u_act:    (N, S, 2, m) float32 — activation uniforms per role.
+      coin:     (N, S, 2, m, L) int8 — pre-compared Type-I coin flips.
+
+    Returns ``(ta_state, weights)`` after the sample-sequential epoch,
+    bit-identical to the reference ``tm.train_epoch`` per client.
+    """
+    n_samples = lits.shape[1]
+    whole = [pl.BlockSpec(a.shape, lambda i, nd=a.ndim: (0,) * nd)
+             for a in (ta_state, weights, lits, cls2, u_act, coin)]
+    out_specs = [pl.BlockSpec(ta_state.shape,
+                              lambda i, nd=ta_state.ndim: (0,) * nd),
+                 pl.BlockSpec(weights.shape,
+                              lambda i, nd=weights.ndim: (0,) * nd)]
+    kernel = functools.partial(_epoch_kernel, n_states=n_states, T=T,
+                               n_samples=n_samples)
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=whole,
+        out_specs=out_specs,
+        out_shape=[jax.ShapeDtypeStruct(ta_state.shape, jnp.int32),
+                   jax.ShapeDtypeStruct(weights.shape, jnp.int32)],
+        interpret=interpret,
+        name="tm_train_epoch_fused",
+    )(ta_state, weights, lits, cls2, u_act, coin)

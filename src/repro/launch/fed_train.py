@@ -309,6 +309,14 @@ def main(argv: list[str] | None = None) -> dict:
                     choices=("gather", "psum"),
                     help="mesh aggregation lowering: gather is bit-exact "
                          "with in-process, psum is C*m collective bytes")
+    ap.add_argument("--tm-backend", default="ref",
+                    choices=("ref", "pallas"),
+                    help="TM compute path for tpfl/fedtm: ref = pure-jnp "
+                         "reference, pallas = fused TM kernels (one "
+                         "client-batched launch per round stage; "
+                         "interpret mode on CPU, Mosaic on TPU).  "
+                         "Bit-identical outputs, conformance-pinned; "
+                         "no-op for the MLP baselines")
     # checkpointing
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -371,6 +379,7 @@ def main(argv: list[str] | None = None) -> dict:
         async_buffer=args.async_buffer,
         backend="shardmap" if mesh is not None else "inprocess",
         mesh_collective=args.collective,
+        tm_backend=args.tm_backend,
         checkpoint_dir=args.ckpt_dir, checkpoint_every=args.ckpt_every)
 
     strategy = _build_strategy(args.strategy, tm_cfg, fed_cfg, pool,

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.kernels import clause_eval, ref, ta_update
+from repro.kernels import clause_eval, draws, ref, ta_update
 
 SHAPES_CLAUSE = [
     # (CM, L, B)
@@ -77,6 +77,34 @@ def test_ta_update_kernel_extreme_probs():
                                      p_inc=1.0, p_dec=0.0, n_states=127)
     expect = jnp.clip(ta + 1, 1, 254)
     assert (out == expect).all()
+
+
+@pytest.mark.parametrize("C,m,L,B,N", [(4, 16, 32, 8, 3), (3, 33, 130, 5, 4)])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_fused_votes_batched_kernel_vs_ref(C, m, L, B, N, seed):
+    """The client-batched votes kernel row-for-row equals the per-client
+    fused-votes reference (including unaligned shapes — no padding)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    include = jax.random.bernoulli(ks[0], 0.1, (N, C, m, L)).astype(jnp.int32)
+    lits = jax.random.bernoulli(ks[1], 0.5, (N, B, L)).astype(jnp.int32)
+    wpol = jax.random.randint(ks[2], (N, C, m), -7, 8)
+    k = clause_eval.fused_votes_batched_pallas(include, lits, wpol,
+                                               predict=True)
+    for i in range(N):
+        r = ref.fused_votes_ref(include[i], lits[i], wpol[i], predict=True)
+        assert (r == k[i]).all()
+
+
+@pytest.mark.parametrize("p", [0.2, 1.0 / 3.0, 0.8, 2.0 / 3.0, 1e-7, 1.0])
+def test_int_threshold_matches_uniform_compare(p):
+    """The fused epoch kernel consumes pre-compared coin flips via the
+    int-domain trick (bits >> 9 < ceil(f32(p)·2²³)); pin it against the
+    f32 uniform compare the reference trainer performs, including
+    non-representable thresholds like 1/3 and s=3's p_inc=2/3."""
+    k = jax.random.PRNGKey(0)
+    a = jax.random.uniform(k, (8192,)) < p
+    b = (jax.random.bits(k, (8192,), jnp.uint32) >> 9) < draws.int_threshold(p)
+    assert (a == b).all()
 
 
 @pytest.mark.parametrize("bt,ct,lt", [(8, 128, 128), (16, 256, 256)])

@@ -1,4 +1,6 @@
 """Tsetlin Machine unit + property(seed-swept) tests."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import pytest
@@ -110,3 +112,79 @@ def test_kernel_path_equals_jnp_path():
     pb = tm.train(p, x, y, jax.random.PRNGKey(2), cfg_b, epochs=1)
     assert (pa.ta_state == pb.ta_state).all()
     assert (pa.weights == pb.weights).all()
+
+
+@pytest.mark.parametrize("epochs", [1, 2])
+@pytest.mark.parametrize("seed", range(2))
+def test_kernel_train_bit_identical_at_unaligned_shapes(epochs, seed):
+    """Full jit'd train through the fused epoch kernel at tile-unaligned
+    shapes (L = 130, C·m = 99 — neither a multiple of 128): params must
+    equal the reference scan bit for bit, not just single-op parity."""
+    cfg = tm.TMConfig(n_classes=3, n_clauses=33, n_features=65,
+                      n_states=63, s=3.0, T=15)
+    kcfg = dataclasses.replace(cfg, use_kernel=True)
+    key = jax.random.PRNGKey(seed)
+    kp, kx, ky, kt = jax.random.split(key, 4)
+    p = tm.init_params(cfg, kp)
+    x = (jax.random.uniform(kx, (23, cfg.n_features)) < 0.4).astype(jnp.int32)
+    y = jax.random.randint(ky, (23,), 0, cfg.n_classes)
+    pa = tm.train(p, x, y, kt, cfg, epochs=epochs)
+    pb = tm.train(p, x, y, kt, kcfg, epochs=epochs)
+    assert (pa.ta_state == pb.ta_state).all()
+    assert (pa.weights == pb.weights).all()
+
+
+def test_batched_entry_points_bit_identical_to_vmap(seed=0):
+    """The client-batched kernel entry points (one launch for a stacked
+    cohort) must match the vmapped per-client reference bit for bit."""
+    cfg = tm.TMConfig(n_classes=3, n_clauses=33, n_features=65,
+                      n_states=63, s=3.0, T=15)
+    kcfg = dataclasses.replace(cfg, use_kernel=True)
+    N, S = 4, 17
+    key = jax.random.PRNGKey(seed)
+    kp, kx, ky, kt, ke = jax.random.split(key, 5)
+    params = jax.vmap(lambda k: tm.init_params(cfg, k))(
+        jax.random.split(kp, N))
+    xs = (jax.random.uniform(kx, (N, S, cfg.n_features)) < 0.4).astype(
+        jnp.int32)
+    ys = jax.random.randint(ky, (N, S), 0, cfg.n_classes)
+    keys = jax.random.split(kt, N)
+    pa = tm.train_batched(params, xs, ys, keys, cfg, epochs=2)
+    pb = tm.train_batched(params, xs, ys, keys, kcfg, epochs=2)
+    assert (pa.ta_state == pb.ta_state).all()
+    assert (pa.weights == pb.weights).all()
+    xe = (jax.random.uniform(ke, (N, 9, cfg.n_features)) < 0.4).astype(
+        jnp.int32)
+    ye = jax.random.randint(jax.random.fold_in(ke, 1), (N, 9), 0,
+                            cfg.n_classes)
+    assert (tm.accuracy_batched(pa, xe, ye, cfg)
+            == tm.accuracy_batched(pb, xe, ye, kcfg)).all()
+    for weighted in (False, True):
+        assert (tm.confidence_scores_batched(pa, xe, cfg, weighted=weighted)
+                == tm.confidence_scores_batched(pb, xe, kcfg,
+                                                weighted=weighted)).all()
+
+
+def test_predict_kernel_clips_votes_before_argmax():
+    """Regression: the kernel predict path used to argmax *unclipped*
+    fused votes.  Craft vote saturation — class 0 fires weight 2, class
+    1 fires weight 3, T = 1 — so clipped votes tie at +T (argmax → 0)
+    while unclipped votes would pick class 1."""
+    cfg = tm.TMConfig(n_classes=2, n_clauses=4, n_features=2,
+                      n_states=63, s=3.0, T=1)
+    kcfg = dataclasses.replace(cfg, use_kernel=True)
+    p = tm.init_params(cfg, jax.random.PRNGKey(0))
+    ta = jnp.ones_like(p.ta_state)          # everything excluded (empty)
+    ta = ta.at[0, 0, 0].set(cfg.n_states + 1)   # class 0, clause 0: x0
+    ta = ta.at[1, 0, 0].set(cfg.n_states + 1)   # class 1, clause 0: x0
+    w = jnp.ones_like(p.weights).at[0, 0].set(2).at[1, 0].set(3)
+    p = tm.TMParams(ta_state=ta, weights=w)
+    x = jnp.array([[1, 0]], jnp.int32)          # both clauses fire
+    r = tm.predict(p, x, cfg)
+    k = tm.predict(p, x, kcfg)
+    assert int(r[0]) == 0                       # ±T tie → first argmax
+    assert (r == k).all()
+    # and the batched kernel evaluate path clips identically
+    y = jnp.zeros((1, 1), jnp.int32)
+    stack = jax.tree.map(lambda a: a[None], p)
+    assert float(tm.accuracy_batched(stack, x[None], y, kcfg)[0]) == 1.0
