@@ -122,6 +122,91 @@ def emit_bench(dataset: str, scale, backend: str,
     return out
 
 
+def emit_client_scale(ns=(1_000, 100_000, 1_000_000), k_active: int = 64,
+                      rounds_timed: int = 2, warmup_rounds: int = 1,
+                      data_dir: str | None = None) -> dict:
+    """Round wall time + host-I/O bytes vs population size N →
+    BENCH_client_scale.json — the O(K) working-set trajectory.
+
+    Each point runs the mmap-store engine (``client_store="mmap"``,
+    ``store_eval="sampled"``) over a streamed LEAF population of N
+    simulated clients with K active per round: per-round wall time is
+    ``perf_counter`` around ``run_round`` with a ``block_until_ready``
+    fence (median of the timed rounds, after warm-up), and the host-I/O
+    gauges come straight off the round report (``store_read_bytes`` /
+    ``store_written_bytes`` — actual bytes the store read back and
+    spilled).  The point of the trajectory: wall time and I/O are flat
+    in N (they scale with K), while ``resident_rows`` shows how few of
+    the N rows ever materialize.
+
+    Artifact schema: ``k_active``, ``rounds_timed``, ``warmup_rounds``,
+    and ``scales`` — one row per N with ``n_clients``, ``k_active``,
+    ``round_wall_s``, ``store_read_bytes``, ``store_written_bytes``,
+    ``store_row_bytes``, ``resident_rows``."""
+    import statistics
+    import tempfile
+    import time as _time
+
+    import jax
+
+    from repro.core import tm
+    from repro.data.ingest import registry as datasets
+    from repro.fl.runtime import Engine, RuntimeConfig, SchedulerConfig
+    from repro.fl.runtime.strategy import TPFLStrategy
+    from repro.fl.store import StreamingClientData
+
+    root = data_dir or tempfile.mkdtemp(prefix="client_scale_data_")
+    spool = datasets.load_stream("synthfemnist", root, side=8,
+                                 n_samples=600, seed=0, n_writers=12)
+    tm_cfg = tm.TMConfig(n_classes=spool.n_classes, n_clauses=8,
+                         n_features=spool.n_features, n_states=63,
+                         s=5.0, T=8)
+    scales = []
+    for n in ns:
+        n = int(n)
+        k = min(k_active, n)
+        sdata = StreamingClientData(spool, n_clients=n, n_train=16,
+                                    n_test=8, n_conf=8,
+                                    key=jax.random.PRNGKey(1))
+        engine = Engine(
+            TPFLStrategy(tm_cfg, local_epochs=1), sdata,
+            RuntimeConfig(
+                rounds=warmup_rounds + rounds_timed,
+                scheduler=SchedulerConfig(participation=k / n),
+                client_store="mmap",
+                store_dir=tempfile.mkdtemp(prefix=f"client_store_{n}_"),
+                store_eval="sampled"))
+        k_init, k_rounds = jax.random.split(jax.random.PRNGKey(0))
+        state = engine.init(k_init)
+        wall, rd, wr = [], [], []
+        for r in range(warmup_rounds + rounds_timed):
+            t0 = _time.perf_counter()
+            state, rep = engine.run_round(
+                state, jax.random.fold_in(k_rounds, r))
+            jax.block_until_ready(state)
+            dt = _time.perf_counter() - t0
+            if r >= warmup_rounds:
+                wall.append(dt)
+                rd.append(rep.store_read_bytes)
+                wr.append(rep.store_written_bytes)
+        scales.append({
+            "n_clients": n, "k_active": engine.scheduler.k,
+            "round_wall_s": round(statistics.median(wall), 4),
+            "store_read_bytes": int(statistics.median(rd)),
+            "store_written_bytes": int(statistics.median(wr)),
+            "store_row_bytes": engine.store.row_nbytes,
+            "resident_rows": engine.store.written_count()})
+        print(f"bench_client_scale,"
+              f"{scales[-1]['round_wall_s']*1e6:.0f},"
+              f"n={n}/k={engine.scheduler.k}", flush=True)
+    out = {"dataset": "synthfemnist", "k_active": k_active,
+           "rounds_timed": rounds_timed, "warmup_rounds": warmup_rounds,
+           "scales": scales}
+    ART.mkdir(exist_ok=True)
+    (ART / "BENCH_client_scale.json").write_text(json.dumps(out, indent=2))
+    return out
+
+
 def main() -> None:
     from repro.data.ingest import registry as datasets
 
@@ -152,7 +237,22 @@ def main() -> None:
                          "BENCH_round_latency.json (rounds_timed, "
                          "warmup_rounds, round_wall_s, phase_wall_s, "
                          "both keyed {strategy: {tm_backend: ...}}; "
-                         "the conformance-mesh-8 CI artifact)")
+                         "the conformance-mesh-8 CI artifact); also "
+                         "emits the client-scale trajectory")
+    ap.add_argument("--emit-client-scale", action="store_true",
+                    help="only run the client-scale bench: mmap-store "
+                         "engine over a streamed synthfemnist "
+                         "population, K active of N total — per N, "
+                         "1 warm-up round then the median of 2 "
+                         "perf_counter-timed rounds plus the store's "
+                         "host-I/O byte gauges — written to artifacts/"
+                         "BENCH_client_scale.json (the client-scale "
+                         "CI artifact)")
+    ap.add_argument("--client-scale-ns", default=None,
+                    help="comma-separated population sizes for the "
+                         "client-scale bench (default "
+                         "1000,100000,1000000; --quick default "
+                         "1000,10000)")
     args = ap.parse_args()
     backend = "shardmap" if args.mesh else "inprocess"
     wanted = [n.strip() for n in args.datasets.split(",") if n.strip()]
@@ -173,10 +273,22 @@ def main() -> None:
                          rounds=2, local_epochs=1) if args.quick \
         else common.Scale()
 
+    if args.client_scale_ns is not None:
+        scale_ns = tuple(int(s) for s in args.client_scale_ns.split(","))
+    else:
+        scale_ns = (1_000, 10_000) if args.quick \
+            else (1_000, 100_000, 1_000_000)
+
+    if args.emit_client_scale:
+        print("name,us_per_call,derived")
+        emit_client_scale(ns=scale_ns)
+        return
+
     if args.emit_bench:
         print("name,us_per_call,derived")
         emit_bench(table_datasets[0], scale, backend,
                    data_dir=args.data_dir, encoding=args.encoding)
+        emit_client_scale(ns=scale_ns)
         return
 
     print("name,us_per_call,derived")

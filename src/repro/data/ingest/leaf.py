@@ -19,6 +19,16 @@ partitioner.  :func:`write_shards` is the inverse used by the offline
 mirror; pixel values are written as numbers JSON round-trips exactly
 (Python ``repr`` floats), so mirror-written shards parse back
 bit-identical.
+
+Streaming: :func:`write_shards` additionally records an ``index.json``
+(writer names + sample counts per shard, in the same sorted-name order
+:func:`read_shards` walks, plus the feature width) so
+:func:`read_writers` can parse **only** the shards a sampled cohort's
+writers live in — the ingestion half of the engine's O(K) working set.
+:func:`ensure_index` rebuilds a missing index from the shards (one full
+parse, once — e.g. for real LEAF drop-ins that ship without one);
+``read_shards`` itself never consults the index, so a stale index can
+never corrupt the materialized pool.
 """
 from __future__ import annotations
 
@@ -31,6 +41,8 @@ import numpy as np
 from repro.data.ingest import idx
 
 SHARD_PATTERN = "all_data_*.json"
+INDEX_NAME = "index.json"
+INDEX_VERSION = 1
 
 
 class LeafPool(NamedTuple):
@@ -42,6 +54,43 @@ class LeafPool(NamedTuple):
 
 class LeafFormatError(ValueError):
     """Malformed LEAF shard: missing keys or inconsistent sample counts."""
+
+
+def _parse_shard(path: pathlib.Path, verify: bool = True) -> dict:
+    """One shard file → its dict (checksum-verified on the single read).
+
+    Module-level on purpose: this is the one seam every shard byte
+    passes through, so tests can shim it to count / forbid parses (the
+    streaming-ingestion "never materializes the pool" pin)."""
+    raw = path.read_bytes()
+    if verify:
+        idx.verify_bytes(path, raw)     # single read, no second pass
+    return json.loads(raw)
+
+
+def _user_arrays(path: pathlib.Path, shard: dict,
+                 name: str, u: int) -> tuple[np.ndarray, np.ndarray]:
+    """Validate + extract one user's (x, y) block from a parsed shard —
+    shared by the pool reader and the per-writer streaming reader, so
+    both reject malformed data identically."""
+    user_data = shard["user_data"]
+    entry = user_data.get(name)
+    if entry is None:
+        raise LeafFormatError(
+            f"{path}: user {name!r} listed but missing from "
+            f"user_data")
+    x = np.asarray(entry["x"], dtype=np.float32)
+    y = np.asarray(entry["y"], dtype=np.int32)
+    if x.ndim != 2 or x.shape[0] != y.shape[0]:
+        raise LeafFormatError(
+            f"{path}: user {name!r} has x {x.shape} vs y "
+            f"{y.shape}")
+    num_samples = shard.get("num_samples")
+    if num_samples is not None and num_samples[u] != y.shape[0]:
+        raise LeafFormatError(
+            f"{path}: user {name!r} declares {num_samples[u]} "
+            f"samples but holds {y.shape[0]}")
+    return x, y
 
 
 def write_shards(root: str | pathlib.Path, users: Sequence[str],
@@ -74,6 +123,22 @@ def write_shards(root: str | pathlib.Path, users: Sequence[str],
         if checksum:
             idx.write_checksum(path)
         paths.append(path)
+    # the streaming index rides along: per-shard writer names + counts,
+    # listed in the sorted-name order read_shards walks, so a writer's
+    # global id is derivable without parsing any shard payload
+    entries = {p.name: e for p, e in zip(paths, (
+        {"file": p.name,
+         "users": list(users[k:k + writers_per_shard]),
+         "num_samples": [int(len(ys[i])) for i in
+                         range(k, min(k + writers_per_shard, len(users)))]}
+        for k, p in zip(range(0, len(users), writers_per_shard), paths)))}
+    index = {"version": INDEX_VERSION,
+             "num_features": int(np.asarray(xs[0]).shape[1]) if xs else 0,
+             "shards": [entries[name] for name in sorted(entries)]}
+    index_path = root / INDEX_NAME
+    index_path.write_text(json.dumps(index))
+    if checksum:
+        idx.write_checksum(index_path)
     return paths
 
 
@@ -88,13 +153,10 @@ def read_shards(root: str | pathlib.Path, verify: bool = True) -> LeafPool:
             f"no LEAF shards ({SHARD_PATTERN}) under {root}")
     xs, ys, writers, users = [], [], [], []
     for path in shards:
-        raw = path.read_bytes()
-        if verify:
-            idx.verify_bytes(path, raw)     # single read, no second pass
-        shard = json.loads(raw)
+        shard = _parse_shard(path, verify)
         try:
             shard_users = shard["users"]
-            user_data = shard["user_data"]
+            shard["user_data"]
         except KeyError as e:
             raise LeafFormatError(f"{path}: missing key {e}") from e
         num_samples = shard.get("num_samples")
@@ -103,21 +165,7 @@ def read_shards(root: str | pathlib.Path, verify: bool = True) -> LeafPool:
                 f"{path}: num_samples lists {len(num_samples)} entries "
                 f"for {len(shard_users)} users")
         for u, name in enumerate(shard_users):
-            entry = user_data.get(name)
-            if entry is None:
-                raise LeafFormatError(
-                    f"{path}: user {name!r} listed but missing from "
-                    f"user_data")
-            x = np.asarray(entry["x"], dtype=np.float32)
-            y = np.asarray(entry["y"], dtype=np.int32)
-            if x.ndim != 2 or x.shape[0] != y.shape[0]:
-                raise LeafFormatError(
-                    f"{path}: user {name!r} has x {x.shape} vs y "
-                    f"{y.shape}")
-            if num_samples is not None and num_samples[u] != y.shape[0]:
-                raise LeafFormatError(
-                    f"{path}: user {name!r} declares {num_samples[u]} "
-                    f"samples but holds {y.shape[0]}")
+            x, y = _user_arrays(path, shard, name, u)
             wid = len(users)
             users.append(name)
             xs.append(x)
@@ -127,3 +175,98 @@ def read_shards(root: str | pathlib.Path, verify: bool = True) -> LeafPool:
                     y=np.concatenate(ys, axis=0),
                     writers=np.concatenate(writers, axis=0),
                     users=tuple(users))
+
+
+# ---------------------------------------------------------------------------
+# streaming: shard index + per-writer reads (no pool materialization)
+# ---------------------------------------------------------------------------
+
+def read_index(root: str | pathlib.Path, verify: bool = True) -> dict:
+    """Parse ``index.json`` (checksum-verified) and validate it against
+    the shard files actually present — a stale index (shards added /
+    removed / renamed since it was written) fails loudly rather than
+    mis-routing writer ids."""
+    root = pathlib.Path(root)
+    path = root / INDEX_NAME
+    raw = path.read_bytes()
+    if verify:
+        idx.verify_bytes(path, raw)
+    index = json.loads(raw)
+    if index.get("version") != INDEX_VERSION:
+        raise LeafFormatError(
+            f"{path}: index version {index.get('version')!r}, "
+            f"expected {INDEX_VERSION}")
+    listed = [e["file"] for e in index.get("shards", ())]
+    present = [p.name for p in sorted(root.glob(SHARD_PATTERN))]
+    if listed != present:
+        raise LeafFormatError(
+            f"{path} is stale: it lists shards {listed} but the "
+            f"directory holds {present} — delete the index (and its "
+            f".sha256 sidecar) to rebuild it")
+    return index
+
+
+def ensure_index(root: str | pathlib.Path, verify: bool = True) -> dict:
+    """``read_index``, building the index first if missing (one full
+    parse over the shards — the only time streaming ever touches them
+    all; real LEAF drop-ins ship without an index)."""
+    root = pathlib.Path(root)
+    if not (root / INDEX_NAME).exists():
+        shards = sorted(root.glob(SHARD_PATTERN))
+        if not shards:
+            raise FileNotFoundError(
+                f"no LEAF shards ({SHARD_PATTERN}) under {root}")
+        entries, num_features = [], 0
+        for path in shards:
+            shard = _parse_shard(path, verify)
+            try:
+                names = list(shard["users"])
+                user_data = shard["user_data"]
+            except KeyError as e:
+                raise LeafFormatError(f"{path}: missing key {e}") from e
+            counts = []
+            for u, name in enumerate(names):
+                x, y = _user_arrays(path, shard, name, u)
+                counts.append(int(y.shape[0]))
+                num_features = int(x.shape[1])
+            del user_data
+            entries.append({"file": path.name, "users": names,
+                            "num_samples": counts})
+        index = {"version": INDEX_VERSION, "num_features": num_features,
+                 "shards": entries}
+        path = root / INDEX_NAME
+        path.write_text(json.dumps(index))
+        idx.write_checksum(path)
+    return read_index(root, verify)
+
+
+def read_writers(root: str | pathlib.Path, wids,
+                 verify: bool = True) -> dict[int, tuple]:
+    """Per-writer ``{wid: (x, y)}`` for just the requested global writer
+    ids — only the shards those writers live in are parsed.  Writer ids
+    are the :func:`read_shards` enumeration (sorted shard names, users
+    in shard order), so a streamed writer block is bit-identical to the
+    corresponding pool slice."""
+    root = pathlib.Path(root)
+    index = read_index(root, verify)
+    # global wid → (shard file, user name, position-in-shard)
+    table, wid = [], 0
+    for entry in index["shards"]:
+        for u, name in enumerate(entry["users"]):
+            table.append((entry["file"], name, u))
+            wid += 1
+    wanted = sorted({int(w) for w in np.asarray(wids).reshape(-1)})
+    if wanted and (wanted[0] < 0 or wanted[-1] >= len(table)):
+        raise ValueError(
+            f"writer ids out of range [0, {len(table)}): {wanted[:8]}")
+    by_shard: dict[str, list[int]] = {}
+    for w in wanted:
+        by_shard.setdefault(table[w][0], []).append(w)
+    out: dict[int, tuple] = {}
+    for fname, ws in by_shard.items():
+        path = root / fname
+        shard = _parse_shard(path, verify)
+        for w in ws:
+            _, name, u = table[w]
+            out[w] = _user_arrays(path, shard, name, u)
+    return out

@@ -91,6 +91,24 @@ class Pool(NamedTuple):
     name: str
 
 
+class StreamPool(NamedTuple):
+    """A LEAF dataset as a *writer table*, nothing materialized: what
+    :func:`load_stream` returns and
+    :class:`repro.fl.store.StreamingClientData` consumes.  Holds the
+    shard root, the index-derived writer names + per-writer sample
+    counts, and the fitted encoder — per-cohort rows are parsed and
+    encoded on demand (``leaf.read_writers``), never the pool."""
+
+    root: pathlib.Path             # shard directory (index.json present)
+    users: tuple                   # (W,) writer names, index order
+    writer_sizes: tuple            # (W,) per-writer sample counts
+    n_classes: int
+    n_features: int                # F — *after* encoding (levels included)
+    encoder: object                # fitted encode pipeline (elementwise)
+    name: str
+    verify: bool = True
+
+
 def names() -> tuple:
     """Every registered dataset name (argparse ``choices`` derive here)."""
     return tuple(SPECS)
@@ -218,3 +236,46 @@ def load(name: str, data_dir: str | pathlib.Path | None = None, *,
                 else jnp.asarray(writers, jnp.int32),
                 n_classes=spec.n_classes,
                 n_features=int(bits.shape[1]), name=name)
+
+
+def load_stream(name: str, data_dir: str | pathlib.Path, *,
+                encoding: str = "bool", n_samples: int = 6000,
+                side: int | None = None, seed: int = 0,
+                n_writers: int = 25, verify: bool = True) -> StreamPool:
+    """Load a LEAF flavour as a :class:`StreamPool` — the writer table
+    only, for populations too large to materialize.
+
+    Same cache resolution as :func:`load` (mirror-writes missing
+    shards, real drop-ins win), but no shard payload beyond the index
+    is touched here: ``leaf.ensure_index`` builds the index if missing
+    (the one full parse, once), and the encoder is fitted pool-free —
+    ``quantile`` encodings need the pool's empirical quantiles, so they
+    raise exactly where :func:`repro.data.ingest.encode.build` says so.
+    """
+    spec = get(name)
+    if spec.kind != "leaf":
+        raise ValueError(
+            f"dataset {name!r} is {spec.kind!r}-backed; streaming "
+            f"ingestion needs per-writer LEAF shards — choose a leaf "
+            f"flavour ({[n for n, s in SPECS.items() if s.kind == 'leaf']})")
+    if data_dir is None:
+        raise ValueError(
+            f"streaming {name!r} is file-backed by construction: pass "
+            f"a data_dir (the offline mirror will populate it)")
+    root = pathlib.Path(data_dir) / name
+    if not sorted(root.glob(leaf.SHARD_PATTERN)):
+        mirror.write_leaf_mirror(root, spec.flavour, n_samples,
+                                 spec.side_for(side), seed,
+                                 n_writers=n_writers)
+    index = leaf.ensure_index(root, verify=verify)
+    users, sizes = [], []
+    for entry in index["shards"]:
+        users.extend(entry["users"])
+        sizes.extend(entry["num_samples"])
+    enc = encode.build(encoding)       # pool-free: quantile raises here
+    n_features = int(
+        enc(jnp.zeros((1, index["num_features"]), jnp.float32)).shape[1])
+    return StreamPool(root=root, users=tuple(users),
+                      writer_sizes=tuple(int(s) for s in sizes),
+                      n_classes=spec.n_classes, n_features=n_features,
+                      encoder=enc, name=name, verify=verify)

@@ -19,6 +19,8 @@ already returned:
   staleness histogram (``Participation.summary()``).
 * ``bytes``         — codec-metered wire traffic by direction.
 * ``async``         — aggregated / still-buffered / evicted uploads.
+* ``store``         — host-I/O bytes read/written by the mmap client
+  store this round (0 on the resident engine).
 * ``phases``        — the round's phase-span wall times (tracer).
 
 Serialization is numpy-safe by construction: :func:`to_jsonable`
@@ -142,6 +144,12 @@ def round_event(report, spans: dict | None = None,
             "aggregated": int(report.aggregated_uploads),
             "buffered": int(report.buffered_uploads),
             "evicted": int(report.evicted_uploads),
+        },
+        # host-I/O gauges of the mmap client store (0 when resident —
+        # getattr keeps older/minimal report shapes valid)
+        "store": {
+            "read_bytes": int(getattr(report, "store_read_bytes", 0)),
+            "written_bytes": int(getattr(report, "store_written_bytes", 0)),
         },
         "phases": dict(spans) if spans else None,
     }

@@ -28,6 +28,7 @@ from repro.checkpoint import ckpt
 
 _PAT = re.compile(r"round_(\d+)\.msgpack$")
 MANIFEST_NAME = "manifest.json"
+STORE_MANIFEST_NAME = "store_manifest.json"
 
 
 def path_for(directory: str | pathlib.Path, round_idx: int) -> pathlib.Path:
@@ -35,14 +36,23 @@ def path_for(directory: str | pathlib.Path, round_idx: int) -> pathlib.Path:
 
 
 def save(directory: str | pathlib.Path, state,
-         manifest: dict | None = None) -> pathlib.Path:
+         manifest: dict | None = None,
+         store_manifest: dict | None = None) -> pathlib.Path:
     """Persist ``state``; the filename records the next round to run.
 
     ``manifest`` (the telemetry run manifest — config, seed, mesh, git
     sha; see ``repro.fl.obs.manifest``) rides along as
     ``manifest.json`` in the checkpoint directory, so a checkpoint can
     always answer what produced it.  It is provenance only: ``restore``
-    never reads it, and a run without telemetry writes none."""
+    never reads it, and a run without telemetry writes none.
+
+    ``store_manifest`` (the mmap engine's ``ClientStore.manifest`` —
+    version, client count, per-leaf layout) rides along the same way as
+    ``store_manifest.json``: an mmap checkpoint is only the replicated
+    state, the population rows live in the store directory, and this
+    records which store layout the checkpoint expects.  Resume is valid
+    at the *latest* checkpoint only — store rows advance in place past
+    older ones (see ``docs/client-store.md``)."""
     path = path_for(directory, int(state.round_idx))
     ckpt.save(path, state)
     if manifest is not None:
@@ -50,6 +60,9 @@ def save(directory: str | pathlib.Path, state,
         (path.parent / MANIFEST_NAME).write_text(
             json.dumps(to_jsonable(manifest), indent=2, sort_keys=True)
             + "\n")
+    if store_manifest is not None:
+        (path.parent / STORE_MANIFEST_NAME).write_text(
+            json.dumps(store_manifest, indent=2, sort_keys=True) + "\n")
     return path
 
 

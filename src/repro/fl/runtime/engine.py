@@ -71,6 +71,7 @@ from __future__ import annotations
 
 import dataclasses
 import inspect
+import tempfile
 from typing import Any, NamedTuple
 
 import jax
@@ -90,9 +91,12 @@ from repro.fl.runtime.scheduler import (Participation, Scheduler,
 from repro.fl.runtime.strategy import (DOWNLOADS, ServerState,
                                        ensure_server_state,
                                        resolve_server_update)
+from repro.fl.store.client_store import ClientStore
 
 BACKENDS = ("inprocess", "shardmap")
 TM_BACKENDS = ("ref", "pallas")
+CLIENT_STORES = ("resident", "mmap")
+STORE_EVALS = ("full", "sampled")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,10 +115,24 @@ class RuntimeConfig:
     tm_backend: str = "ref"           # ref (jnp) | pallas (fused TM kernels)
     checkpoint_dir: str | None = None
     checkpoint_every: int = 0         # 0 = never
+    # K-active working set over the host-side client store: "mmap" keeps
+    # client rows (params, TA state, sparse-codec refs) in a
+    # memory-mapped ClientStore and only the scheduler's K sampled rows
+    # ever become device arrays — device/RAM footprint O(K), not O(N).
+    client_store: str = "resident"    # resident | mmap
+    store_dir: str | None = None      # mmap store root (None = fresh temp)
+    store_eval: str = "full"          # full (chunked population) | sampled
+    store_eval_chunk: int = 256       # clients per chunked-eval gather
 
     def __post_init__(self):
         if self.aggregation not in ("sync", "async"):
             raise ValueError(f"unknown aggregation {self.aggregation!r}")
+        if self.client_store not in CLIENT_STORES:
+            raise ValueError(f"unknown client_store {self.client_store!r}")
+        if self.store_eval not in STORE_EVALS:
+            raise ValueError(f"unknown store_eval {self.store_eval!r}")
+        if self.store_eval_chunk < 1:
+            raise ValueError("store_eval_chunk must be >= 1")
         if self.backend not in BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}")
         if self.tm_backend not in TM_BACKENDS:
@@ -168,6 +186,8 @@ class RoundReport(NamedTuple):
     aggregated_uploads: int            # uploads folded into the server
     buffered_uploads: int              # async: still waiting in the buffer
     evicted_uploads: int               # async: lost to buffer overflow
+    store_read_bytes: int = 0          # mmap store host reads this round
+    store_written_bytes: int = 0       # mmap store host writes this round
 
 
 class Engine:
@@ -190,7 +210,20 @@ class Engine:
         self.strategy = strategy
         self.data = data
         self.cfg = cfg
-        self.n = int(data.x_train.shape[0])
+        # population size: a streaming pool knows its client count
+        # without materializing anything; ClientData carries it as the
+        # leading axis of every array
+        n_clients = getattr(data, "n_clients", None)
+        self.n = int(n_clients) if n_clients is not None \
+            else int(data.x_train.shape[0])
+        self._mmap = cfg.client_store == "mmap"
+        self._streaming = hasattr(data, "gather_clients")
+        self.store: ClientStore | None = None
+        if self._streaming and not self._mmap:
+            raise ValueError(
+                "streaming client data has no materialized population "
+                "for the resident engine to index — run it with "
+                "RuntimeConfig(client_store='mmap')")
         # the telemetry plane (repro.fl.obs): span/fence hooks around
         # each round stage plus the per-round event sink.  Strictly
         # read-only — it consumes reports and wall clocks, and nothing
@@ -234,9 +267,12 @@ class Engine:
             self.executor = InProcessExecutor()
         # uniform full participation samples idx = arange(N): skip the
         # identity gather/scatter so the legacy-default path copies
-        # nothing (the dominant configuration for every benchmark)
+        # nothing (the dominant configuration for every benchmark).
+        # The mmap store always stages through gather/spill — its whole
+        # point is that the population is never resident.
         self._identity = (self.scheduler.k == self.n
-                          and cfg.scheduler.sampling == "uniform")
+                          and cfg.scheduler.sampling == "uniform"
+                          and not self._mmap)
         # discount**staleness lookup for the async device buffer,
         # precomputed with Python double-precision pow and cast once —
         # the same double→float32 each host insert performs, so the
@@ -250,7 +286,7 @@ class Engine:
 
     # -- lifecycle ---------------------------------------------------------
 
-    def init(self, key: jax.Array) -> EngineState:
+    def _full_init(self, key: jax.Array):
         # v2 strategies take the client data (FLIS draws its server-side
         # probe set from the confidence split); a leftover v1 signature
         # still works, and a bare matrix return is coerced to ServerState.
@@ -264,9 +300,13 @@ class Engine:
                                    inspect.Parameter.POSITIONAL_OR_KEYWORD)
                              for k in kinds) >= 3)
         if takes_data:
-            cs, server = self.strategy.init(key, self.n, self.data)
-        else:
-            cs, server = self.strategy.init(key, self.n)
+            return self.strategy.init(key, self.n, self.data)
+        return self.strategy.init(key, self.n)
+
+    def init(self, key: jax.Array) -> EngineState:
+        if self._mmap:
+            return self._init_mmap(key)
+        cs, server = self._full_init(key)
         server = ensure_server_state(server)
         cap, d = self.cfg.buffer_capacity, self.strategy.vec_dim
         if self.cfg.codec.sparse:
@@ -287,6 +327,77 @@ class Engine:
             buf_seq=jnp.zeros((cap,), jnp.int32),
             ref_vecs=ref_vecs, ref_round=ref_round)
 
+    def _init_mmap(self, key: jax.Array) -> EngineState:
+        """Open the client store and return an O(K) engine state: the
+        population's rows live under ``cfg.store_dir``; the returned
+        state carries zero-row placeholders for ``client_state`` and
+        the sparse-codec ref lanes (they, too, live in the store).
+
+        Strategies exposing the O(K) init hooks (``init_cohort(key,
+        ids, n) == init(key, n)[0][ids]`` bit-for-bit, plus
+        ``init_server``) never materialize the population at all —
+        unwritten store rows are regenerated per sampled cohort.
+        Hookless strategies fall back to one full ``init`` whose rows
+        are served by index: O(N) host RAM once, still O(K) device per
+        round."""
+        strat = self.strategy
+        cohort = getattr(strat, "init_cohort", None)
+        init_server = getattr(strat, "init_server", None)
+        if cohort is not None and init_server is not None:
+            server = ensure_server_state(init_server(key, self.n))
+            row = jax.tree.map(lambda a: np.asarray(a)[0],
+                               cohort(key, np.asarray([0]), self.n))
+
+            def cs_init(ids):
+                return jax.tree.map(
+                    np.asarray, cohort(key, np.asarray(ids), self.n))
+        else:
+            cs, server = self._full_init(key)
+            server = ensure_server_state(server)
+            rows = jax.tree.map(np.asarray, cs)
+            row = jax.tree.map(lambda a: a[0], rows)
+
+            def cs_init(ids):
+                np_ids = np.asarray(ids)
+                return jax.tree.map(lambda a: a[np_ids], rows)
+
+        cap, d = self.cfg.buffer_capacity, strat.vec_dim
+        sparse = self.cfg.codec.sparse
+        template = {"cs": row}
+        if sparse:
+            # the per-client broadcast references ride in the store too:
+            # a never-synced client's reference is zeros / round −1,
+            # exactly the resident init
+            template["ref_vecs"] = np.zeros((strat.n_slots, d), np.float32)
+            template["ref_round"] = np.asarray(-1, np.int32)
+
+        def init_fn(ids):
+            np_ids = np.asarray(ids)
+            out = {"cs": cs_init(np_ids)}
+            if sparse:
+                out["ref_vecs"] = np.zeros(
+                    (np_ids.size, strat.n_slots, d), np.float32)
+                out["ref_round"] = np.full((np_ids.size,), -1, np.int32)
+            return out
+
+        root = self.cfg.store_dir or tempfile.mkdtemp(
+            prefix="client_store_")
+        self.store = ClientStore(root, self.n, template, init_fn=init_fn)
+        placeholder = jax.tree.map(
+            lambda a: jnp.zeros((0,) + np.asarray(a).shape,
+                                np.asarray(a).dtype), row)
+        return EngineState(
+            round_idx=jnp.zeros((), jnp.int32),
+            client_state=placeholder, server=server,
+            buf_vecs=jnp.zeros((cap, d), jnp.float32),
+            buf_slots=jnp.full((cap,), -1, jnp.int32),
+            buf_ready=jnp.zeros((cap,), jnp.int32),
+            buf_weight=jnp.zeros((cap,), jnp.float32),
+            buf_valid=jnp.zeros((cap,), bool),
+            buf_seq=jnp.zeros((cap,), jnp.int32),
+            ref_vecs=jnp.zeros((0, 0, 0), jnp.float32),
+            ref_round=jnp.zeros((0,), jnp.int32))
+
     def run(self, key: jax.Array, state: EngineState | None = None,
             rounds: int | None = None
             ) -> tuple[EngineState, list[RoundReport]]:
@@ -302,6 +413,13 @@ class Engine:
         k_init, k_rounds = jax.random.split(key)
         if state is None:
             state = self.init(k_init)
+        elif self._mmap:
+            # resuming over an existing store: (re)open it keyed by THIS
+            # run's k_init, so rows never sampled before the checkpoint
+            # fault in exactly as the uninterrupted run would have
+            # generated them (the `like` state a caller built for
+            # checkpointing.restore may have used a different key)
+            self.init(k_init)
         reports: list[RoundReport] = []
         start = int(state.round_idx)
         n_rounds = self.cfg.rounds if rounds is None else rounds
@@ -314,8 +432,18 @@ class Engine:
             reports.append(rep)
             every = self.cfg.checkpoint_every
             if self.cfg.checkpoint_dir and every and (r + 1) % every == 0:
-                checkpointing.save(self.cfg.checkpoint_dir, state,
-                                   manifest=self.obs.manifest)
+                if self._mmap:
+                    # the checkpoint is only the replicated state — the
+                    # population rows ARE the store, flushed alongside
+                    # so checkpoint + store dir resume together (valid
+                    # at the latest checkpoint: store rows advance past
+                    # older ones; see docs/client-store.md)
+                    self.store.flush()
+                checkpointing.save(
+                    self.cfg.checkpoint_dir, state,
+                    manifest=self.obs.manifest,
+                    store_manifest=(self.store.manifest
+                                    if self._mmap else None))
         return state, reports
 
     # -- one round ---------------------------------------------------------
@@ -324,6 +452,9 @@ class Engine:
                   ) -> tuple[EngineState, RoundReport]:
         obs = self.obs            # telemetry spans/fences — no-ops when off
         r = int(state.round_idx)
+        store = self.store
+        if self._mmap:
+            io0 = (store.io_read_bytes, store.io_written_bytes)
         with obs.span("schedule"):
             part = self.scheduler.sample(r, round_key)
             sync = self.cfg.aggregation == "sync"
@@ -332,10 +463,26 @@ class Engine:
                 arrive = arrive & (np.asarray(part.staleness) == 0)
 
         # gather the sampled sub-pytree (static K) + per-client keys
+        sub_refs = None
         with obs.span("gather"):
             keys = jax.random.split(round_key, self.n)
             if self._identity:
                 sub_cs, sub_data = state.client_state, self.data
+            elif self._mmap:
+                # the K sampled rows come off the host store (digest-
+                # verified; never-spilled rows regenerated by the
+                # strategy's deterministic init) — same per-client keys
+                # as the resident gather, so the round is bit-identical
+                np_ids = np.asarray(part.idx)
+                keys = keys[part.idx]
+                bundle = store.gather(np_ids)
+                sub_cs = jax.tree.map(jnp.asarray, bundle["cs"])
+                if self.cfg.codec.sparse:
+                    sub_refs = (jnp.asarray(bundle["ref_vecs"]),
+                                jnp.asarray(bundle["ref_round"]))
+                sub_data = (self.data.gather_clients(np_ids)
+                            if self._streaming else
+                            jax.tree.map(lambda a: a[part.idx], self.data))
             else:
                 keys = keys[part.idx]
                 sub_cs = jax.tree.map(lambda a: a[part.idx],
@@ -386,7 +533,8 @@ class Engine:
             # Metering sees the client-proposed slot tags — the frames
             # that crossed the wire — never the post-assign ids.
             with obs.span("uplink_codec"):
-                dec, up_bytes = self._wire_uplink(state, vecs, slots, part)
+                dec, up_bytes = self._wire_uplink(state, vecs, slots, part,
+                                                  sub_refs=sub_refs)
                 obs.fence(dec)
 
             # (3b) server-side assignment (v2): recompute every upload's
@@ -442,9 +590,34 @@ class Engine:
                 obs.fence(merged)
             acc_sub = None
             with obs.span("ref_track"):
-                refs = self._update_refs(state, part, arrive, applied,
-                                         rx_server, r)
+                if self._mmap:
+                    if self.cfg.codec.sparse:
+                        sub_ref_vecs = np.array(
+                            np.asarray(sub_refs[0], np.float32))
+                        sub_ref_rounds = np.array(np.asarray(sub_refs[1]))
+                        self._advance_ref_rows(
+                            sub_ref_vecs, sub_ref_rounds, arrive, applied,
+                            rx_server, r, self.strategy.downloads)
+                        sub_refs = (jnp.asarray(sub_ref_vecs),
+                                    jnp.asarray(sub_ref_rounds))
+                    refs = (state.ref_vecs, state.ref_round)  # placeholders
+                else:
+                    refs = self._update_refs(state, part, arrive, applied,
+                                             rx_server, r)
                 obs.fence(refs)
+
+            # spill the merged working set (and its advanced broadcast
+            # references) back to the host store — after this the round
+            # holds no per-client device state beyond the K rows
+            if self._mmap:
+                with obs.span("spill"):
+                    bundle = {"cs": jax.tree.map(np.asarray, merged)}
+                    if self.cfg.codec.sparse:
+                        bundle["ref_vecs"] = np.asarray(sub_refs[0],
+                                                        np.float32)
+                        bundle["ref_round"] = np.asarray(sub_refs[1],
+                                                         np.int32)
+                    store.spill(np_ids, bundle)
 
         if sync:   # barrier bookkeeping, identical for fused and staged
             n_agg = int((np.asarray(slots)[arrive] >= 0).sum())
@@ -452,18 +625,29 @@ class Engine:
             n_buf = n_evict = 0
 
         with obs.span("eval"):
-            new_state, acc, assignment = self._scatter_eval(
-                state, part.idx, merged, applied, server, buf, refs,
-                acc_sub)
+            if self._mmap:
+                new_state, acc, assignment = self._store_eval(
+                    state, part.idx, merged, applied, server, buf, refs,
+                    sub_data)
+            else:
+                new_state, acc, assignment = self._scatter_eval(
+                    state, part.idx, merged, applied, server, buf, refs,
+                    acc_sub)
             obs.fence(acc)
 
+        if self._mmap:
+            store_read = store.io_read_bytes - io0[0]
+            store_written = store.io_written_bytes - io0[1]
+        else:
+            store_read = store_written = 0
         rep = RoundReport(
             round_idx=r, mean_accuracy=acc.mean(),
             per_client_accuracy=acc, assignment=assignment,
             cluster_counts=counts, participation=part,
             upload_bytes=up_bytes, download_bytes_broadcast=down_bc,
             download_bytes_per_client=down_pc, aggregated_uploads=n_agg,
-            buffered_uploads=n_buf, evicted_uploads=n_evict)
+            buffered_uploads=n_buf, evicted_uploads=n_evict,
+            store_read_bytes=store_read, store_written_bytes=store_written)
         return new_state, rep
 
     # -- pieces ------------------------------------------------------------
@@ -499,7 +683,7 @@ class Engine:
                 state.buf_weight, state.buf_valid, state.buf_seq)
 
     def _wire_uplink(self, state: EngineState, vecs, slots,
-                     part: Participation):
+                     part: Participation, sub_refs=None):
         """Encode every surviving upload to real bytes; decode what the
         aggregator would see.  Frame = slot id (<i4) + encoded vector.
         Slot −1 ("nothing shared", e.g. below ``conf_threshold``) sends
@@ -522,9 +706,16 @@ class Engine:
             return vecs, self._identity_upload_bytes(np_slots, active)
         np_vecs = np.asarray(vecs, np.float32)
         # gather the K participants' reference rows on device — never
-        # pull the full (n, n_slots, d) population tensor to the host
-        np_refs = np.asarray(state.ref_vecs[jnp.asarray(part.idx)],
-                             np.float32) if cfg.sparse else None
+        # pull the full (n, n_slots, d) population tensor to the host.
+        # The mmap engine hands the store-gathered rows in directly
+        # (its state lanes are zero-row placeholders).
+        if not cfg.sparse:
+            np_refs = None
+        elif sub_refs is not None:
+            np_refs = np.asarray(sub_refs[0], np.float32)
+        else:
+            np_refs = np.asarray(state.ref_vecs[jnp.asarray(part.idx)],
+                                 np.float32)
         dec = np.zeros_like(np_vecs)
         total = 0
         for c in range(np_vecs.shape[0]):
@@ -556,12 +747,23 @@ class Engine:
         idx = jnp.asarray(part.idx)
         sub = np.array(state.ref_vecs[idx])          # K rows, writable
         sub_rounds = np.array(state.ref_round[idx])
+        self._advance_ref_rows(sub, sub_rounds, arrive, applied,
+                               rx_server, r, self.strategy.downloads)
+        return (state.ref_vecs.at[idx].set(jnp.asarray(sub)),
+                state.ref_round.at[idx].set(jnp.asarray(sub_rounds)))
+
+    @staticmethod
+    def _advance_ref_rows(sub, sub_rounds, arrive, applied, rx_server, r,
+                          downloads):
+        """Advance K sampled reference rows in place — the one update
+        both the resident scatter (:meth:`_update_refs`) and the mmap
+        spill share, so their reference streams cannot diverge."""
         np_applied = np.asarray(applied)
         rx = np.asarray(rx_server, np.float32)
         for c in range(sub.shape[0]):
             if not arrive[c]:
                 continue
-            if self.strategy.downloads == "all_slots":
+            if downloads == "all_slots":
                 sub[c] = rx
                 sub_rounds[c] = r
             else:
@@ -573,8 +775,7 @@ class Engine:
                         got = True
                 if got:
                     sub_rounds[c] = r
-        return (state.ref_vecs.at[idx].set(jnp.asarray(sub)),
-                state.ref_round.at[idx].set(jnp.asarray(sub_rounds)))
+        return sub, sub_rounds
 
     def _roundtrip_rows(self, server):
         """Encode→decode every server row through the *dense* wire codec
@@ -755,6 +956,50 @@ class Engine:
         acc = jnp.asarray(np.asarray(acc))
         new_state = EngineState(
             round_idx=state.round_idx + 1, client_state=cs, server=server,
+            buf_vecs=buf[0], buf_slots=buf[1], buf_ready=buf[2],
+            buf_weight=buf[3], buf_valid=buf[4], buf_seq=buf[5],
+            ref_vecs=refs[0], ref_round=refs[1])
+        return new_state, acc, assignment
+
+    def _store_eval(self, state: EngineState, idx, merged, applied,
+                    server, buf, refs, sub_data):
+        """mmap counterpart of :meth:`_scatter_eval`: the population
+        already lives in the store (the round spilled the merged rows
+        before this), so the next state keeps its zero-row placeholders.
+
+        ``store_eval="full"`` re-gathers the whole population in
+        ``store_eval_chunk`` blocks and evaluates each — per-client
+        evaluation is an independent vmap lane on both executors, so
+        the chunked accuracy vector is bit-identical to the resident
+        monolithic eval.  ``"sampled"`` (the simulated-scale setting)
+        evaluates only the K merged rows: the report's accuracy /
+        assignment then cover the cohort, not the population."""
+        if self.cfg.store_eval == "sampled":
+            acc = self.executor.evaluate(
+                self.strategy, merged, sub_data.x_test, sub_data.y_test)
+            assignment = applied
+        else:
+            def gather_cs(ids):
+                return jax.tree.map(jnp.asarray,
+                                    self.store.gather(ids)["cs"])
+
+            def gather_xy(ids):
+                if self._streaming:
+                    d = self.data.gather_clients(ids)
+                    return d.x_test, d.y_test
+                jids = jnp.asarray(ids)
+                return self.data.x_test[jids], self.data.y_test[jids]
+
+            acc = executors.evaluate_population(
+                self.executor, self.strategy, gather_cs, gather_xy,
+                self.n, self.cfg.store_eval_chunk)
+            assignment = jnp.full((self.n, self.strategy.j_slots), -1,
+                                  jnp.int32).at[jnp.asarray(idx)].set(
+                applied)
+        acc = jnp.asarray(np.asarray(acc))
+        new_state = EngineState(
+            round_idx=state.round_idx + 1,
+            client_state=state.client_state, server=server,
             buf_vecs=buf[0], buf_slots=buf[1], buf_ready=buf[2],
             buf_weight=buf[3], buf_valid=buf[4], buf_seq=buf[5],
             ref_vecs=refs[0], ref_round=refs[1])

@@ -92,6 +92,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
@@ -155,6 +156,27 @@ def _evaluate_block(strategy):
     if getattr(strategy, "use_fused_kernels", False):
         return strategy.fused_evaluate
     return lambda cs, x, y: jax.vmap(strategy.evaluate)(cs, x, y)
+
+
+def evaluate_population(executor, strategy, gather_cs, gather_data,
+                        n: int, chunk: int):
+    """Full-population evaluation over a host-side client store, in
+    fixed-size chunks — the mmap engine's ``store_eval="full"`` path.
+
+    ``gather_cs(ids)`` / ``gather_data(ids) -> (x_test, y_test)`` pull
+    each chunk's rows (store gather / streaming ingestion); only
+    ``chunk`` clients are ever device-resident.  Per-client evaluation
+    is an independent vmap lane on both executors (no cross-client
+    reduction — the shard-mapped program pads and trims), so the
+    concatenated accuracy vector is bit-identical to one monolithic
+    ``executor.evaluate`` over the whole population."""
+    accs = []
+    for c0 in range(0, n, chunk):
+        ids = np.arange(c0, min(c0 + chunk, n), dtype=np.int64)
+        cs = gather_cs(ids)
+        x, y = gather_data(ids)
+        accs.append(np.asarray(executor.evaluate(strategy, cs, x, y)))
+    return jnp.asarray(np.concatenate(accs, axis=0))
 
 
 # ---------------------------------------------------------------------------

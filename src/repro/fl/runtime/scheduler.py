@@ -14,7 +14,13 @@ Sampling policies:
   client weights.  The engine defaults these to the real per-client
   dataset sizes recorded by ``data/partition.py`` (``ClientData.sizes``),
   the FedAvg-paper convention: clients holding more data are sampled
-  more often.
+  more often.  Weights are any array-like — a device array, or the
+  host-resident ``int64`` size table a streaming population keeps
+  (``repro.fl.store.StreamingClientData.sizes``, the only O(N) state
+  the mmap engine holds); both normalize through the same float32
+  ``w / w.sum()``, so the sampling distribution — and the sampled ids
+  for a given key — are identical resident vs. streamed (pinned by the
+  conformance suite).
 * ``round_robin`` — deterministic sliding window ``(r·K + i) mod N``:
   the window cycles through the population, and when K divides N every
   client participates exactly once per N/K rounds (otherwise coverage
@@ -90,6 +96,9 @@ class Scheduler:
         self.n = n_clients
         self.k = max(1, int(round(cfg.participation * n_clients)))
         if cfg.sampling == "weighted":
+            # accept host tables (np int64 / lists) as-is: the single
+            # float32 cast here is the one place weights enter the
+            # draw, so any integer-exact source yields the same p
             w = jnp.ones(n_clients) if weights is None \
                 else jnp.asarray(weights, jnp.float32)
             if w.shape != (n_clients,):

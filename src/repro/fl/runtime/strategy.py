@@ -196,6 +196,22 @@ class TPFLStrategy:
         server = jnp.zeros((self.n_slots, self.vec_dim), jnp.float32)
         return params, ServerState(server)
 
+    # --- O(K) init hooks (client_store="mmap") ----------------------------
+    # The store regenerates never-spilled rows on demand, so init must be
+    # expressible per-cohort: ``init_cohort(key, ids, n) ==
+    # init(key, n)[0][ids]`` bit-for-bit (same key split, indexed), and
+    # ``init_server`` is the server part alone.  Only the per-client key
+    # table is O(N) — 8 bytes/client, transient.
+
+    def init_cohort(self, key: jax.Array, ids, n_clients: int):
+        keys = jax.random.split(key, n_clients)[jnp.asarray(ids)]
+        return jax.vmap(lambda k: tm.init_params(self.tm_cfg, k))(keys)
+
+    def init_server(self, key: jax.Array, n_clients: int) -> ServerState:
+        del key, n_clients
+        return ServerState(
+            jnp.zeros((self.n_slots, self.vec_dim), jnp.float32))
+
     def client_step(self, cs: tm.TMParams, slots: jnp.ndarray,
                     d: ClientData, key: jax.Array):
         """Alg. 1: local TM training, per-class confidence, selective
@@ -654,6 +670,16 @@ class FedTMStrategy:
         params = jax.vmap(lambda k: tm.init_params(self.tm_cfg, k))(keys)
         server = jnp.zeros((1, self.vec_dim), jnp.float32)
         return params, ServerState(server)
+
+    # O(K) init hooks — same contract as TPFLStrategy's:
+    # init_cohort(key, ids, n) == init(key, n)[0][ids] bit-for-bit
+    def init_cohort(self, key: jax.Array, ids, n_clients: int):
+        keys = jax.random.split(key, n_clients)[jnp.asarray(ids)]
+        return jax.vmap(lambda k: tm.init_params(self.tm_cfg, k))(keys)
+
+    def init_server(self, key: jax.Array, n_clients: int) -> ServerState:
+        del key, n_clients
+        return ServerState(jnp.zeros((1, self.vec_dim), jnp.float32))
 
     def client_step(self, cs: tm.TMParams, slots: jnp.ndarray,
                     d: ClientData, key: jax.Array):

@@ -1,0 +1,13 @@
+"""Host-side client store: O(K) working set over an O(N) population.
+
+:class:`ClientStore` — memory-mapped per-client rows (params, TA
+state, sparse-codec refs) with sha256 verify-then-place integrity;
+:class:`StreamingClientData` — on-demand per-writer LEAF ingestion for
+the sampled cohort.  Together they are what ``RuntimeConfig(
+client_store="mmap")`` puts under the engine; see
+``docs/client-store.md``.
+"""
+from repro.fl.store.client_store import ClientStore
+from repro.fl.store.streaming import StreamingClientData
+
+__all__ = ["ClientStore", "StreamingClientData"]

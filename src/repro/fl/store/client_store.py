@@ -1,0 +1,252 @@
+"""Memory-mapped per-client row store — the host side of the K-active
+working set.
+
+``EngineState`` materializes every client's params / TA state /
+``ref_vecs`` as one stacked device pytree, which caps the population at
+RAM scale.  :class:`ClientStore` moves those rows to disk: one sparse
+memory-mapped file per pytree leaf, keyed by client id, so the engine
+only ever holds the scheduler's K sampled rows resident
+(``gather(ids)`` before the round, ``spill(ids, rows)`` after the
+broadcast merge) and device/RAM footprint is O(K), not O(N).
+
+Layout under ``root``::
+
+    manifest.json (+ .sha256)   # version, n_clients, per-leaf dtype/shape
+    leaf_00.bin, leaf_01.bin …  # (n_clients, *leaf_shape) sparse files
+    written.bin                 # (n_clients,) u8 — 1 once a row was spilled
+    digests.bin                 # (n_clients, 32) u8 — per-row sha256
+
+Integrity follows the IDX cache's verify-then-place discipline
+(:mod:`repro.data.ingest.idx`): the manifest carries a ``.sha256``
+sidecar checked before it is parsed, and every *row* carries a sha256
+digest over its bytes (concatenated across all leaves in flattened
+template order) written at spill time and re-checked at gather time —
+a flipped byte in any leaf file surfaces as a loud
+:class:`~repro.data.ingest.idx.ChecksumError`, never as silently wrong
+client state.
+
+The leaf files are created sparse (``truncate`` to full size, no
+payload write), so a store sized for a million virtual clients costs
+actual disk only for the rows ever spilled — O(K·rounds), not O(N).
+Rows never sampled are never touched: their file regions stay holes,
+byte-identical across the store's whole life (property-tested).
+
+Rows that were never spilled are *virtual*: ``gather`` regenerates them
+through the caller-supplied ``init_fn(ids)`` (the strategy's
+deterministic per-client init), so a fresh store behaves exactly like a
+freshly initialized resident population — the base case of the
+engine's bit-for-bit mmap == resident conformance pin.
+
+``gather`` is read-only and thread-safe (concurrent gathers return
+identical rows); ``io_read_bytes`` / ``io_written_bytes`` meter actual
+host I/O for the telemetry plane and the client-scale bench.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import pathlib
+import threading
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.data.ingest import idx
+
+STORE_VERSION = 1
+MANIFEST_NAME = "manifest.json"
+WRITTEN_NAME = "written.bin"
+DIGESTS_NAME = "digests.bin"
+_DIGEST_BYTES = 32
+
+
+def _ensure_file(path: pathlib.Path, nbytes: int) -> None:
+    """Create ``path`` as a sparse file of ``nbytes`` (no payload write),
+    or validate an existing one — a size drift means the store was
+    created under a different template and must fail loudly."""
+    if path.exists():
+        got = path.stat().st_size
+        if got != nbytes:
+            raise ValueError(
+                f"store file {path} is {got} bytes, expected {nbytes} — "
+                f"the store on disk was created under a different "
+                f"template or client count; use a fresh directory")
+        return
+    with open(path, "wb") as f:
+        if nbytes:
+            f.truncate(nbytes)
+
+
+def _leaf_specs(leaves: list[np.ndarray]) -> list[dict]:
+    return [{"slug": f"leaf_{i:02d}", "dtype": str(a.dtype),
+             "shape": [int(s) for s in a.shape]}
+            for i, a in enumerate(leaves)]
+
+
+class ClientStore:
+    """Host-side store of per-client pytree rows, open-or-create.
+
+    ``template`` is ONE client's row (a pytree with no leading client
+    axis) — it fixes the per-leaf dtype/shape layout recorded in the
+    manifest.  ``init_fn(ids) -> stacked rows`` regenerates rows never
+    spilled (deterministic per-client init); without it, gathering an
+    unwritten row raises.
+    """
+
+    def __init__(self, root: str | pathlib.Path, n_clients: int,
+                 template: Any,
+                 init_fn: Callable[[np.ndarray], Any] | None = None,
+                 verify: bool = True):
+        self.root = pathlib.Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.n = int(n_clients)
+        self.init_fn = init_fn
+        self.verify = verify
+        leaves, self._treedef = jax.tree_util.tree_flatten(template)
+        self._leaves = [np.asarray(a) for a in leaves]
+        if not self._leaves:
+            raise ValueError("client-store template has no array leaves")
+        self._specs = _leaf_specs(self._leaves)
+        self.row_nbytes = int(sum(a.nbytes for a in self._leaves))
+
+        man_path = self.root / MANIFEST_NAME
+        if man_path.exists():
+            raw = man_path.read_bytes()
+            if verify:
+                idx.verify_bytes(man_path, raw)   # sidecar first, then parse
+            man = json.loads(raw)
+            if (man.get("version") != STORE_VERSION
+                    or man.get("n_clients") != self.n
+                    or man.get("leaves") != self._specs):
+                raise ValueError(
+                    f"store manifest {man_path} does not match the "
+                    f"caller's template (n_clients={self.n}, leaves="
+                    f"{self._specs}) — the store on disk belongs to a "
+                    f"different engine configuration; use a fresh "
+                    f"directory")
+        else:
+            man = {"version": STORE_VERSION, "n_clients": self.n,
+                   "row_nbytes": self.row_nbytes, "leaves": self._specs}
+            man_path.write_text(json.dumps(man, indent=2, sort_keys=True))
+            idx.write_checksum(man_path)
+        self.manifest = man
+
+        self._maps = []
+        for spec, leaf in zip(self._specs, self._leaves):
+            path = self.root / (spec["slug"] + ".bin")
+            _ensure_file(path, self.n * leaf.nbytes)
+            self._maps.append(np.memmap(path, dtype=leaf.dtype, mode="r+",
+                                        shape=(self.n,) + leaf.shape))
+        _ensure_file(self.root / WRITTEN_NAME, self.n)
+        _ensure_file(self.root / DIGESTS_NAME, self.n * _DIGEST_BYTES)
+        self._written = np.memmap(self.root / WRITTEN_NAME, dtype=np.uint8,
+                                  mode="r+", shape=(self.n,))
+        self._digests = np.memmap(self.root / DIGESTS_NAME, dtype=np.uint8,
+                                  mode="r+",
+                                  shape=(self.n, _DIGEST_BYTES))
+        self.io_read_bytes = 0
+        self.io_written_bytes = 0
+        self._io_lock = threading.Lock()
+
+    # -- helpers ---------------------------------------------------------
+
+    def _check_ids(self, ids) -> np.ndarray:
+        ids = np.asarray(ids, dtype=np.int64).reshape(-1)
+        if ids.size and (ids.min() < 0 or ids.max() >= self.n):
+            raise ValueError(
+                f"client ids out of range [0, {self.n}): "
+                f"[{ids.min()}, {ids.max()}]")
+        return ids
+
+    @staticmethod
+    def _row_digest(row: list[np.ndarray]) -> np.ndarray:
+        h = hashlib.sha256()
+        for a in row:
+            h.update(np.ascontiguousarray(a).tobytes())
+        return np.frombuffer(h.digest(), dtype=np.uint8)
+
+    def written_count(self) -> int:
+        return int(np.asarray(self._written, dtype=np.int64).sum())
+
+    # -- the two verbs ---------------------------------------------------
+
+    def gather(self, ids) -> Any:
+        """Stacked rows for ``ids``: spilled rows are read back and
+        digest-verified; never-spilled rows come from ``init_fn``."""
+        ids = self._check_ids(ids)
+        written = np.asarray(self._written[ids]).astype(bool)
+        out = [np.empty((ids.size,) + a.shape, a.dtype)
+               for a in self._leaves]
+        miss = ids[~written]
+        if miss.size:
+            if self.init_fn is None:
+                raise ValueError(
+                    f"clients {miss[:8].tolist()}… were never spilled "
+                    f"and the store has no init_fn to regenerate them")
+            init_rows = jax.tree_util.tree_leaves(self.init_fn(miss))
+            if len(init_rows) != len(self._leaves):
+                raise ValueError(
+                    f"init_fn returned {len(init_rows)} leaves, the "
+                    f"store template has {len(self._leaves)}")
+            where = np.nonzero(~written)[0]
+            for dst, src, leaf in zip(out, init_rows, self._leaves):
+                src = np.asarray(src)
+                if src.shape != (miss.size,) + leaf.shape \
+                        or src.dtype != leaf.dtype:
+                    raise ValueError(
+                        f"init_fn leaf {src.dtype}{src.shape} does not "
+                        f"match template {leaf.dtype}"
+                        f"{(miss.size,) + leaf.shape}")
+                dst[where] = src
+        read = 0
+        for j in np.nonzero(written)[0]:
+            i = int(ids[j])
+            row = [np.asarray(mm[i]) for mm in self._maps]
+            if self.verify:
+                got = self._row_digest(row)
+                want = np.asarray(self._digests[i])
+                if not np.array_equal(got, want):
+                    raise idx.ChecksumError(
+                        f"checksum mismatch for client {i} in "
+                        f"{self.root}: stored row digest "
+                        f"{bytes(want).hex()[:12]}…, file bytes hash to "
+                        f"{bytes(got).hex()[:12]}… — the store is "
+                        f"corrupt; delete it and re-run")
+            for dst, a in zip(out, row):
+                dst[j] = a
+            read += self.row_nbytes
+        with self._io_lock:
+            self.io_read_bytes += read
+        return jax.tree_util.tree_unflatten(self._treedef, out)
+
+    def spill(self, ids, rows: Any) -> None:
+        """Write stacked ``rows`` back under ``ids`` (verify-then-place:
+        the per-row digest is recorded with the bytes, so the next
+        gather re-proves integrity)."""
+        ids = self._check_ids(ids)
+        leaves = [np.asarray(a) for a in jax.tree_util.tree_leaves(rows)]
+        if len(leaves) != len(self._leaves):
+            raise ValueError(
+                f"spill got {len(leaves)} leaves, the store template "
+                f"has {len(self._leaves)}")
+        for a, leaf in zip(leaves, self._leaves):
+            if a.shape != (ids.size,) + leaf.shape or a.dtype != leaf.dtype:
+                raise ValueError(
+                    f"spill leaf {a.dtype}{a.shape} does not match "
+                    f"template {leaf.dtype}{(ids.size,) + leaf.shape}")
+        for j, i in enumerate(ids):
+            i = int(i)
+            row = [a[j] for a in leaves]
+            for mm, a in zip(self._maps, row):
+                mm[i] = a
+            self._digests[i] = self._row_digest(row)
+            self._written[i] = 1
+        with self._io_lock:
+            self.io_written_bytes += int(ids.size) * (
+                self.row_nbytes + _DIGEST_BYTES + 1)
+
+    def flush(self) -> None:
+        """Push dirty pages to disk (reopen-durability; checkpoints)."""
+        for mm in (*self._maps, self._written, self._digests):
+            mm.flush()

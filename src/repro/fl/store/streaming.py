@@ -1,0 +1,146 @@
+"""Streaming per-client data over LEAF shards — ingestion's side of the
+K-active working set.
+
+``registry.load`` materializes the whole encoded pool before
+partitioning, so the client population is capped by pool RAM.
+:class:`StreamingClientData` instead holds only the *writer table*
+(names + per-writer sample counts from the shard index) and produces
+rectangular :class:`~repro.data.partition.ClientData` blocks **on
+demand** for the ids the scheduler actually sampled —
+``gather_clients(ids)`` parses only the shards those clients' writers
+live in (:func:`repro.data.ingest.leaf.read_writers`), never the pool.
+
+Parity contract (pinned by ``tests/test_ingest.py``): for
+``n_clients ≤ n_writers`` the gathered rows are **bit-for-bit** the
+rows :func:`repro.data.ingest.natural.partition_writers` would have
+produced from the materialized pool — same contiguous writer grouping
+(``np.array_split``), same per-client budget key chain
+(``fold_in(fold_in(key, 0xFE31), i)``), same eval-first subsample /
+wraparound padding, and an encoding applied per gathered row (the
+elementwise bool / thermometer transforms commute with row selection;
+``quantile`` needs the pool and is rejected at
+``registry.load_stream``).  Beyond the writer count — the simulated
+million-client regime — clients map cyclically onto writers
+(client ``i`` → writer ``i % W``), which has no materialized
+counterpart by construction.
+
+``sizes`` is the full host-resident per-client size table (int64, 8
+bytes/client — the only O(N) state) that drives the scheduler's
+``weighted`` sampling without any ``ClientData`` materialization.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.ingest import leaf, natural
+from repro.data.partition import ClientData
+
+
+class StreamingClientData:
+    """Writer-table view of a LEAF dataset; per-cohort gather on demand.
+
+    ``pool`` is a :class:`repro.data.ingest.registry.StreamPool`.  The
+    constructor touches no shard payloads — only the index-derived
+    writer table.
+    """
+
+    def __init__(self, pool, *, n_clients: int, n_train: int, n_test: int,
+                 n_conf: int, key: jax.Array):
+        self.pool = pool
+        self.n_clients = int(n_clients)
+        self.n_train, self.n_test, self.n_conf = n_train, n_test, n_conf
+        self._key = key
+        w_sizes = np.asarray(pool.writer_sizes, np.int64)
+        self._n_writers = w_sizes.size
+        if self._n_writers == 0:
+            raise ValueError(f"stream pool {pool.name!r} has no writers")
+        # cum[w] = global row offset of writer w in the (virtual) pool —
+        # read_shards concatenates writers in index order, so writer w's
+        # rows are exactly [cum[w], cum[w+1])
+        self._cum = np.concatenate([[0], np.cumsum(w_sizes)])
+        if self.n_clients <= self._n_writers:
+            # the materialized partitioner's contiguous writer blocks
+            groups = np.array_split(np.arange(self._n_writers),
+                                    self.n_clients)
+            self._g_start = np.asarray([g[0] for g in groups], np.int64)
+            self._g_stop = np.asarray([g[-1] + 1 for g in groups], np.int64)
+            sizes = self._cum[self._g_stop] - self._cum[self._g_start]
+        else:
+            # simulated-scale regime: cyclic writer reuse, no
+            # materialized counterpart (partition_writers raises here)
+            self._g_start = self._g_stop = None
+            sizes = w_sizes[np.arange(self.n_clients) % self._n_writers]
+        self.sizes = sizes.astype(np.int64)
+
+    def _writers_of(self, i: int) -> range:
+        if self._g_start is not None:
+            return range(int(self._g_start[i]), int(self._g_stop[i]))
+        w = i % self._n_writers
+        return range(w, w + 1)
+
+    def _row_span(self, i: int) -> tuple[int, int]:
+        ws = self._writers_of(i)
+        return int(self._cum[ws.start]), int(self._cum[ws.stop])
+
+    def gather_clients(self, ids) -> ClientData:
+        """Rectangular :class:`ClientData` for ``ids`` — the cohort
+        block the engine trains on; only these clients' shards are
+        parsed."""
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        if ids.size and (ids.min() < 0 or ids.max() >= self.n_clients):
+            raise ValueError(
+                f"client ids out of range [0, {self.n_clients})")
+        wids = sorted({w for i in ids for w in self._writers_of(int(i))})
+        data = leaf.read_writers(self.pool.root, wids,
+                                 verify=self.pool.verify)
+        eval_need = self.n_test + self.n_conf
+        xs, ys, sizes, mixtures = [], [], [], []
+        for i in ids:
+            i = int(i)
+            start, stop = self._row_span(i)
+            rows = np.arange(start, stop, dtype=np.int64)
+            y_all = np.concatenate(
+                [data[w][1] for w in self._writers_of(i)])
+            counts = np.bincount(y_all, minlength=self.pool.n_classes)
+            mixtures.append(counts / counts.sum())
+            sizes.append(len(rows))
+            # the exact partition_writers budget draw — same key chain,
+            # same permutation, same eval-first split, same wraparound
+            order = rows[np.asarray(jax.random.permutation(
+                jax.random.fold_in(
+                    jax.random.fold_in(self._key, natural._TAG_BUDGET), i),
+                len(rows)))]
+            if len(order) > eval_need:
+                eval_pool, train_pool = order[:eval_need], order[eval_need:]
+            elif len(order) > 1:
+                eval_pool, train_pool = order[:-1], order[-1:]
+            else:
+                eval_pool = train_pool = order
+            picked = np.concatenate([
+                train_pool[np.arange(self.n_train) % len(train_pool)],
+                eval_pool[np.arange(self.n_test) % len(eval_pool)],
+                eval_pool[(self.n_test + np.arange(self.n_conf))
+                          % len(eval_pool)]])
+            # global row → (writer, local row) through the offset table
+            w_of = np.searchsorted(self._cum, picked, side="right") - 1
+            local = picked - self._cum[w_of]
+            xs.append(np.stack([data[int(w)][0][int(li)]
+                                for w, li in zip(w_of, local)]))
+            ys.append(np.asarray([data[int(w)][1][int(li)]
+                                  for w, li in zip(w_of, local)],
+                                 np.int32))
+        unit = jnp.asarray(np.stack(xs), jnp.float32)     # (k, B, F) raw
+        bits = self.pool.encoder(
+            unit.reshape(-1, unit.shape[-1])).reshape(
+            unit.shape[0], unit.shape[1], -1)
+        ys = jnp.asarray(np.stack(ys), jnp.int32)
+        nt, ne = self.n_train, self.n_test
+        return ClientData(
+            x_train=bits[:, :nt], y_train=ys[:, :nt],
+            x_test=bits[:, nt:nt + ne], y_test=ys[:, nt:nt + ne],
+            x_conf=bits[:, nt + ne:], y_conf=ys[:, nt + ne:],
+            mixtures=jnp.asarray(np.stack(mixtures), jnp.float32),
+            sizes=jnp.asarray(np.asarray(sizes), jnp.int32),
+        )

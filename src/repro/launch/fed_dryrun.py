@@ -36,6 +36,66 @@ from repro.sharding import compat  # noqa: E402
 ARTIFACTS = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts"
 
 
+def client_scale(n_total: int = 1_000_000, k_active: int = 256) -> dict:
+    """The million-client working set on the host side of the mesh round.
+
+    The lowered shard-mapped round above prices K=256 active clients on
+    the mesh; this section prices where those K rows *come from*: a
+    memory-mapped :class:`~repro.fl.store.ClientStore` sized for
+    N=1,000,000 simulated clients, strategy-faithful TM rows
+    (``TPFLStrategy.init_cohort`` is the fault-in path, exactly as the
+    mmap engine wires it), one K-active gather → mutate → spill → flush
+    cycle timed end to end.  ``resident_bytes`` is the O(K) contract in
+    numbers: only the sampled rows ever materialize, everything else is
+    a hole in a sparse file."""
+    import tempfile
+
+    import numpy as np
+
+    from repro.fl.runtime.strategy import TPFLStrategy
+    from repro.fl.store import ClientStore
+
+    tm_cfg = tm.TMConfig(n_classes=10, n_clauses=16, n_features=64,
+                         n_states=63, s=5.0, T=16)
+    strat = TPFLStrategy(tm_cfg, local_epochs=1)
+    key = jax.random.PRNGKey(0)
+
+    def init_fn(ids):
+        return jax.tree.map(
+            np.asarray, strat.init_cohort(key, np.asarray(ids), n_total))
+
+    row = jax.tree.map(lambda a: a[0], init_fn(np.asarray([0])))
+    store = ClientStore(tempfile.mkdtemp(prefix="dryrun_client_store_"),
+                        n_total, {"cs": row}, init_fn=lambda ids:
+                        {"cs": init_fn(ids)})
+    ids = np.asarray(jax.random.choice(
+        jax.random.PRNGKey(1), n_total, (k_active,), replace=False))
+    t0 = time.time()
+    bundle = store.gather(ids)                    # faults K rows in
+    bundle = jax.tree.map(lambda a: (a + 1).astype(a.dtype), bundle)
+    store.spill(ids, bundle)                      # round's writeback
+    store.flush()
+    wall = time.time() - t0
+    back = store.gather(ids)                      # round-trip check
+    ok = all(bool(np.array_equal(a, b)) for a, b in zip(
+        jax.tree_util.tree_leaves(bundle), jax.tree_util.tree_leaves(back)))
+    section = {
+        "n_clients": n_total, "k_active": k_active,
+        "row_bytes": store.row_nbytes,
+        "resident_rows": store.written_count(),
+        "resident_bytes": store.written_count() * store.row_nbytes,
+        "gather_spill_s": round(wall, 3),
+        "io_read_bytes": store.io_read_bytes,
+        "io_written_bytes": store.io_written_bytes,
+        "roundtrip_ok": ok,
+    }
+    print(f"client_scale: {k_active} of {n_total} rows resident "
+          f"({section['resident_bytes']/1e6:.1f} MB of "
+          f"{n_total*store.row_nbytes/1e9:.0f} GB virtual), "
+          f"gather+spill {section['gather_spill_s']}s", flush=True)
+    return section
+
+
 def run(multi_pod: bool = False, n_clients: int = 256,
         clauses: int = 300, buffer_capacity: int = 512) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -95,6 +155,7 @@ def run(multi_pod: bool = False, n_clients: int = 256,
             / out["tpfl"]["collective_bytes_per_device"])
         print(f"FedAvg-TM moves {out['fedavg_over_tpfl']:.1f}× the "
               f"collective bytes of TPFL")
+    out["client_scale"] = client_scale()
     ARTIFACTS.mkdir(parents=True, exist_ok=True)
     (ARTIFACTS / f"fed_dryrun_{out['mesh']}.json").write_text(
         json.dumps(out, indent=2))

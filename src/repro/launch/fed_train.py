@@ -269,6 +269,18 @@ def main(argv: list[str] | None = None) -> dict:
                          "written — existing shards win; clear the "
                          "data dir to regenerate")
     ap.add_argument("--clients", type=int, default=20)
+    ap.add_argument("--n-clients", type=int, default=None,
+                    dest="n_clients", metavar="N",
+                    help="simulated-scale population: stream per-writer "
+                         "LEAF shards on demand for the sampled cohort "
+                         "instead of materializing the pool (clients "
+                         "map cyclically onto writers beyond the writer "
+                         "count).  Scales past RAM; requires --data-dir "
+                         "and --client-store mmap.  Overrides --clients")
+    ap.add_argument("--active", type=int, default=None, metavar="K",
+                    help="sample K clients per round (sets "
+                         "--participation K/N; the engine's working set "
+                         "is O(K))")
     ap.add_argument("--rounds", type=int, default=5)
     ap.add_argument("--local-epochs", type=int, default=2)
     ap.add_argument("--clauses", type=int, default=48)
@@ -317,6 +329,23 @@ def main(argv: list[str] | None = None) -> dict:
                          "interpret mode on CPU, Mosaic on TPU).  "
                          "Bit-identical outputs, conformance-pinned; "
                          "no-op for the MLP baselines")
+    # host-side client store (docs/client-store.md)
+    ap.add_argument("--client-store", default="resident",
+                    dest="client_store", choices=("resident", "mmap"),
+                    help="mmap keeps client rows in a memory-mapped "
+                         "host store and gathers/spills only the K "
+                         "sampled rows per round — device/RAM O(K), "
+                         "bit-identical to resident (conformance-"
+                         "pinned)")
+    ap.add_argument("--store-dir", default=None, metavar="DIR",
+                    help="client-store root (default: fresh temp dir); "
+                         "reuse it together with --ckpt-dir to resume")
+    ap.add_argument("--store-eval", default="full", dest="store_eval",
+                    choices=("full", "sampled"),
+                    help="mmap evaluation scope: full = chunked "
+                         "population eval (resident-identical reports), "
+                         "sampled = the K merged clients only (the "
+                         "simulated-scale setting)")
     # checkpointing
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -335,22 +364,55 @@ def main(argv: list[str] | None = None) -> dict:
     args = ap.parse_args(argv)
 
     key = jax.random.PRNGKey(args.seed)
-    pool = datasets.load(args.dataset, data_dir=args.data_dir,
-                         encoding=args.encoding, n_samples=6000, side=12,
-                         seed=args.seed,
-                         n_writers=args.writers or max(25, args.clients))
-    # writer-tagged pools take the natural writer-identity split (the
-    # real per-writer ``sizes`` drive --sampling weighted), the rest
-    # the paper's Dirichlet split
-    data = natural.partition_pool(
-        pool, n_clients=args.clients, n_train=80, n_test=40, n_conf=40,
-        key=jax.random.PRNGKey(args.seed + 1),
-        experiment=args.experiment)
+    streaming = args.n_clients is not None
+    if streaming:
+        if args.client_store != "mmap":
+            raise SystemExit(
+                "--n-clients streams the population on demand — it "
+                "requires --client-store mmap (there is no materialized "
+                "pool for the resident engine to hold)")
+        if args.data_dir is None:
+            raise SystemExit("--n-clients needs --data-dir (LEAF shards "
+                             "to stream; the mirror writes them)")
+        if args.strategy in ("flis_dc", "flis_hc"):
+            raise SystemExit(
+                "flis_* draws its server probe set from materialized "
+                "client data at init — not available on a streamed "
+                "population; use --clients instead of --n-clients")
+        pool = datasets.load_stream(
+            args.dataset, args.data_dir, encoding=args.encoding,
+            n_samples=6000, side=12, seed=args.seed,
+            n_writers=args.writers or 25)
+        from repro.fl.store import StreamingClientData
+        data = StreamingClientData(
+            pool, n_clients=args.n_clients, n_train=80, n_test=40,
+            n_conf=40, key=jax.random.PRNGKey(args.seed + 1))
+        n_clients = args.n_clients
+    else:
+        pool = datasets.load(
+            args.dataset, data_dir=args.data_dir,
+            encoding=args.encoding, n_samples=6000, side=12,
+            seed=args.seed,
+            n_writers=args.writers or max(25, args.clients))
+        # writer-tagged pools take the natural writer-identity split
+        # (the real per-writer ``sizes`` drive --sampling weighted),
+        # the rest the paper's Dirichlet split
+        data = natural.partition_pool(
+            pool, n_clients=args.clients, n_train=80, n_test=40,
+            n_conf=40, key=jax.random.PRNGKey(args.seed + 1),
+            experiment=args.experiment)
+        n_clients = args.clients
+
+    participation = args.participation
+    if args.active is not None:
+        if not 0 < args.active <= n_clients:
+            raise SystemExit(f"--active must be in [1, {n_clients}]")
+        participation = args.active / n_clients
 
     tm_cfg = tm.TMConfig(n_classes=pool.n_classes, n_clauses=args.clauses,
                          n_features=pool.n_features, n_states=63,
                          s=5.0, T=40)
-    fed_cfg = federation.FedConfig(n_clients=args.clients,
+    fed_cfg = federation.FedConfig(n_clients=n_clients,
                                    rounds=args.rounds,
                                    local_epochs=args.local_epochs)
     mesh = None
@@ -368,7 +430,7 @@ def main(argv: list[str] | None = None) -> dict:
     rt_cfg = RuntimeConfig(
         rounds=args.rounds,
         scheduler=SchedulerConfig(
-            participation=args.participation, sampling=args.sampling,
+            participation=participation, sampling=args.sampling,
             dropout=args.dropout, straggler=args.straggler,
             max_staleness=args.max_staleness),
         codec=CodecConfig(args.codec, sparse=args.sparse),
@@ -380,7 +442,9 @@ def main(argv: list[str] | None = None) -> dict:
         backend="shardmap" if mesh is not None else "inprocess",
         mesh_collective=args.collective,
         tm_backend=args.tm_backend,
-        checkpoint_dir=args.ckpt_dir, checkpoint_every=args.ckpt_every)
+        checkpoint_dir=args.ckpt_dir, checkpoint_every=args.ckpt_every,
+        client_store=args.client_store, store_dir=args.store_dir,
+        store_eval=args.store_eval)
 
     strategy = _build_strategy(args.strategy, tm_cfg, fed_cfg, pool,
                                max_slots=args.max_slots,
@@ -396,7 +460,8 @@ def main(argv: list[str] | None = None) -> dict:
         telemetry.start(obs.build_manifest(
             config=rt_cfg, seed=args.seed, mesh=mesh,
             extra={"strategy": args.strategy, "dataset": args.dataset,
-                   "encoding": args.encoding, "n_clients": args.clients,
+                   "encoding": args.encoding, "n_clients": n_clients,
+                   "client_store": args.client_store,
                    "rounds": args.rounds, "argv": argv,
                    "collective_payload_bytes":
                        engine.collective_payload_bytes()}))
@@ -422,12 +487,17 @@ def main(argv: list[str] | None = None) -> dict:
     where = "in-process" if mesh is None else \
         f"shard_map over {engine.executor.n_shards}-device clients mesh " \
         f"({args.collective})"
-    split = "writer-natural" if pool.writers is not None \
-        else f"exp{args.experiment}"
+    if streaming:
+        split = f"streamed ({len(pool.users)} writers, cyclic)"
+    elif getattr(pool, "writers", None) is not None:
+        split = "writer-natural"
+    else:
+        split = f"exp{args.experiment}"
     print(f"{args.strategy} on {args.dataset} [{args.encoding}, "
           f"{pool.n_features}f] {split}: "
-          f"{args.clients} clients, K={engine.scheduler.k}/round, "
-          f"dropout={args.dropout}, codec={args.codec}"
+          f"{n_clients} clients, K={engine.scheduler.k}/round, "
+          f"store={args.client_store}, dropout={args.dropout}, "
+          f"codec={args.codec}"
           f"{'+sparse' if args.sparse else ''}, mode={args.mode}, "
           f"backend={where}", flush=True)
     if args.sampling == "weighted" and engine.scheduler.p is not None:
@@ -446,11 +516,13 @@ def main(argv: list[str] | None = None) -> dict:
     # derived from the report's per_client_accuracy; no engine change
     from repro.fl.obs.events import accuracy_deciles, worst_decile_mean
 
-    up = down_bc = down_pc = 0
+    up = down_bc = down_pc = st_rd = st_wr = 0
     for rep in reports:
         up += rep.upload_bytes
         down_bc += rep.download_bytes_broadcast
         down_pc += rep.download_bytes_per_client
+        st_rd += rep.store_read_bytes
+        st_wr += rep.store_written_bytes
         extra = ""
         if args.mode == "async":
             extra = (f" agg={rep.aggregated_uploads}"
@@ -468,6 +540,11 @@ def main(argv: list[str] | None = None) -> dict:
           f"download_broadcast={down_bc}B ({down_bc/1e6:.4f}MB) "
           f"download_per_client={down_pc}B ({down_pc/1e6:.4f}MB)",
           flush=True)
+    if args.client_store == "mmap":
+        print(f"client store: read={st_rd}B written={st_wr}B "
+              f"({engine.store.written_count()} of {engine.n} rows "
+              f"materialized, {engine.store.row_nbytes}B/row)",
+              flush=True)
     deciles = accuracy_deciles(reports[-1].per_client_accuracy)
     print("final per-client accuracy deciles: "
           + " ".join(f"p{10 * i}={d:.3f}" for i, d in enumerate(deciles)),
@@ -482,7 +559,8 @@ def main(argv: list[str] | None = None) -> dict:
             "final_worst_decile_mean": worst_decile_mean(
                 reports[-1].per_client_accuracy),
             "upload_bytes": up, "download_bytes_broadcast": down_bc,
-            "download_bytes_per_client": down_pc}
+            "download_bytes_per_client": down_pc,
+            "store_read_bytes": st_rd, "store_written_bytes": st_wr}
 
 
 if __name__ == "__main__":

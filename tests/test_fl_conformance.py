@@ -930,3 +930,223 @@ def test_telemetry_is_bit_neutral(backend, aggregation, data, tmp_path):
     events = read_events(run_dir / "events.jsonl")
     assert [e["round"] for e in events] == [0, 1, 2]
     assert all(e["phases"] for e in events)
+
+
+# ---------------------------------------------------------------------------
+# million-client client store: mmap engine == resident engine, bit for bit
+# ---------------------------------------------------------------------------
+
+# hook coverage on purpose: tpfl/fedtm carry the O(K) ``init_cohort``
+# fast path, ifca/flis_dc take the hookless full-init fallback — both
+# must hold the same parity
+MMAP_STRATEGIES = ("tpfl", "ifca", "flis_dc", "fedtm")
+
+
+def _run_mmap(strat_name, data, sched, wire, backend, store_dir,
+              rounds=ROUNDS):
+    cfg = RuntimeConfig(rounds=rounds, scheduler=sched, codec=wire,
+                        backend=backend, client_store="mmap",
+                        store_dir=str(store_dir))
+    engine = Engine(STRATEGIES[strat_name](), data, cfg)
+    state, reports = engine.run(jax.random.PRNGKey(0))
+    return engine, state, reports
+
+
+def _assert_mmap_run_equals_resident(sa, ra, engine_m, sm, rm):
+    """Every non-store observable of the mmap run equals the resident
+    run bit for bit; the population itself is compared through the
+    store (the mmap state intentionally carries no O(N) lanes)."""
+    for a, b in zip(ra, rm):
+        assert float(a.mean_accuracy) == float(b.mean_accuracy)
+        assert (np.asarray(a.per_client_accuracy)
+                == np.asarray(b.per_client_accuracy)).all()
+        assert (np.asarray(a.assignment) == np.asarray(b.assignment)).all()
+        assert (np.asarray(a.cluster_counts)
+                == np.asarray(b.cluster_counts)).all()
+        assert a.upload_bytes == b.upload_bytes
+        assert a.download_bytes_broadcast == b.download_bytes_broadcast
+        assert a.download_bytes_per_client == b.download_bytes_per_client
+        assert a.aggregated_uploads == b.aggregated_uploads
+        # host-I/O gauges: the resident engine never touches a store,
+        # the mmap engine spills its cohort every round
+        assert a.store_read_bytes == 0 and a.store_written_bytes == 0
+        assert b.store_written_bytes > 0
+    for la, lb in zip(jax.tree.leaves(sa.server),
+                      jax.tree.leaves(sm.server)):
+        assert (np.asarray(la) == np.asarray(lb)).all()
+    # O(K) contract: the mmap state holds zero-row placeholders, the
+    # population lives in the store — gather it whole for comparison
+    assert jax.tree.leaves(sm.client_state)[0].shape[0] == 0
+    pop = engine_m.store.gather(np.arange(engine_m.n))
+    for la, lb in zip(jax.tree.leaves(sa.client_state),
+                      jax.tree.leaves(pop["cs"])):
+        assert (np.asarray(la) == np.asarray(lb)).all()
+    if "ref_vecs" in pop:       # sparse-delta reference lanes ride rows
+        assert (np.asarray(sa.ref_vecs)
+                == np.asarray(pop["ref_vecs"])).all()
+        assert (np.asarray(sa.ref_round)
+                == np.asarray(pop["ref_round"])).all()
+
+
+@pytest.mark.parametrize("part_name", sorted(PARTICIPATION))
+@pytest.mark.parametrize("wire_name", sorted(WIRES))
+@pytest.mark.parametrize("strat_name", MMAP_STRATEGIES)
+def test_mmap_store_engine_bit_identical_to_resident(
+        strat_name, wire_name, part_name, data, tmp_path):
+    """The tentpole contract: ``client_store="mmap"`` — K sampled rows
+    gathered from the host store into the compiled round, spilled back
+    after upload — reproduces the resident engine bit for bit: every
+    report field, the server pytree, the full population (including
+    rows the scheduler never touched, regenerated by the fault-in
+    init), and the sparse-delta reference lanes now living in the
+    store."""
+    sched, wire = PARTICIPATION[part_name], WIRES[wire_name]
+    sa, ra = _run(STRATEGIES[strat_name](), data, sched, wire, "inprocess")
+    em, sm, rm = _run_mmap(strat_name, data, sched, wire, "inprocess",
+                           tmp_path / "store")
+    _assert_mmap_run_equals_resident(sa, ra, em, sm, rm)
+
+
+@pytest.mark.parametrize("wire_name", ["float32", "int4_sparse"])
+@pytest.mark.parametrize("strat_name", ["tpfl", "fedtm"])
+def test_mmap_store_engine_on_shardmap_matches_resident(
+        strat_name, wire_name, data, tmp_path):
+    """The store sits *outside* the mesh program: a shard-mapped mmap
+    run equals the in-process resident run bit for bit (gather feeds
+    the same compiled round the resident engine runs)."""
+    sched = PARTICIPATION["partial"]
+    sa, ra = _run(STRATEGIES[strat_name](), data, sched,
+                  WIRES[wire_name], "inprocess")
+    em, sm, rm = _run_mmap(strat_name, data, sched, WIRES[wire_name],
+                           "shardmap", tmp_path / "store")
+    _assert_mmap_run_equals_resident(sa, ra, em, sm, rm)
+
+
+def test_mmap_store_engine_async_matches_resident(data, tmp_path):
+    """Async aggregation over the store: the device buffer lanes are
+    replicated state (they ride the checkpoint, not the store), so the
+    buffered mmap run must equal the resident one bit for bit —
+    including every buffer lane."""
+    kw = dict(rounds=3, scheduler=ASYNC_SCHED, aggregation="async",
+              async_min_uploads=2, buffer_capacity=5)
+    sa, ra = Engine(TPFLStrategy(TM_CFG, local_epochs=1), data,
+                    RuntimeConfig(**kw)).run(jax.random.PRNGKey(0))
+    em = Engine(TPFLStrategy(TM_CFG, local_epochs=1), data,
+                RuntimeConfig(**kw, client_store="mmap",
+                              store_dir=str(tmp_path / "store")))
+    sm, rm = em.run(jax.random.PRNGKey(0))
+    _assert_mmap_run_equals_resident(sa, ra, em, sm, rm)
+    _assert_async_reports_equal(ra, rm)
+    for lane in ("buf_vecs", "buf_slots", "buf_ready", "buf_weight",
+                 "buf_valid", "buf_seq"):
+        assert (np.asarray(getattr(sa, lane))
+                == np.asarray(getattr(sm, lane))).all(), lane
+
+
+def test_mmap_checkpoint_resume_bit_identical(tmp_path, data):
+    """An interrupted mmap run (replicated-state checkpoint + flushed
+    store dir) resumes bit-identically to both the uninterrupted mmap
+    run and the resident engine — sparse references included, and the
+    store manifest rides the checkpoint directory."""
+    from repro.fl.runtime import checkpointing
+
+    def cfg(**kw):
+        return RuntimeConfig(
+            rounds=2, codec=CodecConfig("int8", sparse=True),
+            scheduler=SchedulerConfig(participation=0.5, dropout=0.25),
+            **kw)
+
+    key = jax.random.PRNGKey(0)
+    strat = lambda: TPFLStrategy(TM_CFG, local_epochs=1)  # noqa: E731
+    s_res, r_res = Engine(strat(), data, cfg()).run(key)
+    em_full = Engine(strat(), data, cfg(
+        client_store="mmap", store_dir=str(tmp_path / "store_full")))
+    s_full, r_full = em_full.run(key)
+
+    # interrupted half: engine-driven checkpoint at round 1 (flushes
+    # the store and writes store_manifest.json alongside)
+    store_b = tmp_path / "store_half"
+    ck = tmp_path / "ckpt"
+    e1 = Engine(strat(), data, cfg(
+        client_store="mmap", store_dir=str(store_b),
+        checkpoint_dir=str(ck), checkpoint_every=1))
+    e1.run(key, rounds=1)
+    assert (ck / checkpointing.STORE_MANIFEST_NAME).is_file()
+
+    # resume: fresh engine over the same store dir — the `like` state
+    # deliberately uses a different key (the fed_train idiom); run()
+    # re-keys the store's fault-in init from the run key
+    e2 = Engine(strat(), data, cfg(
+        client_store="mmap", store_dir=str(store_b)))
+    restored = checkpointing.restore(
+        checkpointing.latest(ck), e2.init(jax.random.PRNGKey(7)))
+    s_resumed, r_resumed = e2.run(key, state=restored, rounds=1)
+
+    for rep, full_rep, res_rep in zip(r_resumed, r_full[1:], r_res[1:]):
+        assert float(rep.mean_accuracy) == float(full_rep.mean_accuracy)
+        assert float(rep.mean_accuracy) == float(res_rep.mean_accuracy)
+        assert rep.upload_bytes == full_rep.upload_bytes == \
+            res_rep.upload_bytes
+    _assert_mmap_run_equals_resident(s_res, r_res[1:], e2, s_resumed,
+                                     r_resumed)
+
+
+def test_mmap_sampled_eval_reports_cohort_accuracy(data, tmp_path):
+    """``store_eval="sampled"`` (the million-client regime: scoring all
+    N every round is exactly the O(N) scan the store exists to avoid)
+    reports K-shaped accuracy for the round's cohort, equal to the
+    resident engine's population-shaped report sliced at the sampled
+    ids."""
+    sched = SchedulerConfig(participation=0.5)
+    sa, ra = _run(TPFLStrategy(TM_CFG, local_epochs=1), data, sched,
+                  WIRES["float32"], "inprocess")
+    engine = Engine(TPFLStrategy(TM_CFG, local_epochs=1), data,
+                    RuntimeConfig(rounds=ROUNDS, scheduler=sched,
+                                  client_store="mmap",
+                                  store_dir=str(tmp_path / "store"),
+                                  store_eval="sampled"))
+    key = jax.random.PRNGKey(0)
+    k_init, k_rounds = jax.random.split(key)
+    state = engine.init(k_init)
+    for r in range(ROUNDS):
+        rk = jax.random.fold_in(k_rounds, r)
+        idx = np.asarray(engine.scheduler.sample(r, rk).idx)
+        state, rep = engine.run_round(state, rk)
+        assert np.asarray(rep.per_client_accuracy).shape == idx.shape
+        assert (np.asarray(rep.per_client_accuracy)
+                == np.asarray(ra[r].per_client_accuracy)[idx]).all()
+        assert (np.asarray(rep.assignment)
+                == np.asarray(ra[r].assignment)[idx]).all()
+
+
+def test_mmap_weighted_sampling_size_table_matches_resident(data):
+    """Satellite fix pin: the scheduler accepts the store's host-side
+    ``int64`` size table as weights — same key, same sampled ids as the
+    resident engine's device-array sizes, so resident and streamed runs
+    draw identical cohorts."""
+    cfg = SchedulerConfig(participation=0.25, sampling="weighted")
+    dev = Scheduler(cfg, N_CLIENTS, weights=jnp.asarray(data.sizes))
+    host = Scheduler(cfg, N_CLIENTS,
+                     weights=np.asarray(data.sizes, np.int64))
+    assert (np.asarray(dev.p) == np.asarray(host.p)).all()
+    for r in range(20):
+        key = jax.random.PRNGKey(100 + r)
+        assert (np.asarray(dev.sample(r, key).idx)
+                == np.asarray(host.sample(r, key).idx)).all()
+
+
+def test_streaming_population_requires_mmap_store(data):
+    """A streaming population has no resident tensors to fall back to —
+    the engine rejects ``client_store="resident"`` at construction
+    instead of failing deep in the first gather."""
+
+    class _FakeStream:
+        n_clients = 64
+        sizes = np.full(64, 10, np.int64)
+
+        def gather_clients(self, ids):            # pragma: no cover
+            raise AssertionError("not reached")
+
+    with pytest.raises(ValueError, match="mmap"):
+        Engine(TPFLStrategy(TM_CFG, local_epochs=1), _FakeStream(),
+               RuntimeConfig())

@@ -7,6 +7,7 @@ Everything here runs offline against a tmp ``--data-dir`` (the CI
 """
 import gzip
 import hashlib
+import pathlib
 
 import jax
 import jax.numpy as jnp
@@ -425,6 +426,137 @@ def test_golden_synthmnist_clientdata_digest(tmp_path):
     Dirichlet partition) *and* the in-memory fallback."""
     assert _golden(tmp_path) == GOLDEN_SYNTHMNIST_CLIENTDATA
     assert _golden(None) == GOLDEN_SYNTHMNIST_CLIENTDATA
+
+
+# ---------------------------------------------------------------------------
+# streaming ingestion: per-writer shards on demand, no pool
+# ---------------------------------------------------------------------------
+
+# sha256 over every gathered-ClientData leaf of the streaming chain
+# below (load_stream → StreamingClientData.gather_clients over the full
+# population) — the SAME digest the materialized chain (load →
+# partition_writers) produces, pinning that on-demand shard reads
+# reproduce the committed pool-backed partition bit for bit.
+# Regenerate (e.g. after a legitimate sampler change) with:
+#   PYTHONPATH=src python -c "from tests.test_ingest import \
+#     _golden_stream; print(_golden_stream())"
+GOLDEN_SYNTHFEMNIST_STREAM = (
+    "5e1e8fa7b1225f2fcdc90fa00ebe01aa35968fa7cfe2fbad9509e5c2c9ee8d73")
+
+_STREAM_KW = dict(side=8, n_samples=600, seed=6, n_writers=12)
+_BUDGET = dict(n_clients=5, n_train=24, n_test=8, n_conf=8)
+
+
+@pytest.fixture(scope="module")
+def femnist_stream(tmp_path_factory):
+    """Mirror root shared by the materialized pool (the reference) and
+    the streaming writer table over the same shard files."""
+    root = tmp_path_factory.mktemp("leafstream")
+    pool = registry.load("synthfemnist", root, **_STREAM_KW)
+    spool = registry.load_stream("synthfemnist", root, **_STREAM_KW)
+    return pool, spool
+
+
+def _golden_stream(root=None) -> str:
+    import tempfile
+
+    from repro.fl.store import StreamingClientData
+    root = root or tempfile.mkdtemp(prefix="leafstream_golden_")
+    spool = registry.load_stream("synthfemnist", root, **_STREAM_KW)
+    sdata = StreamingClientData(spool, key=jax.random.PRNGKey(0),
+                                **_BUDGET)
+    return _digest(sdata.gather_clients(np.arange(_BUDGET["n_clients"])))
+
+
+def test_streaming_gather_matches_materialized_partition(femnist_stream):
+    """``StreamingClientData.gather_clients`` == ``partition_writers``
+    field for field: the on-demand per-writer shard loads reproduce the
+    pool-backed natural partition bit for bit — full population, and
+    any subset equals the full gather sliced at its ids."""
+    from repro.fl.store import StreamingClientData
+    pool, spool = femnist_stream
+    cd = natural.partition_writers(pool, key=jax.random.PRNGKey(0),
+                                   **_BUDGET)
+    sdata = StreamingClientData(spool, key=jax.random.PRNGKey(0),
+                                **_BUDGET)
+    full = sdata.gather_clients(np.arange(5))
+    for la, lb in zip(jax.tree_util.tree_leaves(cd),
+                      jax.tree_util.tree_leaves(full)):
+        assert (np.asarray(la) == np.asarray(lb)).all()
+    assert _digest(full) == _digest(cd)
+    # the O(N) scheduler table is the partition's real size table
+    assert (np.asarray(sdata.sizes) == np.asarray(cd.sizes)).all()
+    sub = sdata.gather_clients(np.asarray([3, 1]))
+    for la, lb in zip(jax.tree_util.tree_leaves(sub),
+                      jax.tree_util.tree_leaves(full)):
+        assert (np.asarray(la) == np.asarray(lb)[[3, 1]]).all()
+
+
+def test_streaming_golden_digest(femnist_stream):
+    """The streaming chain is bit-identical to the committed digest —
+    mirror write → shard index → on-demand parse → encode → budgeted
+    split, pinned against drift exactly like the synthmnist golden."""
+    _, spool = femnist_stream
+    from repro.fl.store import StreamingClientData
+    sdata = StreamingClientData(spool, key=jax.random.PRNGKey(0),
+                                **_BUDGET)
+    got = _digest(sdata.gather_clients(np.arange(5)))
+    assert got == GOLDEN_SYNTHFEMNIST_STREAM
+
+
+def test_streaming_parses_only_needed_shards_and_never_the_pool(
+        femnist_stream, monkeypatch):
+    """The O(K) ingestion contract: gathering one client parses only
+    the shard(s) holding its writers (counting shim on the shard
+    parser), and full-pool materialization (``leaf.read_shards``) is
+    never triggered."""
+    from repro.fl.store import StreamingClientData
+    _, spool = femnist_stream
+    index = leaf.ensure_index(spool.root)      # index already built
+    assert len(index["shards"]) == 2           # 12 writers, 10 per shard
+
+    calls = []
+    real_parse = leaf._parse_shard
+    monkeypatch.setattr(
+        leaf, "_parse_shard",
+        lambda path, verify=True: (calls.append(pathlib.Path(path).name),
+                                   real_parse(path, verify))[1])
+    monkeypatch.setattr(
+        leaf, "read_shards",
+        lambda *a, **k: (_ for _ in ()).throw(AssertionError(
+            "streaming gather materialized the full pool")))
+
+    sdata = StreamingClientData(spool, key=jax.random.PRNGKey(0),
+                                **_BUDGET)
+    sdata.gather_clients(np.asarray([0]))      # writers 0-2: shard 0 only
+    assert calls == ["all_data_0.json"]
+
+    calls.clear()
+    sdata.gather_clients(np.asarray([4]))      # writers 10-11: shard 1
+    assert calls == ["all_data_1.json"]
+
+
+def test_streaming_index_staleness_is_loud_and_rebuildable(
+        femnist_stream, tmp_path):
+    """A shard set that drifted under an existing index fails loudly —
+    a stale index would silently mis-route writer ids to the wrong
+    shards — and deleting the index rebuilds it over the current
+    shard set."""
+    import shutil
+    _, spool = femnist_stream
+    root = tmp_path / "drift"
+    shutil.copytree(spool.root, root)
+    before = leaf.ensure_index(root)
+    src = root / "all_data_1.json"
+    dup = root / "all_data_2.json"
+    shutil.copy(src, dup)
+    shutil.copy(idx.checksum_path(src), idx.checksum_path(dup))
+    with pytest.raises(leaf.LeafFormatError, match="stale"):
+        leaf.read_index(root)
+    (root / leaf.INDEX_NAME).unlink()
+    idx.checksum_path(root / leaf.INDEX_NAME).unlink()
+    after = leaf.ensure_index(root)
+    assert len(after["shards"]) == len(before["shards"]) + 1
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,262 @@
+"""Property tests for the host-side client store
+(:mod:`repro.fl.store`) — the O(K) working set under the mmap engine.
+
+The store's contract mirrors the IDX ingest cache's verify-then-place
+discipline (``tests/test_ingest.py``): every spilled row carries a
+sha256 digest recorded with the bytes, every gather re-proves it, and a
+flipped byte anywhere — row payload or manifest — fails loudly instead
+of training on silently corrupt state.  On top sit the engine-facing
+properties: gather∘spill is the identity (including across reopen),
+never-sampled rows are untouched holes, concurrent readers agree, and
+the strategies' O(K) cohort-init hooks reproduce the full init exactly.
+"""
+import json
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tm
+from repro.data.ingest import idx
+from repro.fl.runtime import FedTMStrategy, TPFLStrategy
+from repro.fl.store import ClientStore
+from repro.fl.store.client_store import (_DIGEST_BYTES, MANIFEST_NAME,
+                                         WRITTEN_NAME)
+
+N = 32
+TEMPLATE = {"b": np.zeros((5,), np.float32),
+            "w": np.zeros((3, 4), np.int32)}
+
+
+def _init_fn(ids):
+    """Deterministic per-client rows — the fault-in contract."""
+    ids = np.asarray(ids, np.int64)
+    return {
+        "b": (ids[:, None] * 0.5 + np.arange(5)).astype(np.float32),
+        "w": (ids[:, None, None]
+              + np.arange(12).reshape(3, 4)).astype(np.int32),
+    }
+
+
+def _rand_rows(rng, k):
+    return {"b": rng.normal(size=(k, 5)).astype(np.float32),
+            "w": rng.integers(-9, 9, size=(k, 3, 4)).astype(np.int32)}
+
+
+def _assert_rows_equal(a, b):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        assert la.dtype == lb.dtype
+        assert (np.asarray(la) == np.asarray(lb)).all()
+
+
+def test_gather_spill_roundtrip_identity_across_reopen(tmp_path):
+    """spill → gather is the identity, and stays the identity through
+    flush + a fresh ClientStore over the same directory (durability)."""
+    rng = np.random.default_rng(0)
+    store = ClientStore(tmp_path, N, TEMPLATE, init_fn=_init_fn)
+    ids = np.asarray([3, 0, 17, 8])
+    rows = _rand_rows(rng, ids.size)
+    store.spill(ids, rows)
+    _assert_rows_equal(store.gather(ids), rows)
+    store.flush()
+
+    again = ClientStore(tmp_path, N, TEMPLATE, init_fn=_init_fn)
+    _assert_rows_equal(again.gather(ids), rows)
+    assert again.written_count() == ids.size
+    # overwrite one id: last spill wins, digest re-recorded
+    newer = _rand_rows(rng, 1)
+    again.spill(np.asarray([17]), newer)
+    _assert_rows_equal(
+        jax.tree_util.tree_map(lambda a: a[np.asarray(ids) == 17],
+                               again.gather(ids)), newer)
+
+
+def test_unwritten_rows_fault_in_from_init_fn(tmp_path):
+    """A gather mixing spilled and never-spilled ids overlays the store
+    rows on the deterministic init — fault-in never touches disk (rows
+    materialize only when the engine spills them back)."""
+    rng = np.random.default_rng(1)
+    store = ClientStore(tmp_path, N, TEMPLATE, init_fn=_init_fn)
+    store.spill(np.asarray([4]), _rand_rows(rng, 1))
+    out = store.gather(np.asarray([2, 4, 9]))
+    expect = _init_fn(np.asarray([2, 9]))
+    for leaf, want in (("b", expect["b"]), ("w", expect["w"])):
+        assert (np.asarray(out[leaf])[[0, 2]] == want).all()
+    assert store.written_count() == 1          # fault-in is read-only
+
+    bare = ClientStore(tmp_path, N, TEMPLATE)  # no init_fn
+    with pytest.raises(ValueError, match="never spilled"):
+        bare.gather(np.asarray([9]))
+
+
+def test_flipped_row_byte_is_rejected_loudly(tmp_path):
+    """The IDX-cache discipline on rows: one flipped byte in a spilled
+    row's file region makes the next gather of that client raise
+    ``ChecksumError`` — other clients stay readable."""
+    rng = np.random.default_rng(2)
+    store = ClientStore(tmp_path, N, TEMPLATE, init_fn=_init_fn)
+    ids = np.asarray([5, 11])
+    store.spill(ids, _rand_rows(rng, ids.size))
+    store.flush()
+
+    leaf0 = store.manifest["leaves"][0]        # "b": 20 bytes per row
+    row_nbytes = np.dtype(leaf0["dtype"]).itemsize * int(
+        np.prod(leaf0["shape"]))
+    path = tmp_path / (leaf0["slug"] + ".bin")
+    raw = bytearray(path.read_bytes())
+    raw[11 * row_nbytes] ^= 0xFF               # client 11's first byte
+    path.write_bytes(raw)
+
+    reopened = ClientStore(tmp_path, N, TEMPLATE, init_fn=_init_fn)
+    with pytest.raises(idx.ChecksumError, match="checksum mismatch"):
+        reopened.gather(np.asarray([11]))
+    reopened.gather(np.asarray([5]))           # neighbour unaffected
+    # verify=False is the explicit opt-out, mirroring the ingest cache
+    unchecked = ClientStore(tmp_path, N, TEMPLATE, init_fn=_init_fn,
+                            verify=False)
+    unchecked.gather(np.asarray([11]))
+
+
+def test_tampered_manifest_is_rejected_at_open(tmp_path):
+    """The manifest carries a sha256 sidecar: editing it in place fails
+    the open, and an honest manifest for a *different* template fails
+    the layout check."""
+    ClientStore(tmp_path, N, TEMPLATE, init_fn=_init_fn)
+    man_path = tmp_path / MANIFEST_NAME
+    man = json.loads(man_path.read_text())
+    man["n_clients"] = N + 1
+    man_path.write_text(json.dumps(man, indent=2, sort_keys=True))
+    with pytest.raises(idx.ChecksumError):
+        ClientStore(tmp_path, N, TEMPLATE)
+    # re-sign the tampered manifest: now the layout mismatch is loud
+    idx.write_checksum(man_path)
+    with pytest.raises(ValueError, match="different engine configuration"):
+        ClientStore(tmp_path, N, TEMPLATE)
+
+
+def test_concurrent_gathers_are_deterministic(tmp_path):
+    """Eight threads gathering overlapping id sets see identical bytes —
+    reads are lock-free over the mapped files, and the io counters
+    stay exact under the lock."""
+    rng = np.random.default_rng(3)
+    store = ClientStore(tmp_path, N, TEMPLATE, init_fn=_init_fn)
+    ids = np.arange(0, N, 2)
+    rows = _rand_rows(rng, ids.size)
+    store.spill(ids, rows)
+
+    def snap(_):
+        out = store.gather(ids)
+        return [np.asarray(a).copy()
+                for a in jax.tree_util.tree_leaves(out)]
+
+    with ThreadPoolExecutor(max_workers=8) as pool:
+        results = list(pool.map(snap, range(16)))
+    for got in results[1:]:
+        for la, lb in zip(results[0], got):
+            assert (la == lb).all()
+    assert store.io_read_bytes == 16 * ids.size * store.row_nbytes
+
+
+def test_never_sampled_rows_stay_byte_identical(tmp_path):
+    """Spilling one cohort leaves every other client's file region
+    bit-for-bit untouched (still sparse holes) and unwritten in the
+    bitmap — the eviction contract: dropping a never-sampled client
+    costs nothing because it never materialized."""
+    rng = np.random.default_rng(4)
+    store = ClientStore(tmp_path, N, TEMPLATE, init_fn=_init_fn)
+    cohort = np.asarray([1, 7, 30])
+    untouched = np.setdiff1d(np.arange(N), cohort)
+
+    def region_bytes():
+        out = []
+        for spec in store.manifest["leaves"]:
+            nb = np.dtype(spec["dtype"]).itemsize * int(
+                np.prod(spec["shape"]))
+            raw = (tmp_path / (spec["slug"] + ".bin")).read_bytes()
+            out.append([raw[i * nb:(i + 1) * nb] for i in untouched])
+        return out
+
+    store.spill(cohort, _rand_rows(rng, cohort.size))
+    store.flush()
+    before = region_bytes()
+    assert all(not any(r) for per_leaf in before for r in per_leaf)
+
+    # more rounds of gather/spill over the same cohort
+    for _ in range(3):
+        bundle = store.gather(cohort)
+        bundle = jax.tree_util.tree_map(
+            lambda a: (a + 1).astype(a.dtype), bundle)
+        store.spill(cohort, bundle)
+    store.flush()
+    assert region_bytes() == before
+    written = np.frombuffer((tmp_path / WRITTEN_NAME).read_bytes(),
+                            np.uint8)
+    assert (written[untouched] == 0).all()
+    assert store.written_count() == cohort.size
+
+
+def test_io_counters_meter_exact_bytes(tmp_path):
+    """``io_read_bytes`` counts only rows read back from disk (fault-in
+    is free), ``io_written_bytes`` counts payload + digest + bitmap per
+    spilled row — the gauges the round reports and ``BENCH_client_scale``
+    publish."""
+    rng = np.random.default_rng(5)
+    store = ClientStore(tmp_path, N, TEMPLATE, init_fn=_init_fn)
+    assert store.io_read_bytes == store.io_written_bytes == 0
+
+    store.gather(np.arange(6))                 # all fault-in: no I/O
+    assert store.io_read_bytes == 0 and store.io_written_bytes == 0
+
+    store.spill(np.arange(6), _rand_rows(rng, 6))
+    assert store.io_written_bytes == 6 * (store.row_nbytes
+                                          + _DIGEST_BYTES + 1)
+    store.gather(np.arange(8))                 # 6 from disk, 2 fault-in
+    assert store.io_read_bytes == 6 * store.row_nbytes
+
+
+def test_out_of_range_ids_and_template_drift_fail_loudly(tmp_path):
+    rng = np.random.default_rng(6)
+    store = ClientStore(tmp_path, N, TEMPLATE, init_fn=_init_fn)
+    with pytest.raises(ValueError, match="out of range"):
+        store.gather(np.asarray([N]))
+    with pytest.raises(ValueError, match="does not match"):
+        store.spill(np.asarray([0]),
+                    {"b": np.zeros((1, 5), np.float64),   # wrong dtype
+                     "w": np.zeros((1, 3, 4), np.int32)})
+    store.spill(np.asarray([0]), _rand_rows(rng, 1))
+    store.flush()
+    with pytest.raises(ValueError, match="different"):
+        ClientStore(tmp_path, N + 1, TEMPLATE)  # drifted client count
+
+
+@pytest.mark.parametrize("make", [
+    lambda: TPFLStrategy(tm.TMConfig(n_classes=4, n_clauses=6,
+                                     n_features=20, n_states=63,
+                                     s=5.0, T=10), local_epochs=1),
+    lambda: FedTMStrategy(tm.TMConfig(n_classes=4, n_clauses=6,
+                                      n_features=20, n_states=63,
+                                      s=5.0, T=10), local_epochs=1),
+])
+def test_cohort_init_hooks_match_full_init(make):
+    """The O(K) contract behind the mmap engine's fault-in:
+    ``init_cohort(key, ids, n)`` == ``init(key, n)[0][ids]`` bit for
+    bit for any id subset, and ``init_server`` reproduces the full
+    init's server part — so a store row regenerated on demand equals
+    the row a resident engine would hold."""
+    strat = make()
+    key, n = jax.random.PRNGKey(42), 12
+    full_cs, full_server = strat.init(key, n)
+    ids = np.asarray([0, 5, 11, 5])            # repeats allowed
+    cohort = strat.init_cohort(key, jnp.asarray(ids), n)
+    for la, lb in zip(jax.tree_util.tree_leaves(cohort),
+                      jax.tree_util.tree_leaves(
+                          jax.tree_util.tree_map(lambda a: a[ids],
+                                                 full_cs))):
+        assert (np.asarray(la) == np.asarray(lb)).all()
+    server = strat.init_server(key, n)
+    for la, lb in zip(jax.tree_util.tree_leaves(server),
+                      jax.tree_util.tree_leaves(full_server)):
+        assert (np.asarray(la) == np.asarray(lb)).all()
