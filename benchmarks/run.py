@@ -207,6 +207,96 @@ def emit_client_scale(ns=(1_000, 100_000, 1_000_000), k_active: int = 64,
     return out
 
 
+def emit_serve_bench(dataset: str, scale, data_dir: str | None = None,
+                     encoding: str = "bool",
+                     batch_sizes=(1, 8, 32), requests_timed: int = 10,
+                     warmup_requests: int = 3,
+                     train_rounds: int = 2) -> dict:
+    """Serving-plane latency → BENCH_serve_latency.json — the repo's
+    second perf trajectory file.
+
+    Trains a small TPFL population for ``train_rounds`` rounds,
+    publishes the checkpoint into a fresh
+    :class:`~repro.fl.serve.ModelRegistry`, then serves mixed-cluster
+    batches through a :class:`~repro.fl.serve.ServingPlane` per TM
+    backend (``ref`` and ``pallas`` — bit-identical predictions,
+    conformance-pinned) across a batch-size sweep.  Per (backend,
+    batch) cell: ``warmup_requests`` warm-up batches (compile) then
+    ``requests_timed`` batches bracketed by ``perf_counter`` — the
+    plane's prediction is materialized to host, so a timing covers the
+    device work — reported as p50/p99 batch latency and sustained
+    requests/sec.
+
+    Artifact schema: ``batch_sizes`` (list), ``latency_s``
+    ({backend: {batch: {p50, p99}}}), ``requests_per_s``
+    ({backend: {batch: float}})."""
+    import statistics
+    import tempfile
+    import time as _time
+
+    import jax
+    import numpy as np
+
+    from repro.core import federation
+    from repro.fl.runtime import Engine, RuntimeConfig, checkpointing
+    from repro.fl.serve import ModelRegistry, ServingPlane
+    from repro.launch import fed_train
+
+    data, pool = common.make_fed_dataset(dataset, 5, scale, 0,
+                                         data_dir=data_dir,
+                                         encoding=encoding)
+    tm_cfg = common.bench_tm_config(dataset, pool, scale)
+    fed_cfg = federation.FedConfig(n_clients=scale.n_clients,
+                                   rounds=train_rounds,
+                                   local_epochs=scale.local_epochs)
+    strat = fed_train._build_strategy("tpfl", tm_cfg, fed_cfg, pool)
+    root = Path(tempfile.mkdtemp(prefix="serve_bench_"))
+    engine = Engine(strat, data,
+                    RuntimeConfig(rounds=train_rounds,
+                                  checkpoint_dir=str(root / "ckpt"),
+                                  checkpoint_every=train_rounds))
+    engine.run(jax.random.PRNGKey(0))
+    registry = ModelRegistry(root / "registry")
+    registry.publish(checkpointing.latest(root / "ckpt"))
+
+    n, n_test = scale.n_clients, scale.n_test
+    x_test = np.asarray(data.x_test)
+    out = {"dataset": dataset, "n_clients": n,
+           "requests_timed": requests_timed,
+           "warmup_requests": warmup_requests,
+           "batch_sizes": list(batch_sizes),
+           "latency_s": {}, "requests_per_s": {}}
+    for tb in ("ref", "pallas"):
+        serve_engine = Engine(strat, data, RuntimeConfig(tm_backend=tb))
+        like = serve_engine.init(
+            jax.random.split(jax.random.PRNGKey(0))[0])
+        plane = ServingPlane(serve_engine.strategy, registry, like)
+        plane.refresh()
+        out["latency_s"][tb] = {}
+        out["requests_per_s"][tb] = {}
+        for bs in batch_sizes:
+            lat = []
+            for r in range(warmup_requests + requests_timed):
+                ids = (np.arange(bs) * 7 + r) % n
+                x = x_test[ids, (r + np.arange(bs)) % n_test]
+                t0 = _time.perf_counter()
+                plane.predict(ids, x)   # materializes to host (fenced)
+                if r >= warmup_requests:
+                    lat.append(_time.perf_counter() - t0)
+            lat.sort()
+            p50 = statistics.median(lat)
+            p99 = lat[min(len(lat) - 1, round(0.99 * (len(lat) - 1)))]
+            rps = bs * len(lat) / sum(lat)
+            out["latency_s"][tb][str(bs)] = {"p50": round(p50, 6),
+                                             "p99": round(p99, 6)}
+            out["requests_per_s"][tb][str(bs)] = round(rps, 1)
+            print(f"bench_serve_latency,{p50*1e6:.0f},"
+                  f"backend={tb}/batch={bs}/rps={rps:.0f}", flush=True)
+    ART.mkdir(exist_ok=True)
+    (ART / "BENCH_serve_latency.json").write_text(json.dumps(out, indent=2))
+    return out
+
+
 def main() -> None:
     from repro.data.ingest import registry as datasets
 
@@ -248,6 +338,15 @@ def main() -> None:
                          "host-I/O byte gauges — written to artifacts/"
                          "BENCH_client_scale.json (the client-scale "
                          "CI artifact)")
+    ap.add_argument("--emit-serve-bench", action="store_true",
+                    help="only run the serving-plane bench: train a "
+                         "small TPFL population, publish its checkpoint "
+                         "into a registry, then serve mixed-cluster "
+                         "batches per TM backend (ref, pallas) across a "
+                         "batch-size sweep — p50/p99 batch latency and "
+                         "sustained requests/sec — written to artifacts/"
+                         "BENCH_serve_latency.json (the serve CI "
+                         "artifact)")
     ap.add_argument("--client-scale-ns", default=None,
                     help="comma-separated population sizes for the "
                          "client-scale bench (default "
@@ -282,6 +381,13 @@ def main() -> None:
     if args.emit_client_scale:
         print("name,us_per_call,derived")
         emit_client_scale(ns=scale_ns)
+        return
+
+    if args.emit_serve_bench:
+        print("name,us_per_call,derived")
+        emit_serve_bench(table_datasets[0], scale,
+                         data_dir=args.data_dir, encoding=args.encoding,
+                         requests_timed=5 if args.quick else 10)
         return
 
     if args.emit_bench:

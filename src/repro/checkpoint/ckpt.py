@@ -60,13 +60,16 @@ def restore(path: str | pathlib.Path, like: Any,
                 f"checkpoint {path} lacks leaf {key!r} — it was saved "
                 f"by an older state layout; restart without --resume "
                 f"(or delete the stale checkpoint directory)")
-        if tuple(arr.shape) != tuple(leaf.shape):
+        if (tuple(arr.shape) != tuple(leaf.shape)
+                or np.dtype(arr.dtype) != np.dtype(leaf.dtype)):
             # explicit raise, not assert: layout-drift detection (e.g. a
             # server state saved under a different slot count) must
-            # survive `python -O`
+            # survive `python -O`.  Name the leaf and both sides so the
+            # error is actionable, not just loud.
             raise ValueError(
-                f"checkpoint {path}: shape mismatch for {key!r} — saved "
-                f"{tuple(arr.shape)}, expected {tuple(leaf.shape)}")
+                f"checkpoint {path}: layout mismatch for leaf {key!r} — "
+                f"saved {np.dtype(arr.dtype).name}{tuple(arr.shape)}, "
+                f"expected {np.dtype(leaf.dtype).name}{tuple(leaf.shape)}")
         out.append(jnp.asarray(arr, dtype=leaf.dtype))
     tree = jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(like), out)

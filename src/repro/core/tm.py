@@ -375,12 +375,19 @@ def confidence_scores_batched(params: TMParams, x_conf: jnp.ndarray,
 
 
 @partial(jax.jit, static_argnames=("cfg",))
-def accuracy_batched(params: TMParams, x: jnp.ndarray, y: jnp.ndarray,
-                     cfg: TMConfig) -> jnp.ndarray:
-    """Stacked accuracy: params (N, ...), x (N,B,o), y (N,B) → (N,)."""
+def predict_batched(params: TMParams, x: jnp.ndarray,
+                    cfg: TMConfig) -> jnp.ndarray:
+    """Stacked predictions: params (N, ...), x (N,B,o) → (N,B) int32.
+
+    The client-batched inference primitive: on the kernel path the
+    whole heterogeneous batch — N distinct models, e.g. one per client
+    of a mixed-cluster serving request — is a single
+    ``fused_votes_batched`` launch, clipped to ±T before the argmax
+    exactly like :func:`predict`.  The reference path is a plain vmap
+    of :func:`predict`; outputs are bit-identical either way (the
+    serving conformance tests pin it)."""
     if not cfg.use_kernel:
-        return jax.vmap(
-            lambda p, xx, yy: accuracy(p, xx, yy, cfg))(params, x, y)
+        return jax.vmap(lambda p, xx: predict(p, xx, cfg))(params, x)
 
     from repro.kernels import ops as kops
     include = (params.ta_state > cfg.n_states).astype(jnp.int32)
@@ -388,5 +395,16 @@ def accuracy_batched(params: TMParams, x: jnp.ndarray, y: jnp.ndarray,
     w = params.weights if cfg.weighted else jnp.ones_like(params.weights)
     votes = kops.fused_votes_batched(include, literals(x),
                                      pol[None, None, :] * w, predict=True)
-    pred = jnp.argmax(jnp.clip(votes, -cfg.T, cfg.T), axis=-1)
-    return (pred == y).mean(axis=-1)
+    return jnp.argmax(jnp.clip(votes, -cfg.T, cfg.T), axis=-1)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def accuracy_batched(params: TMParams, x: jnp.ndarray, y: jnp.ndarray,
+                     cfg: TMConfig) -> jnp.ndarray:
+    """Stacked accuracy: params (N, ...), x (N,B,o), y (N,B) → (N,)."""
+    if not cfg.use_kernel:
+        return jax.vmap(
+            lambda p, xx, yy: accuracy(p, xx, yy, cfg))(params, x, y)
+    # same math as the vmapped path, via the one batched-votes kernel —
+    # serving parity is by construction: eval and serve share this
+    return (predict_batched(params, x, cfg) == y).mean(axis=-1)

@@ -252,6 +252,14 @@ class TPFLStrategy:
                  y: jnp.ndarray) -> jnp.ndarray:
         return tm.accuracy(cs, x, y, self.tm_cfg)
 
+    def predict_batched(self, cs: tm.TMParams,
+                        x: jnp.ndarray) -> jnp.ndarray:
+        """Stacked per-client predictions (N, B, o) → (N, B) — the
+        serving plane's batched-inference hook.  Honours
+        ``tm_cfg.use_kernel``: one fused-votes launch for the whole
+        mixed-cluster batch on the pallas path."""
+        return tm.predict_batched(cs, x, self.tm_cfg)
+
     # --- fused client-batched path (tm_backend="pallas") ------------------
     # One kernel launch for the whole sampled cohort instead of a vmap of
     # per-client steps (vmap of a pallas_call serializes clients).  The
@@ -358,6 +366,13 @@ class MLPStrategyBase:
     def evaluate(self, cs: mlp.Params, x: jnp.ndarray,
                  y: jnp.ndarray) -> jnp.ndarray:
         return mlp.accuracy(cs, x, y)
+
+    def predict_batched(self, cs: mlp.Params,
+                        x: jnp.ndarray) -> jnp.ndarray:
+        """Stacked per-client predictions (N, B, o) → (N, B) int32."""
+        return jax.vmap(
+            lambda p, xx: jnp.argmax(mlp.apply(p, xx), axis=-1)
+        )(cs, x).astype(jnp.int32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -547,22 +562,34 @@ class FLISAux(NamedTuple):
     members: jnp.ndarray   # (n_slots,) float32 — last round's counts
 
 
+class FLISClientState(NamedTuple):
+    """FLIS per-client state: the MLP plus the cluster row the client
+    last *applied* — the ride-along that lets sparse-delta uplinks
+    encode against the row the client actually holds instead of the
+    conservative zero reference."""
+
+    params: mlp.Params
+    prev_slot: jnp.ndarray   # () int32 — last applied cluster id, 0 at init
+
+
 @dataclasses.dataclass(frozen=True)
 class FLISStrategy(MLPStrategyBase):
     """FLIS (Morafah et al. 2023 flavour): cluster membership derived
     *server-side each round* from inference similarity on a probe set.
 
     Clients train from their own state (which holds last round's
-    cluster model) and upload the flattened MLP with a placeholder slot
-    tag — they do not know their cluster; the :meth:`assign` hook
-    recomputes membership from the decoded uploads (DC = thresholded
-    connected components, HC = average-linkage agglomerative), capped
-    at ``max_slots`` server rows.  :meth:`server_update` applies the
-    Alg. 2 retention and records the round's membership table in
-    ``aux.members``.  Sparse-delta uplinks encode against the zero
-    reference of the placeholder slot — conservative (never meters too
-    few bytes), since a FLIS client cannot know which row it will be
-    assigned to.
+    cluster model) and upload the flattened MLP tagged with the cluster
+    row they last *applied* (``prev_slot``, 0 before the first
+    broadcast) — they still do not know this round's cluster; the
+    :meth:`assign` hook discards the tag and recomputes membership from
+    the decoded uploads (DC = thresholded connected components, HC =
+    average-linkage agglomerative), capped at ``max_slots`` server
+    rows.  :meth:`server_update` applies the Alg. 2 retention and
+    records the round's membership table in ``aux.members``.  The tag's
+    one job is the wire codec: sparse-delta uplinks encode against the
+    tracked reference of the row the client actually holds, which is a
+    far nearer reference than the zero row the old placeholder tag
+    forced, so deltas stay small whenever membership is sticky.
 
     Requires ``aggregation="sync"``: dynamic assignment is a round-
     synchronous server decision (the engine rejects async at init)."""
@@ -607,16 +634,36 @@ class FLISStrategy(MLPStrategyBase):
         server = jnp.zeros((self.n_slots, self.vec_dim), jnp.float32)
         aux = FLISAux(probe=pool[idx],
                       members=jnp.zeros((self.n_slots,), jnp.float32))
-        return stacked, ServerState(server, aux)
+        cs = FLISClientState(
+            stacked, jnp.zeros((n_clients,), jnp.int32))
+        return cs, ServerState(server, aux)
 
-    def client_step(self, cs: mlp.Params, slots: jnp.ndarray,
+    def client_step(self, cs: FLISClientState, slots: jnp.ndarray,
                     d: ClientData, key: jax.Array):
         del slots  # clients train from their own (cluster-model) state
-        p = mlp.local_train(cs, d.x_train, d.y_train, key,
+        p = mlp.local_train(cs.params, d.x_train, d.y_train, key,
                             epochs=self.local_epochs, batch=self.batch,
                             lr=self.lr)
-        return p, Upload(_flatten_mlp(p, self._layout)[None, :],
-                         jnp.zeros((1,), jnp.int32))   # placeholder tag
+        return (FLISClientState(p, cs.prev_slot),
+                Upload(_flatten_mlp(p, self._layout)[None, :],
+                       cs.prev_slot[None]))   # tag = last applied row
+
+    def apply_broadcast(self, cs: FLISClientState, slots: jnp.ndarray,
+                        slot_matrix: jnp.ndarray) -> FLISClientState:
+        """Apply the routed row and remember it: ``prev_slot`` advances
+        only when a row was actually applied (slot −1 keeps both the
+        local model and the old tag)."""
+        return FLISClientState(
+            self._apply_slot_row(cs.params, slots[0], slot_matrix),
+            jnp.where(slots[0] >= 0, slots[0], cs.prev_slot))
+
+    def evaluate(self, cs: FLISClientState, x: jnp.ndarray,
+                 y: jnp.ndarray) -> jnp.ndarray:
+        return mlp.accuracy(cs.params, x, y)
+
+    def predict_batched(self, cs: FLISClientState,
+                        x: jnp.ndarray) -> jnp.ndarray:
+        return super().predict_batched(cs.params, x)
 
     def assign(self, server: ServerState, vecs: jnp.ndarray,
                slots: jnp.ndarray, arrive: jnp.ndarray) -> jnp.ndarray:
@@ -700,6 +747,12 @@ class FedTMStrategy:
     def evaluate(self, cs: tm.TMParams, x: jnp.ndarray,
                  y: jnp.ndarray) -> jnp.ndarray:
         return tm.accuracy(cs, x, y, self.tm_cfg)
+
+    def predict_batched(self, cs: tm.TMParams,
+                        x: jnp.ndarray) -> jnp.ndarray:
+        """Stacked per-client predictions (serving hook; honours
+        ``tm_cfg.use_kernel``)."""
+        return tm.predict_batched(cs, x, self.tm_cfg)
 
     # --- fused client-batched path (tm_backend="pallas") ------------------
 

@@ -1,0 +1,22 @@
+"""Federated serving plane: personalized inference as a service.
+
+Training ends with a *population* of personalized models — TPFL's whole
+point is that each client leaves with cluster-specific TM weights — and
+this package is the subsystem that serves them: a versioned
+:class:`~repro.fl.serve.registry.ModelRegistry` of checkpoint artifacts
+(sha256 verify-then-place, atomic publish, loud rejection of corrupted
+or layout-drifted files) under a
+:class:`~repro.fl.serve.plane.ServingPlane` that resolves client id →
+personalized row (mmap :class:`~repro.fl.store.client_store.ClientStore`
+when present, cluster-slot checkpoint rows otherwise) and answers
+batched inference requests over heterogeneous clients — one compiled
+batched-votes launch per mixed-cluster batch on the
+``tm_backend="pallas"`` path.  ``repro.launch.fed_serve`` is the
+runnable driver; ``docs/serving.md`` documents the protocol.
+"""
+from repro.fl.serve.registry import ModelRegistry, RegistryError
+from repro.fl.serve.plane import ActiveModel, ServingPlane
+from repro.fl.serve.telemetry import NULL_SERVE, ServeTelemetry
+
+__all__ = ["ActiveModel", "ModelRegistry", "NULL_SERVE", "RegistryError",
+           "ServeTelemetry", "ServingPlane"]

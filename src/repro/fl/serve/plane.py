@@ -1,0 +1,161 @@
+"""The serving plane: client id → personalized model → prediction, in
+mixed-cluster batches.
+
+A :class:`ServingPlane` holds exactly one *active* model version — an
+immutable :class:`ActiveModel` snapshot of (version, engine state)
+pulled from the :class:`~repro.fl.serve.registry.ModelRegistry` — and
+answers batched requests over heterogeneous clients:
+
+**Resolution.**  Each requested client id resolves to the row that
+client would be evaluated with offline (the serving-parity pin):
+
+* resident checkpoints carry the full population in
+  ``state.client_state`` — each row already *is* the cluster-resolved
+  personalized model, because training folded the assigned slot row in
+  at every ``apply_broadcast``;
+* with an mmap :class:`~repro.fl.store.client_store.ClientStore`
+  attached, spilled rows are gathered (digest-verified) as the
+  personalized model, and never-sampled clients fall back to the
+  store's deterministic per-client init — byte-for-byte what the
+  engine's own population eval resolves for them.  The per-batch
+  personalized/fallback split is reported through telemetry.
+
+**Inference.**  The whole batch — R requests against up to R distinct
+models — runs as ONE call into ``strategy.predict_batched`` (each
+request its own lane), which on the ``tm_backend="pallas"`` path is a
+single ``fused_votes_batched`` kernel launch for the entire
+mixed-cluster batch.  Duplicate client ids share one resolved row.
+
+**Warm swap.**  ``refresh()`` pulls a newer registry version (fully
+verifying it) and then swaps the active snapshot with one reference
+assignment.  ``predict`` reads that snapshot exactly once, at entry —
+a version landing mid-request cannot mix into it: the in-flight batch
+is served entirely by the old version, the next batch entirely by the
+new (the serve tests race this on purpose via ``resolve_hook``).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import numpy as np
+
+from repro.fl.serve.registry import ModelRegistry, RegistryError
+from repro.fl.serve.telemetry import NULL_SERVE
+
+
+class ActiveModel(NamedTuple):
+    """One immutable serving snapshot: a version and its verified state."""
+
+    version: int
+    state: Any          # EngineState pulled from the registry
+
+
+class ServingPlane:
+    """Personalized inference over one trained population.
+
+    ``like`` is a fresh ``engine.init(key)`` state — the structure
+    template every registry pull decodes into (layout drift between a
+    published checkpoint and the serving configuration is refused, not
+    coerced).  ``store`` attaches the training run's mmap
+    ``ClientStore`` (keyed the same ``k_init``); without it the active
+    checkpoint must carry a resident population.  ``resolve_hook``, if
+    given, runs inside ``predict`` right after the active snapshot is
+    taken — a test seam for racing warm swaps against in-flight
+    requests."""
+
+    def __init__(self, strategy, registry: ModelRegistry, like, *,
+                 store=None, telemetry=None,
+                 resolve_hook: Callable[["ServingPlane"], None] | None
+                 = None):
+        self.strategy = strategy
+        self.registry = registry
+        self.store = store
+        self.obs = telemetry if telemetry is not None else NULL_SERVE
+        self._like = like
+        self._resolve_hook = resolve_hook
+        self._active: ActiveModel | None = None
+        self.last_served_version: int | None = None
+
+    # -- versions --------------------------------------------------------
+
+    @property
+    def active_version(self) -> int | None:
+        a = self._active
+        return a.version if a is not None else None
+
+    def refresh(self) -> bool:
+        """Activate the newest registry version if it supersedes the
+        active one.  Pull-verify first, swap last (one reference
+        assignment), so a request observing the plane mid-refresh sees
+        either the old snapshot or the new one, never a blend.  Returns
+        True iff a swap happened."""
+        newest = self.registry.latest()
+        cur = self._active
+        if newest is None or (cur is not None and newest <= cur.version):
+            return False
+        state = self.registry.pull(newest, self._like)
+        self._active = ActiveModel(newest, state)
+        self.obs.swap_event(cur.version if cur is not None else None,
+                            newest)
+        return True
+
+    # -- inference -------------------------------------------------------
+
+    def _resolve_rows(self, state, uniq: np.ndarray):
+        """Stacked per-client rows for the unique requested ids, plus
+        the personalized mask (False = deterministic-init fallback)."""
+        if self.store is not None:
+            rows = self.store.gather(uniq)["cs"]
+            return rows, self.store.written_mask(uniq)
+        cs = state.client_state
+        n = jax.tree_util.tree_leaves(cs)[0].shape[0]
+        if n == 0:
+            raise RegistryError(
+                "the active checkpoint carries no resident population "
+                "(it was written by the mmap engine) — attach the "
+                "training run's ClientStore to serve personalized rows")
+        if uniq.size and int(uniq.max()) >= n:
+            raise RegistryError(
+                f"client id {int(uniq.max())} is outside the trained "
+                f"population [0, {n})")
+        idx = np.asarray(uniq)
+        rows = jax.tree_util.tree_map(lambda a: a[idx], cs)
+        return rows, np.ones((uniq.size,), bool)
+
+    def predict(self, client_ids, x) -> np.ndarray:
+        """Predictions for ``x[i]`` under ``client_ids[i]``'s model.
+
+        ``client_ids`` is (R,) int, ``x`` is (R, n_features); returns
+        (R,) int32.  The active snapshot is read once, at entry — the
+        whole batch is served by that version no matter what lands in
+        the registry meanwhile."""
+        active = self._active
+        if active is None:
+            raise RegistryError(
+                "the serving plane has no active model — publish a "
+                "checkpoint and call refresh() first")
+        if self._resolve_hook is not None:
+            self._resolve_hook(self)
+        ids = np.asarray(client_ids, np.int64).reshape(-1)
+        x = np.asarray(x)
+        if x.shape[0] != ids.size:
+            raise ValueError(
+                f"batch mismatch: {ids.size} client ids, {x.shape[0]} "
+                f"feature rows")
+        with self.obs.span("serve/resolve"):
+            uniq, inv = np.unique(ids, return_inverse=True)
+            rows_u, written = self._resolve_rows(active.state, uniq)
+            # lane per request: duplicates share the resolved row
+            rows = jax.tree_util.tree_map(lambda a: a[inv], rows_u)
+        with self.obs.span("serve/predict"):
+            preds = self.strategy.predict_batched(rows, x[:, None, :])
+            self.obs.fence(preds)
+        preds = np.asarray(preds)[:, 0].astype(np.int32)
+        personalized = int(np.asarray(written)[inv].sum())
+        self.last_served_version = active.version
+        self.obs.batch_event(version=active.version, batch=int(ids.size),
+                             unique_clients=int(uniq.size),
+                             personalized=personalized,
+                             fallback=int(ids.size) - personalized)
+        return preds

@@ -169,6 +169,14 @@ class ClientStore:
     def written_count(self) -> int:
         return int(np.asarray(self._written, dtype=np.int64).sum())
 
+    def written_mask(self, ids) -> np.ndarray:
+        """Bool mask over ``ids``: True where a row was ever spilled
+        (i.e. ``gather`` returns *personalized* state, not an
+        ``init_fn`` regeneration).  The serving plane uses this to
+        report personalized-vs-fallback counts per batch."""
+        ids = self._check_ids(ids)
+        return np.asarray(self._written[ids]).astype(bool)
+
     # -- the two verbs ---------------------------------------------------
 
     def gather(self, ids) -> Any:

@@ -233,10 +233,45 @@ def _build_strategy(name: str, tm_cfg: tm.TMConfig,
         probe_size=probe_size)
 
 
+def build_scenario(*, dataset: str, data_dir: str | None = None,
+                   encoding: str = "bool", clients: int = 20,
+                   clauses: int = 48, seed: int = 0, experiment: int = 5,
+                   writers: int | None = None, rounds: int = 5,
+                   local_epochs: int = 2, strategy: str = "tpfl",
+                   max_slots: int = 8, probe_size: int = 64):
+    """One materialized federation scenario: (pool, partitioned client
+    data, TM config, fed config, strategy).
+
+    Shared by the train and serve drivers so a serving process
+    reconstructs exactly the training run's setup from the same knobs —
+    same dataset/seed → the same partition and the same per-client init
+    chain, same strategy template → the same engine-state structure a
+    published checkpoint must decode into."""
+    from repro.data.ingest import natural, registry as datasets
+
+    pool = datasets.load(dataset, data_dir=data_dir, encoding=encoding,
+                         n_samples=6000, side=12, seed=seed,
+                         n_writers=writers or max(25, clients))
+    # writer-tagged pools take the natural writer-identity split
+    # (the real per-writer ``sizes`` drive --sampling weighted),
+    # the rest the paper's Dirichlet split
+    data = natural.partition_pool(
+        pool, n_clients=clients, n_train=80, n_test=40, n_conf=40,
+        key=jax.random.PRNGKey(seed + 1), experiment=experiment)
+    tm_cfg = tm.TMConfig(n_classes=pool.n_classes, n_clauses=clauses,
+                         n_features=pool.n_features, n_states=63,
+                         s=5.0, T=40)
+    fed_cfg = federation.FedConfig(n_clients=clients, rounds=rounds,
+                                   local_epochs=local_epochs)
+    strat = _build_strategy(strategy, tm_cfg, fed_cfg, pool,
+                            max_slots=max_slots, probe_size=probe_size)
+    return pool, data, tm_cfg, fed_cfg, strat
+
+
 def main(argv: list[str] | None = None) -> dict:
     import argparse
 
-    from repro.data.ingest import natural, registry as datasets
+    from repro.data.ingest import registry as datasets
     from repro.fl.runtime import (CodecConfig, Engine, RuntimeConfig,
                                   SchedulerConfig, checkpointing)
 
@@ -388,19 +423,24 @@ def main(argv: list[str] | None = None) -> dict:
             pool, n_clients=args.n_clients, n_train=80, n_test=40,
             n_conf=40, key=jax.random.PRNGKey(args.seed + 1))
         n_clients = args.n_clients
+        tm_cfg = tm.TMConfig(
+            n_classes=pool.n_classes, n_clauses=args.clauses,
+            n_features=pool.n_features, n_states=63, s=5.0, T=40)
+        fed_cfg = federation.FedConfig(n_clients=n_clients,
+                                       rounds=args.rounds,
+                                       local_epochs=args.local_epochs)
+        strategy = _build_strategy(args.strategy, tm_cfg, fed_cfg, pool,
+                                   max_slots=args.max_slots,
+                                   probe_size=args.probe_size)
     else:
-        pool = datasets.load(
-            args.dataset, data_dir=args.data_dir,
-            encoding=args.encoding, n_samples=6000, side=12,
-            seed=args.seed,
-            n_writers=args.writers or max(25, args.clients))
-        # writer-tagged pools take the natural writer-identity split
-        # (the real per-writer ``sizes`` drive --sampling weighted),
-        # the rest the paper's Dirichlet split
-        data = natural.partition_pool(
-            pool, n_clients=args.clients, n_train=80, n_test=40,
-            n_conf=40, key=jax.random.PRNGKey(args.seed + 1),
-            experiment=args.experiment)
+        pool, data, tm_cfg, fed_cfg, strategy = build_scenario(
+            dataset=args.dataset, data_dir=args.data_dir,
+            encoding=args.encoding, clients=args.clients,
+            clauses=args.clauses, seed=args.seed,
+            experiment=args.experiment, writers=args.writers,
+            rounds=args.rounds, local_epochs=args.local_epochs,
+            strategy=args.strategy, max_slots=args.max_slots,
+            probe_size=args.probe_size)
         n_clients = args.clients
 
     participation = args.participation
@@ -409,12 +449,6 @@ def main(argv: list[str] | None = None) -> dict:
             raise SystemExit(f"--active must be in [1, {n_clients}]")
         participation = args.active / n_clients
 
-    tm_cfg = tm.TMConfig(n_classes=pool.n_classes, n_clauses=args.clauses,
-                         n_features=pool.n_features, n_states=63,
-                         s=5.0, T=40)
-    fed_cfg = federation.FedConfig(n_clients=n_clients,
-                                   rounds=args.rounds,
-                                   local_epochs=args.local_epochs)
     mesh = None
     if args.mesh is None and args.backend == "shardmap":
         args.mesh = "clients"            # all visible devices
@@ -445,10 +479,6 @@ def main(argv: list[str] | None = None) -> dict:
         checkpoint_dir=args.ckpt_dir, checkpoint_every=args.ckpt_every,
         client_store=args.client_store, store_dir=args.store_dir,
         store_eval=args.store_eval)
-
-    strategy = _build_strategy(args.strategy, tm_cfg, fed_cfg, pool,
-                               max_slots=args.max_slots,
-                               probe_size=args.probe_size)
 
     telemetry = None
     if args.telemetry_dir or args.profile_dir:

@@ -1,5 +1,10 @@
-"""Runnable serving driver: prefill a batch of prompts, then decode with
-the unified cache protocol (CPU-scale by default).
+"""Transformer decode demo: prefill a batch of prompts, then decode with
+the unified KV-cache protocol (CPU-scale by default).
+
+This drives the *transformer* stack's cache protocol — it is not the
+federated serving plane.  Personalized federated inference (client id →
+cluster model, versioned registry, warm swap) lives in
+``repro.launch.fed_serve`` / ``repro.fl.serve``; see ``docs/serving.md``.
 
   PYTHONPATH=src python -m repro.launch.serve --arch musicgen-large \
       --reduced --prompt-len 32 --decode-steps 16 --batch 2

@@ -494,18 +494,90 @@ def test_engine_fedtm_matches_reference_loop(data):
 
 
 def test_flis_dynamic_assignment_is_serverside(data):
-    """Clients upload placeholder slot 0; the round report's assignment
-    is the server-side clustering — proof the ids were recomputed
-    between uplink and aggregation, not taken from the clients."""
+    """Clients tag uploads with the row they last applied (0 before any
+    broadcast); the round report's assignment is the server-side
+    clustering — proof the ids were recomputed between uplink and
+    aggregation, not taken from the clients."""
     strat = FLISStrategy(linkage="dc", **FLIS_KW)
     engine = Engine(strat, data, RuntimeConfig(rounds=1))
     state = engine.init(jax.random.PRNGKey(0))
     keys = jax.random.split(jax.random.PRNGKey(1), N_CLIENTS)
     _, _, proposed = engine.executor.train(
         strat, state.client_state, state.server.slots, data, keys)
-    assert (np.asarray(proposed) == 0).all()          # placeholder tags
+    assert (np.asarray(proposed) == 0).all()      # fresh init: no row yet
     _, rep = engine.run_round(state, jax.random.PRNGKey(1))
     assert len(set(np.asarray(rep.assignment)[:, 0].tolist())) > 1
+
+
+def test_flis_prev_slot_follows_applied_assignment(data):
+    """The FLIS client-state ride-along: after each round, every
+    client's ``prev_slot`` is the server row it last *applied* —
+    advanced to the round's assignment where one was made, kept
+    otherwise — and the next round's uplink tags carry exactly those
+    ids to the server."""
+    strat = FLISStrategy(linkage="dc", **FLIS_KW)
+    engine = Engine(strat, data, RuntimeConfig(
+        rounds=3, scheduler=SchedulerConfig(participation=0.5,
+                                            sampling="round_robin")))
+    key = jax.random.PRNGKey(0)
+    k_init, k_rounds = jax.random.split(key)
+    state = engine.init(k_init)
+    for r in range(3):
+        prev = state
+        rk = jax.random.fold_in(k_rounds, r)
+        part = engine.scheduler.sample(r, rk)
+        state, rep = engine.run_round(state, rk)
+        # the uplink tags this round are the prev_slot lanes entering it
+        idx = np.asarray(part.idx)
+        keys = jax.random.split(rk, N_CLIENTS)[part.idx]
+        sub_cs = jax.tree.map(lambda a: a[part.idx], prev.client_state)
+        sub_data = jax.tree.map(lambda a: a[part.idx], data)
+        _, _, slots = engine.executor.train(
+            strat, sub_cs, engine._wire_tx_server(prev.server.slots),
+            sub_data, keys)
+        assert (np.asarray(slots)[:, 0]
+                == np.asarray(prev.client_state.prev_slot)[idx]).all()
+        # prev_slot advances to the applied assignment, else is kept
+        assign = np.asarray(rep.assignment)[:, 0]
+        want = np.where(assign >= 0, assign,
+                        np.asarray(prev.client_state.prev_slot))
+        assert (np.asarray(state.client_state.prev_slot) == want).all()
+
+
+def test_flis_sparse_uplink_encodes_against_prev_slot_reference(data):
+    """Byte-metering pin for the ride-along: FLIS sparse-delta uplinks
+    encode against the tracked reference of the row each client last
+    applied (its ``prev_slot`` tag) — replayed from scratch per round,
+    the metered totals must match exactly."""
+    wire = CodecConfig("int8", sparse=True)
+    strat = FLISStrategy(linkage="dc", **FLIS_KW)
+    engine = Engine(strat, data, RuntimeConfig(rounds=3, codec=wire))
+    key = jax.random.PRNGKey(0)
+    k_init, k_rounds = jax.random.split(key)
+    state = engine.init(k_init)
+    for r in range(3):
+        prev = state
+        rk = jax.random.fold_in(k_rounds, r)
+        part = engine.scheduler.sample(r, rk)
+        state, rep = engine.run_round(state, rk)
+
+        idx = np.asarray(part.idx)
+        keys = jax.random.split(rk, N_CLIENTS)[part.idx]
+        sub_cs = jax.tree.map(lambda a: a[part.idx], prev.client_state)
+        sub_data = jax.tree.map(lambda a: a[part.idx], data)
+        _, vecs, slots = engine.executor.train(
+            strat, sub_cs, engine._wire_tx_server(prev.server.slots),
+            sub_data, keys)
+        np_vecs, np_slots = np.asarray(vecs), np.asarray(slots)
+        expect = 0
+        for c in range(idx.shape[0]):
+            s = int(np_slots[c, 0])
+            ref = np.asarray(prev.ref_vecs)[int(idx[c]), s]
+            expect += 4 + len(codec.encode(np_vecs[c, 0], wire, ref=ref))
+        assert rep.upload_bytes == expect
+    # after a synced round the reference is no longer the zero row, so
+    # the tag genuinely selects a nearer reference than slot-0 zeros
+    assert (np.asarray(state.ref_round) >= 0).any()
 
 
 def test_flis_requires_sync_aggregation(data):

@@ -1,0 +1,298 @@
+"""Serving-plane contract tests: registry integrity (verify-then-place,
+immutable versions, loud rejection of every tamper mode), atomic warm
+swap under an in-flight request, and the serving-parity pin — served
+predictions bit-identical to the offline predictions of each client's
+resolved model, for ref and pallas TM backends, resident and mmap
+stores."""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.core import tm
+from repro.data import partition, synthetic
+from repro.data.ingest import idx
+from repro.fl.runtime import (CodecConfig, Engine, RuntimeConfig,
+                              SchedulerConfig, TPFLStrategy, checkpointing)
+from repro.fl.serve import (ModelRegistry, RegistryError, ServeTelemetry,
+                            ServingPlane)
+
+TM_CFG = tm.TMConfig(n_classes=10, n_clauses=12, n_features=100,
+                     n_states=63, s=5.0, T=20)
+N_CLIENTS = 6
+
+
+@pytest.fixture(scope="module")
+def data():
+    x, y, dcfg = synthetic.make_dataset("synthmnist", 1200,
+                                        jax.random.PRNGKey(0), side=10)
+    return partition.partition(
+        x, y, dcfg.n_classes, n_clients=N_CLIENTS, experiment=5,
+        key=jax.random.PRNGKey(1), n_train=30, n_test=15, n_conf=15)
+
+
+def _strategy():
+    return TPFLStrategy(TM_CFG, local_epochs=1)
+
+
+def _train(data, ckpt_dir, **cfg_kw):
+    """Two TPFL rounds with a checkpoint at round 2; returns the final
+    engine state (the population the checkpoint holds)."""
+    engine = Engine(_strategy(), data, RuntimeConfig(
+        rounds=2, checkpoint_dir=str(ckpt_dir), checkpoint_every=2,
+        **cfg_kw))
+    state, _ = engine.run(jax.random.PRNGKey(0))
+    return state
+
+
+def _like(data, **cfg_kw):
+    """A fresh serving-side engine + its structure template, keyed with
+    the training chain's k_init."""
+    engine = Engine(_strategy(), data, RuntimeConfig(**cfg_kw))
+    k_init, _ = jax.random.split(jax.random.PRNGKey(0))
+    return engine, engine.init(k_init)
+
+
+@pytest.fixture(scope="module")
+def trained(tmp_path_factory, data):
+    ckpt_dir = tmp_path_factory.mktemp("ckpt")
+    state = _train(data, ckpt_dir)
+    return {"ckpt_dir": ckpt_dir, "state": state}
+
+
+def _fresh_registry(tmp_path, trained) -> ModelRegistry:
+    reg = ModelRegistry(tmp_path / "registry")
+    reg.publish(checkpointing.latest(trained["ckpt_dir"]))
+    return reg
+
+
+# ---------------------------------------------------------------------------
+# registry: verify-then-place + failure modes
+# ---------------------------------------------------------------------------
+
+def test_registry_publish_pull_roundtrip(tmp_path, data, trained):
+    reg = _fresh_registry(tmp_path, trained)
+    assert reg.versions() == [2]
+    assert reg.latest() == 2
+    assert idx.checksum_path(reg.path_for(2)).is_file()
+    _, like = _like(data)
+    pulled = reg.pull(2, like)
+    for a, b in zip(jax.tree.leaves(pulled),
+                    jax.tree.leaves(trained["state"])):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_registry_pull_rejects_corrupted_payload(tmp_path, data, trained):
+    reg = _fresh_registry(tmp_path, trained)
+    path = reg.path_for(2)
+    raw = bytearray(path.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    path.write_bytes(bytes(raw))
+    _, like = _like(data)
+    with pytest.raises(idx.ChecksumError, match="mismatch"):
+        reg.pull(2, like)
+
+
+def test_registry_pull_rejects_flipped_sidecar(tmp_path, data, trained):
+    reg = _fresh_registry(tmp_path, trained)
+    side = idx.checksum_path(reg.path_for(2))
+    side.write_text("0" * 64 + "\n")
+    _, like = _like(data)
+    with pytest.raises(idx.ChecksumError, match="mismatch"):
+        reg.pull(2, like)
+
+
+def test_registry_pull_requires_sidecar(tmp_path, data, trained):
+    """idx.verify_bytes silently passes when no sidecar exists — the
+    registry must treat a missing sidecar as corruption instead."""
+    reg = _fresh_registry(tmp_path, trained)
+    idx.checksum_path(reg.path_for(2)).unlink()
+    _, like = _like(data)
+    with pytest.raises(RegistryError, match="sidecar"):
+        reg.pull(2, like)
+
+
+def test_registry_pull_rejects_missing_version(tmp_path, data, trained):
+    reg = _fresh_registry(tmp_path, trained)
+    _, like = _like(data)
+    with pytest.raises(RegistryError, match="not in the registry"):
+        reg.pull(7, like)
+
+
+def test_registry_versions_are_immutable(tmp_path, trained):
+    reg = _fresh_registry(tmp_path, trained)
+    src = checkpointing.latest(trained["ckpt_dir"])
+    # identical bytes: publish is idempotent
+    assert reg.publish(src) == 2
+    # different bytes under the same version name: refused
+    clash = tmp_path / "clash" / src.name
+    clash.parent.mkdir()
+    clash.write_bytes(src.read_bytes() + b"\x00")
+    with pytest.raises(RegistryError, match="immutable"):
+        reg.publish(clash)
+
+
+def test_registry_pull_rejects_layout_drift(tmp_path, data, trained):
+    """A checkpoint published under one strategy config must not decode
+    into another: 12-clause state vs a 20-clause serving template."""
+    reg = _fresh_registry(tmp_path, trained)
+    drifted = Engine(
+        TPFLStrategy(tm.TMConfig(n_classes=10, n_clauses=20,
+                                 n_features=100, n_states=63,
+                                 s=5.0, T=20), local_epochs=1),
+        data, RuntimeConfig())
+    like = drifted.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="layout"):
+        reg.pull(2, like)
+
+
+def test_restore_layout_error_names_leaf_and_both_layouts(tmp_path):
+    """Satellite pin: the layout-drift error is actionable — it names
+    the offending leaf path and both sides' dtype+shape."""
+    path = tmp_path / "round_000001.msgpack"
+    ckpt.save(path, {"server": {"slots": np.zeros((4, 8), np.float32)}})
+    with pytest.raises(ValueError) as ei:
+        ckpt.restore(path, {"server": {"slots":
+                                       np.zeros((8, 8), np.float32)}})
+    msg = str(ei.value)
+    assert "'server/slots'" in msg
+    assert "float32(4, 8)" in msg and "float32(8, 8)" in msg
+    # dtype drift alone is named the same way (no silent casting)
+    with pytest.raises(ValueError) as ei:
+        ckpt.restore(path, {"server": {"slots":
+                                       np.zeros((4, 8), np.int32)}})
+    msg = str(ei.value)
+    assert "'server/slots'" in msg
+    assert "float32(4, 8)" in msg and "int32(4, 8)" in msg
+    # and the checkpointing wrapper still labels it a layout failure
+    engine_msg = pytest.raises(
+        ValueError, checkpointing.restore, path,
+        {"server": {"slots": np.zeros((8, 8), np.float32)}})
+    assert "layout" in str(engine_msg.value)
+
+
+# ---------------------------------------------------------------------------
+# warm swap: atomic under an in-flight request
+# ---------------------------------------------------------------------------
+
+def _publish_successor(reg, trained, round_idx=4):
+    """Forge a later-round version with visibly different slot rows."""
+    state = trained["state"]
+    succ = state._replace(
+        round_idx=jnp.asarray(round_idx, jnp.int32),
+        server=state.server._replace(slots=state.server.slots + 1.0))
+    src = pathlib.Path(reg.root) / "staging"
+    src.mkdir(exist_ok=True)
+    path = checkpointing.save(src, succ)
+    return reg.publish(path)
+
+
+def test_warm_swap_is_atomic_under_inflight_request(tmp_path, data,
+                                                    trained):
+    """A version landing between resolve and gather must not mix into
+    the in-flight batch: it is served entirely by the old version; the
+    *next* request is served entirely by the new one."""
+    reg = _fresh_registry(tmp_path, trained)
+    engine, like = _like(data)
+    ids = np.arange(N_CLIENTS)
+    x = np.asarray(data.x_test)[:, 0]
+
+    baseline = ServingPlane(engine.strategy, reg, like)
+    baseline.refresh()
+    want_old = baseline.predict(ids, x)
+
+    def land_new_version(plane):
+        if reg.latest() == 2:            # fire once, mid-first-request
+            _publish_successor(reg, trained)
+            assert plane.refresh()       # swap while request in flight
+
+    tel = ServeTelemetry(tmp_path / "tel")
+    plane = ServingPlane(engine.strategy, reg, like, telemetry=tel,
+                         resolve_hook=land_new_version)
+    plane.refresh()
+    got = plane.predict(ids, x)
+    # in-flight request: old version, bit-for-bit — never a blend
+    assert plane.last_served_version == 2
+    assert (got == want_old).all()
+    # next request: entirely the new version
+    plane.predict(ids, x)
+    assert plane.last_served_version == 4
+    events = [e for e in _read_events(tel.events_path)
+              if e["event"] == "swap"]
+    assert [(e["from_version"], e["to_version"]) for e in events] \
+        == [(None, 2), (2, 4)]
+
+
+def _read_events(path):
+    from repro.fl.obs import events
+    return events.read_events(path)
+
+
+def test_refresh_never_downgrades(tmp_path, data, trained):
+    reg = _fresh_registry(tmp_path, trained)
+    engine, like = _like(data)
+    plane = ServingPlane(engine.strategy, reg, like)
+    assert plane.refresh() is True
+    assert plane.refresh() is False          # same version: no swap
+    _publish_successor(reg, trained)
+    assert plane.refresh() is True
+    assert plane.active_version == 4
+
+
+def test_predict_without_active_version_is_loud(tmp_path, data, trained):
+    reg = ModelRegistry(tmp_path / "empty")
+    engine, like = _like(data)
+    plane = ServingPlane(engine.strategy, reg, like)
+    with pytest.raises(RegistryError, match="no active model"):
+        plane.predict(np.arange(2), np.asarray(data.x_test)[:2, 0])
+
+
+# ---------------------------------------------------------------------------
+# serving parity: served == offline, ref/pallas × resident/mmap
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tm_backend", ["ref", "pallas"])
+@pytest.mark.parametrize("store", ["resident", "mmap"])
+def test_serving_parity_bitwise(tmp_path, data, trained, store,
+                                tm_backend):
+    """For every client in a mixed-cluster batch, the served prediction
+    equals the offline prediction of that client's resolved model —
+    bit-for-bit.  The mmap cell trains at 50% participation so the
+    batch mixes personalized (spilled) rows with deterministic-init
+    fallbacks, and both kinds must hold parity."""
+    if store == "mmap":
+        cfg_kw = dict(client_store="mmap",
+                      store_dir=str(tmp_path / "store"),
+                      scheduler=SchedulerConfig(participation=0.5))
+        _train(data, tmp_path / "ckpt", **cfg_kw)
+        ckpt_dir = tmp_path / "ckpt"
+        serve_kw = dict(client_store="mmap",
+                        store_dir=str(tmp_path / "store"),
+                        tm_backend=tm_backend)
+    else:
+        ckpt_dir = trained["ckpt_dir"]
+        serve_kw = dict(tm_backend=tm_backend)
+    reg = ModelRegistry(tmp_path / "registry")
+    reg.publish(checkpointing.latest(ckpt_dir))
+    engine, like = _like(data, **serve_kw)
+    plane = ServingPlane(engine.strategy, reg, like, store=engine.store)
+    plane.refresh()
+
+    # mixed-cluster batch with duplicates: every client, two samples
+    ids = np.concatenate([np.arange(N_CLIENTS), np.arange(N_CLIENTS)])
+    x_test = np.asarray(data.x_test)
+    x = np.concatenate([x_test[:, 0], x_test[:, 1]])
+    got = plane.predict(ids, x)
+
+    state = reg.pull(plane.active_version, like)
+    rows, written = plane._resolve_rows(state, np.arange(N_CLIENTS))
+    if store == "mmap":
+        assert 0 < written.sum() < N_CLIENTS    # both kinds in the batch
+    cfg = engine.strategy.tm_cfg                # use_kernel per backend
+    for j, c in enumerate(ids):
+        row = jax.tree.map(lambda a: a[c], rows)
+        want = np.asarray(tm.predict(row, x[j:j + 1], cfg))[0]
+        assert int(got[j]) == int(want)
