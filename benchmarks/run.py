@@ -297,6 +297,105 @@ def emit_serve_bench(dataset: str, scale, data_dir: str | None = None,
     return out
 
 
+def emit_wire_bench(rounds: int = 3, clients: int = 6,
+                    socket_workers: int = 2) -> dict:
+    """Wire-cost trajectory → BENCH_wire_bytes.json.
+
+    Two sweeps over one small synthmnist federation:
+
+    1. **bytes/round** per strategy × codec × compression-v2 on/off —
+       the engine's codec-metered upload / download totals of the last
+       round (steady state: round 0 can be cheaper while reference rows
+       warm up).  v2 means error-feedback residuals on the lossy dense
+       codecs and varint+RLE index coding on the sparse-delta path
+       (``docs/transport.md``); float32 has no v2 variant (bit-exact,
+       nothing to feed back).
+    2. **socket round latency vs in-process** — the same tpfl/float32
+       scenario through the in-process engine and through the real
+       multi-process socket transport (``socket_workers`` worker
+       subprocesses on the length-prefixed local-TCP wire), median of
+       the telemetry tracer's per-round ``round`` spans (worker launch
+       and jax warm-up excluded from per-round medians by taking the
+       median, which discards the compile-heavy first round).
+
+    Artifact schema: ``wire_bytes`` ({strategy: {codec_label: {v1|v2:
+    {upload_bytes, download_broadcast, download_per_client}}}}),
+    ``socket_latency_s`` ({inprocess, socket, workers})."""
+    import statistics
+
+    import jax
+
+    from repro.fl.obs import RunRecorder
+    from repro.fl.runtime import CodecConfig, Engine, RuntimeConfig
+    from repro.fl.transport import TransportEngine
+    from repro.launch import fed_train
+
+    scen_kw = dict(dataset="synthmnist", clients=clients, clauses=16,
+                   seed=0, rounds=rounds, local_epochs=1)
+    _, data, _, _, _ = fed_train.build_scenario(**scen_kw)
+    key = jax.random.PRNGKey(0)
+
+    codec_grid = {
+        "float32": {"v1": CodecConfig("float32")},
+        "int8": {"v1": CodecConfig("int8"),
+                 "v2": CodecConfig("int8", error_feedback=True)},
+        "int4": {"v1": CodecConfig("int4"),
+                 "v2": CodecConfig("int4", error_feedback=True)},
+        "int8_sparse": {"v1": CodecConfig("int8", sparse=True),
+                        "v2": CodecConfig("int8", sparse=True,
+                                          error_feedback=True,
+                                          index_coding="vrle")},
+    }
+    out = {"dataset": "synthmnist", "n_clients": clients,
+           "rounds": rounds, "wire_bytes": {}, "socket_latency_s": {}}
+    for strat_name in ("tpfl", "fedavg", "flis_dc"):
+        out["wire_bytes"][strat_name] = {}
+        for label, variants in codec_grid.items():
+            out["wire_bytes"][strat_name][label] = {}
+            for variant, ccfg in variants.items():
+                strat = fed_train.build_scenario(
+                    **{**scen_kw, "strategy": strat_name})[4]
+                eng = Engine(strat, data,
+                             RuntimeConfig(rounds=rounds, codec=ccfg))
+                _, reps = eng.run(key)
+                last = reps[-1]
+                out["wire_bytes"][strat_name][label][variant] = {
+                    "upload_bytes": last.upload_bytes,
+                    "download_broadcast": last.download_bytes_broadcast,
+                    "download_per_client": last.download_bytes_per_client,
+                }
+                print(f"bench_wire_bytes,{last.upload_bytes},"
+                      f"strategy={strat_name}/codec={label}/{variant}",
+                      flush=True)
+
+    def _round_median(run_fn):
+        rec = RunRecorder()          # in-memory: per-round phase spans
+        run_fn(rec)
+        spans = [ev["phases"]["round"] for ev in rec.history
+                 if ev.get("phases") and "round" in ev["phases"]]
+        return round(statistics.median(spans), 4)
+
+    _, data2, _, _, strat = fed_train.build_scenario(**scen_kw)
+    out["socket_latency_s"]["inprocess"] = _round_median(
+        lambda rec: Engine(strat, data2, RuntimeConfig(rounds=rounds),
+                           telemetry=rec).run(key))
+    out["socket_latency_s"]["workers"] = socket_workers
+    out["socket_latency_s"]["socket"] = _round_median(
+        lambda rec: TransportEngine(
+            strat, data2,
+            RuntimeConfig(rounds=rounds, transport="socket",
+                          workers=socket_workers),
+            telemetry=rec, spec={"scenario": scen_kw}).run(key))
+    print(f"bench_wire_latency,"
+          f"{out['socket_latency_s']['socket']*1e6:.0f},"
+          f"socket_vs_inprocess="
+          f"{out['socket_latency_s']['socket']:.3f}s/"
+          f"{out['socket_latency_s']['inprocess']:.3f}s", flush=True)
+    ART.mkdir(exist_ok=True)
+    (ART / "BENCH_wire_bytes.json").write_text(json.dumps(out, indent=2))
+    return out
+
+
 def main() -> None:
     from repro.data.ingest import registry as datasets
 
@@ -347,6 +446,14 @@ def main() -> None:
                          "sustained requests/sec — written to artifacts/"
                          "BENCH_serve_latency.json (the serve CI "
                          "artifact)")
+    ap.add_argument("--emit-wire-bench", action="store_true",
+                    help="only run the wire-cost bench: bytes/round per "
+                         "strategy × codec × compression-v2 on/off "
+                         "(error-feedback residuals, varint+RLE sparse "
+                         "indices), plus socket-transport round latency "
+                         "vs in-process — written to artifacts/"
+                         "BENCH_wire_bytes.json (the transport CI "
+                         "artifact)")
     ap.add_argument("--client-scale-ns", default=None,
                     help="comma-separated population sizes for the "
                          "client-scale bench (default "
@@ -381,6 +488,11 @@ def main() -> None:
     if args.emit_client_scale:
         print("name,us_per_call,derived")
         emit_client_scale(ns=scale_ns)
+        return
+
+    if args.emit_wire_bench:
+        print("name,us_per_call,derived")
+        emit_wire_bench(rounds=2 if args.quick else 3)
         return
 
     if args.emit_serve_bench:

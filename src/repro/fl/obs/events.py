@@ -21,7 +21,14 @@ already returned:
 * ``async``         — aggregated / still-buffered / evicted uploads.
 * ``store``         — host-I/O bytes read/written by the mmap client
   store this round (0 on the resident engine).
-* ``phases``        — the round's phase-span wall times (tracer).
+* ``transport``     — framed bytes the real transport (loopback /
+  socket, ``repro.fl.transport``) put on and took off the wire this
+  round (headers and envelopes included, unlike the codec-metered
+  ``bytes`` section), plus the observed-arrival staleness summary of
+  the uploads that actually landed (async transport; ``None`` on the
+  in-process engine, where staleness is an injected schedule).
+* ``phases``        — the round's phase-span wall times (tracer),
+  including the ``wire_tx`` / ``wire_rx`` transport spans.
 
 Serialization is numpy-safe by construction: :func:`to_jsonable`
 coerces numpy/jax scalars and arrays (int64 included — ``json`` alone
@@ -151,9 +158,38 @@ def round_event(report, spans: dict | None = None,
             "read_bytes": int(getattr(report, "store_read_bytes", 0)),
             "written_bytes": int(getattr(report, "store_written_bytes", 0)),
         },
+        "transport": _transport_gauges(report),
         "phases": dict(spans) if spans else None,
     }
     return ev
+
+
+def _transport_gauges(report) -> dict | None:
+    """Per-direction framed-byte gauges + observed-arrival staleness of
+    the real transport; ``None`` when nothing crossed a process wire
+    (the in-process engine)."""
+    tx = int(getattr(report, "wire_tx_bytes", 0))
+    rx = int(getattr(report, "wire_rx_bytes", 0))
+    observed = getattr(report, "observed_staleness", None)
+    if tx == 0 and rx == 0 and observed is None:
+        return None
+    gauges = {"wire_tx_bytes": tx, "wire_rx_bytes": rx}
+    if observed is not None:
+        # the runner hands either the raw arrival-lag array or the
+        # already-derived Participation.summary() dict
+        if isinstance(observed, dict):
+            gauges["observed"] = observed
+        else:
+            lags = np.asarray(observed, np.int64).ravel()
+            hist = (np.bincount(lags) if lags.size
+                    else np.zeros(1, np.int64))
+            gauges["observed"] = {
+                "arrived": int(lags.size),
+                "arrived_on_time": int((lags == 0).sum()),
+                "stragglers": int((lags > 0).sum()),
+                "staleness_hist": hist.tolist(),
+            }
+    return gauges
 
 
 def append_event(path: str | pathlib.Path, event: dict) -> dict:

@@ -26,6 +26,23 @@ by both endpoints, so frames carry no codec/type tags):
   row each client last received over the broadcast, zeros if never
   synced), so delta savings stay honest under partial participation.
 
+Compression v2 (both opt-in via :class:`CodecConfig`):
+
+* ``index_coding="vrle"`` — the sparse index stream is entropy-coded as
+  run-length pairs of LEB128 varints instead of raw ``<u2`` indices:
+  ``flag = 2`` + [``scale <f4``] + ``varint count`` + ``varint n_runs``
+  + ``n_runs·(varint gap, varint run_len)`` + values.  A *run* is a
+  maximal block of consecutive indices; ``gap`` is the distance from
+  the end of the previous run.  Varints also lift the legacy ``<u2``
+  limit: v2 frames address vectors of any length.
+* ``error_feedback=True`` — the caller keeps a per-(client, slot)
+  residual vector and encodes ``vec + residual`` through
+  :func:`ef_encode`; the quantization error of *this* frame becomes the
+  next round's residual, so lossy int8/int4 error stops accumulating
+  across rounds (classic EF-SGD memory, per the communication-reduction
+  taxonomy).  Requires a lossy codec — float32 round-trips bit-exact
+  and the residual would be identically zero.
+
 ``encode`` → ``bytes``; ``decode`` → float32 numpy vector.  Round-trip is
 bit-exact for float32 and within one quantization step otherwise (the
 satellite test pins this).
@@ -38,6 +55,7 @@ import struct
 import numpy as np
 
 CODECS = ("float32", "int8", "int4")
+INDEX_CODINGS = ("u2", "vrle")
 
 _QMAX = {"int8": 127, "int4": 7}
 
@@ -46,11 +64,27 @@ _QMAX = {"int8": 127, "int4": 7}
 class CodecConfig:
     name: str = "float32"       # float32 | int8 | int4
     sparse: bool = False        # sparse delta encoding vs shared reference
+    error_feedback: bool = False  # EF residual memory (lossy codecs only)
+    index_coding: str = "u2"    # u2 | vrle (varint+RLE sparse indices)
 
     def __post_init__(self):
         if self.name not in CODECS:
             raise ValueError(f"unknown codec {self.name!r}; "
                              f"choose from {CODECS}")
+        if self.index_coding not in INDEX_CODINGS:
+            raise ValueError(f"unknown index_coding "
+                             f"{self.index_coding!r}; "
+                             f"choose from {INDEX_CODINGS}")
+        if self.index_coding == "vrle" and not self.sparse:
+            raise ValueError("index_coding='vrle' entropy-codes the "
+                             "sparse index stream and requires "
+                             "sparse=True (dense frames have no "
+                             "index stream)")
+        if self.error_feedback and self.name == "float32":
+            raise ValueError("error_feedback requires a lossy codec "
+                             "(int8 | int4); float32 round-trips "
+                             "bit-exact, so the residual would be "
+                             "identically zero")
 
 
 # ---------------------------------------------------------------------------
@@ -111,6 +145,80 @@ def _value_bytes(name: str, count: int) -> int:
 
 
 # ---------------------------------------------------------------------------
+# compression v2: varint + run-length index coding
+# ---------------------------------------------------------------------------
+
+def _varint(n: int) -> bytes:
+    """Unsigned LEB128."""
+    out = bytearray()
+    while True:
+        b = n & 0x7F
+        n >>= 7
+        if n:
+            out.append(b | 0x80)
+        else:
+            out.append(b)
+            return bytes(out)
+
+
+def _read_varint(buf: bytes, off: int) -> tuple[int, int]:
+    n = shift = 0
+    while True:
+        if off >= len(buf):
+            raise ValueError("truncated varint in sparse v2 frame")
+        b = buf[off]
+        off += 1
+        n |= (b & 0x7F) << shift
+        if not b & 0x80:
+            return n, off
+        shift += 7
+
+
+def _index_runs(nz: np.ndarray) -> list[tuple[int, int]]:
+    """Sorted indices → (gap, run_len) pairs over maximal consecutive
+    runs; gap is the distance from the end of the previous run."""
+    runs: list[tuple[int, int]] = []
+    prev_end = 0                              # one past last emitted index
+    i = 0
+    while i < nz.size:
+        j = i
+        while j + 1 < nz.size and nz[j + 1] == nz[j] + 1:
+            j += 1
+        runs.append((int(nz[i]) - prev_end, j - i + 1))
+        prev_end = int(nz[j]) + 1
+        i = j + 1
+    return runs
+
+
+def _encode_vrle_indices(nz: np.ndarray) -> bytes:
+    runs = _index_runs(nz)
+    parts = [_varint(nz.size), _varint(len(runs))]
+    for gap, run_len in runs:
+        parts.append(_varint(gap))
+        parts.append(_varint(run_len))
+    return b"".join(parts)
+
+
+def _decode_vrle_indices(buf: bytes, off: int
+                         ) -> tuple[np.ndarray, int]:
+    count, off = _read_varint(buf, off)
+    n_runs, off = _read_varint(buf, off)
+    idx = np.empty(count, np.int64)
+    pos = prev_end = 0
+    for _ in range(n_runs):
+        gap, off = _read_varint(buf, off)
+        run_len, off = _read_varint(buf, off)
+        start = prev_end + gap
+        idx[pos:pos + run_len] = np.arange(start, start + run_len)
+        pos += run_len
+        prev_end = start + run_len
+    if pos != count:
+        raise ValueError("sparse v2 frame: run lengths disagree with "
+                         f"count ({pos} != {count})")
+    return idx, off
+
+
+# ---------------------------------------------------------------------------
 # public surface
 # ---------------------------------------------------------------------------
 
@@ -129,25 +237,32 @@ def encode(vec: np.ndarray, cfg: CodecConfig,
     else:
         q, scale = _quantize(delta, _QMAX[cfg.name])
         nz = np.nonzero(q)[0]
+    dense_cost = 1 + len(_encode_dense(vec, cfg.name))
+    head = b"" if scale is None else struct.pack("<f", scale)
+
+    def _values() -> bytes:
+        if cfg.name == "float32":
+            return delta[nz].astype("<f4").tobytes()
+        if cfg.name == "int8":
+            return q[nz].tobytes()
+        return _pack_int4(q[nz])
+
+    if cfg.index_coding == "vrle":
+        idx_stream = _encode_vrle_indices(nz)
+        if 1 + len(head) + len(idx_stream) \
+                + _value_bytes(cfg.name, nz.size) < dense_cost:
+            return b"".join([b"\x02", head, idx_stream, _values()])
+        return b"\x00" + _encode_dense(vec, cfg.name)
+
     if nz.size > 0xFFFF or vec.size > 0xFFFF:
         nz = None                         # u2 indices can't address it
     if nz is not None:
-        sparse_cost = 5 + (0 if scale is None else 4) \
+        sparse_cost = 5 + len(head) \
             + 2 * nz.size + _value_bytes(cfg.name, nz.size)
-        dense_cost = 1 + len(_encode_dense(vec, cfg.name))
         if sparse_cost < dense_cost:
-            parts = [b"\x01"]
-            if scale is not None:
-                parts.append(struct.pack("<f", scale))
-            parts.append(struct.pack("<I", nz.size))
-            parts.append(nz.astype("<u2").tobytes())
-            if cfg.name == "float32":
-                parts.append(delta[nz].astype("<f4").tobytes())
-            elif cfg.name == "int8":
-                parts.append(q[nz].tobytes())
-            else:
-                parts.append(_pack_int4(q[nz]))
-            return b"".join(parts)
+            return b"".join([b"\x01", head,
+                             struct.pack("<I", nz.size),
+                             nz.astype("<u2").tobytes(), _values()])
     return b"\x00" + _encode_dense(vec, cfg.name)
 
 
@@ -160,16 +275,22 @@ def decode(buf: bytes, m: int, cfg: CodecConfig,
     flag, buf = buf[0], buf[1:]
     if flag == 0:
         return _decode_dense(buf, m, cfg.name)
+    if flag not in (1, 2):
+        raise ValueError(f"unknown sparse frame flag {flag}")
     off = 0
     scale = None
     if cfg.name != "float32":
         (scale,) = struct.unpack_from("<f", buf, off)
         off += 4
-    (count,) = struct.unpack_from("<I", buf, off)
-    off += 4
-    idx = np.frombuffer(buf, dtype="<u2", count=count, offset=off
-                        ).astype(np.int64)
-    off += 2 * count
+    if flag == 2:
+        idx, off = _decode_vrle_indices(buf, off)
+        count = idx.size
+    else:
+        (count,) = struct.unpack_from("<I", buf, off)
+        off += 4
+        idx = np.frombuffer(buf, dtype="<u2", count=count, offset=off
+                            ).astype(np.int64)
+        off += 2 * count
     if cfg.name == "float32":
         vals = np.frombuffer(buf, dtype="<f4", count=count, offset=off
                              ).astype(np.float32)
@@ -183,6 +304,20 @@ def decode(buf: bytes, m: int, cfg: CodecConfig,
     base = np.zeros(m, np.float32) if ref is None \
         else np.asarray(ref, np.float32).ravel().copy()
     return base + delta
+
+
+def ef_encode(vec: np.ndarray, cfg: CodecConfig, residual: np.ndarray,
+              ref: np.ndarray | None = None
+              ) -> tuple[bytes, np.ndarray]:
+    """Error-feedback encode: compress ``vec + residual`` and return the
+    frame plus the *new* residual (the quantization error this frame
+    leaves behind).  Both endpoints decode with the plain :func:`decode`;
+    only the sender holds residual memory."""
+    vec = np.asarray(vec, dtype=np.float32).ravel()
+    target = vec + np.asarray(residual, np.float32).ravel()
+    buf = encode(target, cfg, ref=ref)
+    decoded = decode(buf, vec.size, cfg, ref=ref)
+    return buf, target - decoded
 
 
 def roundtrip_tolerance(vec: np.ndarray, cfg: CodecConfig) -> float:

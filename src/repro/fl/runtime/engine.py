@@ -82,7 +82,7 @@ from repro.data.partition import ClientData
 from repro.fl import masked_collectives
 from repro.fl.obs.recorder import NULL as NULL_TELEMETRY
 from repro.fl.runtime import checkpointing
-from repro.fl.runtime.codec import CodecConfig, decode, encode
+from repro.fl.runtime.codec import CodecConfig, decode, ef_encode, encode
 from repro.fl.runtime import executors
 from repro.fl.runtime.executors import (COLLECTIVES, InProcessExecutor,
                                         ShardMapExecutor)
@@ -97,6 +97,7 @@ BACKENDS = ("inprocess", "shardmap")
 TM_BACKENDS = ("ref", "pallas")
 CLIENT_STORES = ("resident", "mmap")
 STORE_EVALS = ("full", "sampled")
+TRANSPORTS = ("inprocess", "loopback", "socket")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,10 +124,57 @@ class RuntimeConfig:
     store_dir: str | None = None      # mmap store root (None = fresh temp)
     store_eval: str = "full"          # full (chunked population) | sampled
     store_eval_chunk: int = 256       # clients per chunked-eval gather
+    # real-transport runtime (repro.fl.transport): "inprocess" is this
+    # engine's direct function-call wire; "loopback" runs the same round
+    # protocol through in-memory length-prefixed frames (the reference
+    # the conformance suite pins bit-identical to inprocess on the
+    # identity wire); "socket" runs M real client-worker subprocesses
+    # over local TCP, where staleness/dropout are observed arrivals.
+    transport: str = "inprocess"      # inprocess | loopback | socket
+    workers: int = 0                  # socket worker process count (>= 1)
 
     def __post_init__(self):
         if self.aggregation not in ("sync", "async"):
             raise ValueError(f"unknown aggregation {self.aggregation!r}")
+        if self.transport not in TRANSPORTS:
+            raise ValueError(
+                f"unknown transport {self.transport!r}; choose from "
+                f"{TRANSPORTS} (see docs/transport.md)")
+        if self.transport != "inprocess" and self.workers < 1:
+            raise ValueError(
+                f"transport={self.transport!r} partitions the client "
+                "population over worker peers — set workers >= 1 "
+                f"(got workers={self.workers})")
+        if self.transport == "inprocess" and self.workers != 0:
+            raise ValueError(
+                f"workers={self.workers} is a transport knob; "
+                "transport='inprocess' runs no workers (leave workers=0)")
+        if self.transport != "inprocess" and self.aggregation == "async" \
+                and self.codec.sparse:
+            raise ValueError(
+                "sparse delta coding needs encoder and decoder to agree "
+                "on the reference rows at decode time; the arrival-"
+                "driven async transport decodes uploads rounds after "
+                "they were encoded, so run sparse=True with "
+                "aggregation='sync' or transport='inprocess'")
+        if self.transport != "inprocess" and self.backend != "inprocess":
+            raise ValueError(
+                f"transport={self.transport!r} distributes clients over "
+                "worker processes — it composes with backend='inprocess' "
+                f"only, not backend={self.backend!r} (shard_map is "
+                "single-process mesh parallelism)")
+        if self.transport != "inprocess" and self.client_store != "resident":
+            raise ValueError(
+                f"transport={self.transport!r} requires "
+                "client_store='resident': worker processes own their "
+                "client rows, which contradicts the single-process mmap "
+                "store")
+        if self.codec.error_feedback and self.client_store != "resident":
+            raise ValueError(
+                "codec.error_feedback keeps per-(client, slot) residual "
+                "memory in EngineState — available with "
+                "client_store='resident' only (the mmap store does not "
+                "carry the residual lane)")
         if self.client_store not in CLIENT_STORES:
             raise ValueError(f"unknown client_store {self.client_store!r}")
         if self.store_eval not in STORE_EVALS:
@@ -171,6 +219,12 @@ class EngineState(NamedTuple):
     # when the codec is dense (no reference to track).
     ref_vecs: jnp.ndarray       # (n, n_slots, d) float32, or (0, 0, 0)
     ref_round: jnp.ndarray      # (n,) int32, or (0,)
+    # error-feedback residual memory (codec.error_feedback): the
+    # quantization error each client's last frame for each slot left
+    # behind, added back before the next encode (compression v2).
+    # Carried here so checkpoints capture it and lossy-EF resume is
+    # bit-identical.  Zero-size placeholder when EF is off.
+    ef_residual: jnp.ndarray  # (n, n_slots, d) float32, or (0, 0, 0)
 
 
 class RoundReport(NamedTuple):
@@ -188,6 +242,16 @@ class RoundReport(NamedTuple):
     evicted_uploads: int               # async: lost to buffer overflow
     store_read_bytes: int = 0          # mmap store host reads this round
     store_written_bytes: int = 0       # mmap store host writes this round
+    # real-transport gauges (repro.fl.transport): total framed bytes the
+    # server actually put on / took off the wire this round — envelopes
+    # and headers included, unlike the codec-metered fields above.
+    # Zero on the in-process engine (nothing crossed a process wire).
+    wire_tx_bytes: int = 0             # server → clients, framed
+    wire_rx_bytes: int = 0             # clients → server, framed
+    # per-arrival observed staleness (arrival round − source round) of
+    # the uploads the transport server took in this round; None on the
+    # in-process engine (staleness there is an injected schedule)
+    observed_staleness: Any = None
 
 
 class Engine:
@@ -242,15 +306,22 @@ class Engine:
                 f"own slot row, 'all_slots' the whole matrix (IFCA)")
         self._assign = getattr(strategy, "assign", None)
         self._server_update = resolve_server_update(strategy)
-        if cfg.aggregation == "async" and (
-                self._assign is not None
-                or getattr(strategy, "server_update", None) is not None):
+        # async × dynamic assignment: strategies with server-side hooks
+        # (assign / custom server_update) aggregate on the *host* buffer
+        # path, where `assign` is re-run over the matured buffer
+        # contents at aggregation time — the buffer holds uploads across
+        # rounds, so membership is recomputed when they are folded in,
+        # not when they were sent.  The hook-less device/shardmap
+        # programs hard-code the Alg. 2 fold and stay as they were.
+        self._async_hooks = cfg.aggregation == "async" and (
+            self._assign is not None
+            or getattr(strategy, "server_update", None) is not None)
+        if self._async_hooks and cfg.backend == "shardmap":
             raise ValueError(
-                "dynamic server-side assignment / custom server_update "
-                "are round-synchronous server decisions — run this "
-                "strategy with aggregation='sync' (the async buffer "
-                "holds uploads across rounds, so there is no single "
-                "round membership to recompute)")
+                "async + server-side assign/server_update hooks "
+                "aggregate on the in-process host buffer path — run "
+                "this strategy with backend='inprocess' (the shard-"
+                "mapped async program hard-codes the hook-less fold)")
         if client_weights is None and cfg.scheduler.sampling == "weighted":
             # weighted sampling defaults to the real per-client dataset
             # sizes the partitioner recorded (clients with more data are
@@ -316,6 +387,10 @@ class Engine:
         else:
             ref_vecs = jnp.zeros((0, 0, 0), jnp.float32)
             ref_round = jnp.zeros((0,), jnp.int32)
+        if self.cfg.codec.error_feedback:
+            ef = jnp.zeros((self.n, self.strategy.n_slots, d), jnp.float32)
+        else:
+            ef = jnp.zeros((0, 0, 0), jnp.float32)
         return EngineState(
             round_idx=jnp.zeros((), jnp.int32),
             client_state=cs, server=server,
@@ -325,7 +400,7 @@ class Engine:
             buf_weight=jnp.zeros((cap,), jnp.float32),
             buf_valid=jnp.zeros((cap,), bool),
             buf_seq=jnp.zeros((cap,), jnp.int32),
-            ref_vecs=ref_vecs, ref_round=ref_round)
+            ref_vecs=ref_vecs, ref_round=ref_round, ef_residual=ef)
 
     def _init_mmap(self, key: jax.Array) -> EngineState:
         """Open the client store and return an O(K) engine state: the
@@ -396,7 +471,8 @@ class Engine:
             buf_valid=jnp.zeros((cap,), bool),
             buf_seq=jnp.zeros((cap,), jnp.int32),
             ref_vecs=jnp.zeros((0, 0, 0), jnp.float32),
-            ref_round=jnp.zeros((0,), jnp.int32))
+            ref_round=jnp.zeros((0,), jnp.int32),
+            ef_residual=jnp.zeros((0, 0, 0), jnp.float32))
 
     def run(self, key: jax.Array, state: EngineState | None = None,
             rounds: int | None = None
@@ -507,6 +583,7 @@ class Engine:
             if fused is None:
                 obs.discard("fused_round")   # in-process: no fused form
         refs = (state.ref_vecs, state.ref_round)
+        ef = state.ef_residual      # EF needs a lossy wire: never fused
         if fused is not None:
             merged, server, counts, applied, acc_sub, slots = fused
             with obs.span("downlink"):
@@ -533,14 +610,18 @@ class Engine:
             # Metering sees the client-proposed slot tags — the frames
             # that crossed the wire — never the post-assign ids.
             with obs.span("uplink_codec"):
-                dec, up_bytes = self._wire_uplink(state, vecs, slots, part,
-                                                  sub_refs=sub_refs)
+                dec, up_bytes, ef = self._wire_uplink(
+                    state, vecs, slots, part, sub_refs=sub_refs)
                 obs.fence(dec)
 
             # (3b) server-side assignment (v2): recompute every upload's
             # slot id from the decoded payloads — FLIS's per-round
-            # dynamic clustering; absent hook = keep proposed ids
-            if self._assign is not None:
+            # dynamic clustering; absent hook = keep proposed ids.
+            # Async strategies skip this stage: their uploads cross
+            # rounds in the buffer, so `assign` runs over the *matured
+            # buffer contents* at aggregation time instead
+            # (:meth:`_aggregate_async_host`).
+            if self._assign is not None and sync:
                 with obs.span("assign"):
                     slots = self.executor.assign(
                         self.strategy, state.server, dec, slots,
@@ -558,12 +639,11 @@ class Engine:
                 with obs.span("server_update"):
                     server = self._server_update(state.server, agg, counts)
                     obs.fence(server)
-            elif self.cfg.async_buffer == "host":
+            elif self.cfg.async_buffer == "host" or self._async_hooks:
                 with obs.span("aggregate"):
-                    srv_mat, counts, n_agg, n_buf, n_evict, buf = \
+                    server, counts, n_agg, n_buf, n_evict, buf = \
                         self._aggregate_async_host(state, dec, slots,
                                                    part, r)
-                    server = state.server._replace(slots=srv_mat)
                     obs.fence(server, counts)
             else:
                 with obs.span("aggregate"):
@@ -628,11 +708,11 @@ class Engine:
             if self._mmap:
                 new_state, acc, assignment = self._store_eval(
                     state, part.idx, merged, applied, server, buf, refs,
-                    sub_data)
+                    ef, sub_data)
             else:
                 new_state, acc, assignment = self._scatter_eval(
                     state, part.idx, merged, applied, server, buf, refs,
-                    acc_sub)
+                    ef, acc_sub)
             obs.fence(acc)
 
         if self._mmap:
@@ -695,7 +775,16 @@ class Engine:
         the aggregator knows because it recorded what it sent.  A client
         that missed recent broadcasts therefore pays for its real,
         larger delta: the metered savings are honest under partial
-        participation."""
+        participation.
+
+        Error-feedback codecs (compression v2) add each client's
+        per-slot residual memory before encoding and keep this frame's
+        quantization error as the next residual
+        (:func:`repro.fl.runtime.codec.ef_encode`); the updated
+        ``ef_residual`` lane is returned alongside the decoded uploads.
+        Residuals advance for every *sent* frame — a straggler's frame
+        that misses the sync barrier was still sent, so its residual
+        moved."""
         cfg = self.cfg.codec
         np_slots = np.asarray(slots)
         active = np.asarray(part.active)
@@ -703,7 +792,8 @@ class Engine:
             # bit-exact identity wire: skip the host round-trip, meter
             # arithmetically.  Keeps the default round free of
             # per-frame Python.
-            return vecs, self._identity_upload_bytes(np_slots, active)
+            return (vecs, self._identity_upload_bytes(np_slots, active),
+                    state.ef_residual)
         np_vecs = np.asarray(vecs, np.float32)
         # gather the K participants' reference rows on device — never
         # pull the full (n, n_slots, d) population tensor to the host.
@@ -716,6 +806,10 @@ class Engine:
         else:
             np_refs = np.asarray(state.ref_vecs[jnp.asarray(part.idx)],
                                  np.float32)
+        sub_ef = None
+        if cfg.error_feedback:
+            sub_ef = np.array(np.asarray(
+                state.ef_residual[jnp.asarray(part.idx)], np.float32))
         dec = np.zeros_like(np_vecs)
         total = 0
         for c in range(np_vecs.shape[0]):
@@ -726,10 +820,17 @@ class Engine:
                 if s < 0:
                     continue                # nothing shared in this slot
                 ref = np_refs[c, s] if cfg.sparse else None
-                frame = encode(np_vecs[c, j], cfg, ref=ref)
+                if sub_ef is not None:
+                    frame, sub_ef[c, s] = ef_encode(
+                        np_vecs[c, j], cfg, sub_ef[c, s], ref=ref)
+                else:
+                    frame = encode(np_vecs[c, j], cfg, ref=ref)
                 total += 4 + len(frame)
                 dec[c, j] = decode(frame, np_vecs.shape[2], cfg, ref=ref)
-        return jnp.asarray(dec), total
+        ef = state.ef_residual
+        if sub_ef is not None:
+            ef = ef.at[jnp.asarray(part.idx)].set(jnp.asarray(sub_ef))
+        return jnp.asarray(dec), total, ef
 
     def _update_refs(self, state: EngineState, part: Participation,
                      arrive, applied, rx_server, r: int):
@@ -865,11 +966,21 @@ class Engine:
 
     def _aggregate_async_host(self, state, dec, slots, part: Participation,
                               r):
-        """Host-buffered aggregation (``async_buffer="host"``): the
+        """Host-buffered aggregation (``async_buffer="host"``, and the
+        path every async strategy with server-side hooks takes): the
         original numpy insert loop, kept verbatim as the executable
         reference the device path is pinned against — insert this
         round's uploads, then fold in every matured entry once
-        ``async_min_uploads`` are available."""
+        ``async_min_uploads`` are available.
+
+        Strategies with an ``assign`` hook have it re-run here over the
+        matured buffer contents *at aggregation time* (buffer rows as
+        single-upload clients, contribution mask as arrival), so
+        FLIS-style dynamic membership is recomputed from what is
+        actually being folded in — not from stale send-time tags.  The
+        fold then goes through the strategy's ``server_update`` (the
+        Alg. 2 default reproduces the legacy in-place write bit for
+        bit).  Returns a full :class:`ServerState`."""
         cfg = self.cfg
         vecs = np.asarray(state.buf_vecs).copy()
         bslots = np.asarray(state.buf_slots).copy()
@@ -905,6 +1016,18 @@ class Engine:
                 seq[i] = next_seq
                 next_seq += 1
 
+        server, counts, n_agg, n_buf, buf = self._fold_host_buffer(
+            state, vecs, bslots, ready, weight, valid, seq, r)
+        return server, counts, n_agg, n_buf, evicted, buf
+
+    def _fold_host_buffer(self, state, vecs, bslots, ready, weight, valid,
+                          seq, r):
+        """Fold the matured host-buffer entries into the server (the
+        tail of :meth:`_aggregate_async_host`, shared with the real
+        transport's arrival-driven insert path — same maturity gate,
+        same assign-at-aggregation hook, same ``server_update`` fold).
+        Returns ``(server, counts, n_agg, n_buf, buf)``."""
+        cfg = self.cfg
         # an entry whose staleness discount rounds to zero weight can never
         # contribute to the weighted mean — treat it as consumed noise so
         # its slot isn't wrongly marked populated (and then broadcast)
@@ -914,23 +1037,33 @@ class Engine:
         if n_mature >= cfg.async_min_uploads:
             w = jnp.asarray(np.where(contrib, weight, 0.0), jnp.float32)
             s = jnp.asarray(np.where(contrib, bslots, -1), jnp.int32)
+            if self._assign is not None:
+                # assignment at aggregation time: the matured buffer
+                # rows are the round's "uploads" (one slot each), the
+                # contribution mask the arrival vector
+                new_s = self.executor.assign(
+                    self.strategy, state.server,
+                    jnp.asarray(vecs)[:, None, :], s[:, None],
+                    jnp.asarray(contrib))
+                s = jnp.where(jnp.asarray(contrib),
+                              new_s[:, 0], -1).astype(jnp.int32)
             mean = masked_collectives.clustered_weighted_mean(
                 jnp.asarray(vecs), s, w, self.strategy.n_slots)
             counts = jax.nn.one_hot(
                 s, self.strategy.n_slots, dtype=jnp.float32).sum(0)
-            server = jnp.where(counts[:, None] > 0, mean, state.server.slots)
+            server = self._server_update(state.server, mean, counts)
             valid = valid & ~mature
             n_agg = int(contrib.sum())
         else:
-            server = state.server.slots
+            server = state.server
             counts = jnp.zeros((self.strategy.n_slots,), jnp.float32)
             n_agg = 0
         buf = (jnp.asarray(vecs), jnp.asarray(bslots), jnp.asarray(ready),
                jnp.asarray(weight), jnp.asarray(valid), jnp.asarray(seq))
-        return server, counts, n_agg, int(valid.sum()), evicted, buf
+        return server, counts, n_agg, int(valid.sum()), buf
 
     def _scatter_eval(self, state: EngineState, idx, merged, applied,
-                      server, buf, refs, acc_sub):
+                      server, buf, refs, ef, acc_sub):
         """Scatter the merged sub-pytree back into the population,
         evaluate everyone, build the next state.  ``acc_sub`` is the
         fused program's per-client accuracy (full population when the
@@ -958,11 +1091,11 @@ class Engine:
             round_idx=state.round_idx + 1, client_state=cs, server=server,
             buf_vecs=buf[0], buf_slots=buf[1], buf_ready=buf[2],
             buf_weight=buf[3], buf_valid=buf[4], buf_seq=buf[5],
-            ref_vecs=refs[0], ref_round=refs[1])
+            ref_vecs=refs[0], ref_round=refs[1], ef_residual=ef)
         return new_state, acc, assignment
 
     def _store_eval(self, state: EngineState, idx, merged, applied,
-                    server, buf, refs, sub_data):
+                    server, buf, refs, ef, sub_data):
         """mmap counterpart of :meth:`_scatter_eval`: the population
         already lives in the store (the round spilled the merged rows
         before this), so the next state keeps its zero-row placeholders.
@@ -1002,5 +1135,5 @@ class Engine:
             client_state=state.client_state, server=server,
             buf_vecs=buf[0], buf_slots=buf[1], buf_ready=buf[2],
             buf_weight=buf[3], buf_valid=buf[4], buf_seq=buf[5],
-            ref_vecs=refs[0], ref_round=refs[1])
+            ref_vecs=refs[0], ref_round=refs[1], ef_residual=ef)
         return new_state, acc, assignment

@@ -89,6 +89,35 @@ class Participation(NamedTuple):
         }
 
 
+def arrival_participation(client_ids, observed_lag) -> Participation:
+    """Participation as a real transport server *observed* it for one
+    round: the uploads that actually crossed the wire, with their real
+    arrival lags (arrival round − source round) — rather than the
+    injected schedule :meth:`Scheduler.sample` drew.
+
+    ``client_ids[i]`` is the global id behind the i-th arrival this
+    round; ``observed_lag[i]`` its lag in rounds (0 = produced and
+    delivered in the same round, s ≥ 1 = a straggler's upload the
+    worker flushed s rounds after training).  Every listed upload did
+    arrive, so ``active`` is all-True, and :meth:`Participation.summary`
+    yields the observed staleness histogram the transport runner records
+    in round events — same gauge schema as the scheduled view."""
+    ids = np.asarray(client_ids, np.int32).ravel()
+    lag = np.asarray(observed_lag, np.int32).ravel()
+    if ids.shape != lag.shape:
+        raise ValueError(
+            f"arrival_participation: client_ids{ids.shape} and "
+            f"observed_lag{lag.shape} must be the same length")
+    if lag.size and int(lag.min()) < 0:
+        raise ValueError(
+            "arrival_participation: negative observed lag — an upload "
+            "cannot arrive before the round that produced it")
+    return Participation(
+        idx=jnp.asarray(ids),
+        active=jnp.ones((ids.size,), bool),
+        staleness=jnp.asarray(lag))
+
+
 class Scheduler:
     def __init__(self, cfg: SchedulerConfig, n_clients: int,
                  weights: jnp.ndarray | None = None):

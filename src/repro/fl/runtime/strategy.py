@@ -591,8 +591,11 @@ class FLISStrategy(MLPStrategyBase):
     far nearer reference than the zero row the old placeholder tag
     forced, so deltas stay small whenever membership is sticky.
 
-    Requires ``aggregation="sync"``: dynamic assignment is a round-
-    synchronous server decision (the engine rejects async at init)."""
+    Works under both aggregation modes: sync runs :meth:`assign` as a
+    round-synchronous server stage; async runs it over the *matured
+    buffer contents* at aggregation time (the engine's host buffer
+    path), so membership is recomputed from whichever uploads actually
+    arrived together."""
 
     max_slots: int = 8
     probe_size: int = 64

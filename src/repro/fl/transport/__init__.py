@@ -1,0 +1,31 @@
+"""Real-transport federated runtime (docs/transport.md).
+
+The federated round over an actual wire: a server process
+(:class:`TransportEngine`) exchanging length-prefixed frames with M
+client-worker peers, each owning a contiguous block of the population.
+:class:`LoopbackTransport` runs the workers in-process over in-memory
+queues — the reference the conformance suite pins bit-identical to the
+in-process engine on the identity wire — and :class:`SocketTransport`
+runs them as real subprocesses over local TCP, where staleness and
+dropout are what actually happened on the wire, not an injected
+schedule.
+"""
+from repro.fl.transport.faults import FaultPlan, RetryPolicy
+from repro.fl.transport.framing import (MAX_FRAME, BadMagicError,
+                                        DisconnectError, FrameTooLargeError,
+                                        TruncatedFrameError, WireError,
+                                        decode_frame, pack_frame, read_frame)
+from repro.fl.transport.loopback import LoopbackTransport
+from repro.fl.transport.messages import MsgKind
+from repro.fl.transport.runner import TransportEngine
+from repro.fl.transport.socket_transport import SocketTransport
+from repro.fl.transport.worker import ClientWorker, block_range
+
+__all__ = [
+    "FaultPlan", "RetryPolicy",
+    "WireError", "BadMagicError", "FrameTooLargeError",
+    "TruncatedFrameError", "DisconnectError",
+    "MAX_FRAME", "pack_frame", "read_frame", "decode_frame",
+    "MsgKind", "LoopbackTransport", "SocketTransport",
+    "ClientWorker", "block_range", "TransportEngine",
+]

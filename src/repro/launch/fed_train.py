@@ -332,6 +332,35 @@ def main(argv: list[str] | None = None) -> dict:
                     choices=("float32", "int8", "int4"))
     ap.add_argument("--sparse", action="store_true",
                     help="sparse delta encoding of uploads")
+    ap.add_argument("--error-feedback", action="store_true",
+                    dest="error_feedback",
+                    help="compression v2: per-client error-feedback "
+                         "residual memory on the lossy int8/int4 uplink "
+                         "— each frame's quantization error is added "
+                         "back before the next encode, so the bias "
+                         "cancels over rounds (carried in the engine "
+                         "state, checkpoint-resumable)")
+    ap.add_argument("--index-coding", default="u2", dest="index_coding",
+                    choices=("u2", "vrle"),
+                    help="compression v2: sparse-delta index stream "
+                         "coding — u2 = raw uint16 indices, vrle = "
+                         "varint-coded gap/run-length (smaller for "
+                         "clustered or dense masks; requires --sparse)")
+    # real transport (docs/transport.md)
+    ap.add_argument("--transport", default="inprocess",
+                    choices=("inprocess", "loopback", "socket"),
+                    help="where the federated round's client half runs: "
+                         "inprocess = the single-process engine, "
+                         "loopback = worker peers behind in-memory "
+                         "framed queues (bit-identical to inprocess on "
+                         "the identity wire, conformance-pinned), "
+                         "socket = real worker subprocesses over local "
+                         "TCP, exchanging the encoded uplink/downlink "
+                         "frames as length-prefixed messages")
+    ap.add_argument("--workers", type=int, default=0, metavar="M",
+                    help="transport worker peers; the client population "
+                         "is partitioned into M contiguous blocks "
+                         "(required ≥ 1 for --transport loopback/socket)")
     # aggregation mode
     ap.add_argument("--mode", default="sync", choices=("sync", "async"))
     ap.add_argument("--async-min-uploads", type=int, default=4)
@@ -467,7 +496,10 @@ def main(argv: list[str] | None = None) -> dict:
             participation=participation, sampling=args.sampling,
             dropout=args.dropout, straggler=args.straggler,
             max_staleness=args.max_staleness),
-        codec=CodecConfig(args.codec, sparse=args.sparse),
+        codec=CodecConfig(args.codec, sparse=args.sparse,
+                          error_feedback=args.error_feedback,
+                          index_coding=args.index_coding),
+        transport=args.transport, workers=args.workers,
         aggregation=args.mode,
         async_min_uploads=args.async_min_uploads,
         buffer_capacity=args.buffer_capacity,
@@ -485,7 +517,34 @@ def main(argv: list[str] | None = None) -> dict:
         from repro.fl import obs
         telemetry = obs.RunRecorder(run_dir=args.telemetry_dir,
                                     profile_dir=args.profile_dir)
-    engine = Engine(strategy, data, rt_cfg, mesh=mesh, telemetry=telemetry)
+    runner = None
+    if args.transport != "inprocess":
+        if args.resume:
+            raise SystemExit("--resume is an in-process engine feature; "
+                             "transport runs restart from round 0")
+        if streaming:
+            raise SystemExit("--transport partitions a materialized "
+                             "population over worker blocks — not "
+                             "available with --n-clients streaming")
+        from repro.fl.transport import TransportEngine
+        spec = None
+        if args.transport == "socket":
+            # worker subprocesses rebuild the identical scenario from
+            # these knobs (build_scenario is deterministic in them)
+            spec = {"scenario": dict(
+                dataset=args.dataset, data_dir=args.data_dir,
+                encoding=args.encoding, clients=args.clients,
+                clauses=args.clauses, seed=args.seed,
+                experiment=args.experiment, writers=args.writers,
+                rounds=args.rounds, local_epochs=args.local_epochs,
+                strategy=args.strategy, max_slots=args.max_slots,
+                probe_size=args.probe_size)}
+        runner = TransportEngine(strategy, data, rt_cfg,
+                                 telemetry=telemetry, spec=spec)
+        engine = runner.eng
+    else:
+        engine = Engine(strategy, data, rt_cfg, mesh=mesh,
+                        telemetry=telemetry)
     if telemetry is not None:
         telemetry.start(obs.build_manifest(
             config=rt_cfg, seed=args.seed, mesh=mesh,
@@ -514,9 +573,14 @@ def main(argv: list[str] | None = None) -> dict:
                         "download_bytes_broadcast": 0,
                         "download_bytes_per_client": 0}
 
-    where = "in-process" if mesh is None else \
-        f"shard_map over {engine.executor.n_shards}-device clients mesh " \
-        f"({args.collective})"
+    if runner is not None:
+        where = (f"{args.transport} transport, {args.workers} worker "
+                 f"{'peers' if args.transport == 'loopback' else 'processes'}")
+    elif mesh is None:
+        where = "in-process"
+    else:
+        where = f"shard_map over {engine.executor.n_shards}-device " \
+                f"clients mesh ({args.collective})"
     if streaming:
         split = f"streamed ({len(pool.users)} writers, cyclic)"
     elif getattr(pool, "writers", None) is not None:
@@ -536,7 +600,10 @@ def main(argv: list[str] | None = None) -> dict:
               f"p in [{float(p.min()):.4f}, {float(p.max()):.4f}]",
               flush=True)
     try:
-        state, reports = engine.run(key, state=state, rounds=remaining)
+        if runner is not None:
+            state, reports = runner.run(key)
+        else:
+            state, reports = engine.run(key, state=state, rounds=remaining)
     finally:
         if telemetry is not None:
             telemetry.close()
@@ -558,6 +625,9 @@ def main(argv: list[str] | None = None) -> dict:
             extra = (f" agg={rep.aggregated_uploads}"
                      f" buf={rep.buffered_uploads}"
                      f" evict={rep.evicted_uploads}")
+        if runner is not None:
+            extra += (f" wire_tx={rep.wire_tx_bytes}B"
+                      f" wire_rx={rep.wire_rx_bytes}B")
         print(f"round {rep.round_idx:3d}: "
               f"acc={float(rep.mean_accuracy):.4f} "
               f"w10%={worst_decile_mean(rep.per_client_accuracy):.4f} "

@@ -1,0 +1,583 @@
+"""Real-transport runtime tests: wire framing, message packing,
+compression v2 (error feedback + varint/RLE index coding), the
+loopback==in-process conformance pin, fault injection/retry, and the
+multi-process socket smoke (slow-marked)."""
+import dataclasses
+import io
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tm
+from repro.data import partition, synthetic
+from repro.fl.runtime import (CodecConfig, Engine, RuntimeConfig,
+                              Scheduler, SchedulerConfig, TPFLStrategy,
+                              checkpointing, codec)
+from repro.fl.runtime.executors import InProcessExecutor, applied_slots
+from repro.fl.runtime.scheduler import arrival_participation
+from repro.fl.runtime.strategy import (build_baseline_strategy,
+                                       resolve_server_update)
+from repro.fl import masked_collectives
+from repro.fl.transport import (BadMagicError, DisconnectError, FaultPlan,
+                                FrameTooLargeError, MsgKind, RetryPolicy,
+                                TransportEngine, TruncatedFrameError,
+                                WireError, framing)
+from repro.fl.transport import messages as msgs
+
+TM_CFG = tm.TMConfig(n_classes=10, n_clauses=20, n_features=100,
+                     n_states=63, s=5.0, T=20)
+
+
+def _data(n_clients=6, seed=0):
+    x, y, dcfg = synthetic.make_dataset("synthmnist", 1500,
+                                        jax.random.PRNGKey(seed), side=10)
+    return partition.partition(
+        x, y, dcfg.n_classes, n_clients=n_clients, experiment=5,
+        key=jax.random.PRNGKey(seed + 1), n_train=40, n_test=20, n_conf=20)
+
+
+def _flis(max_slots=4):
+    return build_baseline_strategy(
+        "flis_dc", n_features=100, n_classes=10, n_hidden=16,
+        local_epochs=1, max_slots=max_slots, probe_size=32)
+
+
+def _stream_reader(buf: bytes):
+    bio = io.BytesIO(buf)
+    return lambda n: bio.read(n)
+
+
+# ---------------------------------------------------------------------------
+# framing: length-prefixed wire robustness
+# ---------------------------------------------------------------------------
+
+def test_frame_roundtrip_property():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        kind = int(rng.integers(0, 256))
+        payload = rng.bytes(int(rng.integers(0, 512)))
+        frame = framing.pack_frame(kind, payload)
+        k, p, consumed = framing.decode_frame(frame)
+        assert (k, p, consumed) == (kind, payload, len(frame))
+        k2, p2 = framing.read_frame(_stream_reader(frame))
+        assert (k2, p2) == (kind, payload)
+
+
+def test_bad_magic_is_loud():
+    frame = bytearray(framing.pack_frame(2, b"hello"))
+    frame[0] ^= 0xFF
+    with pytest.raises(BadMagicError):
+        framing.read_frame(_stream_reader(bytes(frame)))
+
+
+def test_truncated_frame_mid_payload_is_loud():
+    frame = framing.pack_frame(2, b"hello world")
+    with pytest.raises(TruncatedFrameError):
+        framing.read_frame(_stream_reader(frame[:-3]))
+
+
+def test_disconnect_at_frame_boundary():
+    """EOF between frames is a disconnect, not a truncation."""
+    with pytest.raises(DisconnectError):
+        framing.read_frame(_stream_reader(b""))
+
+
+def test_oversized_length_prefix_is_loud():
+    hdr = framing.HEADER.pack(framing.MAGIC, 1, framing.MAX_FRAME + 1)
+    with pytest.raises(FrameTooLargeError):
+        framing.read_frame(_stream_reader(hdr))
+
+
+def test_corrupted_header_property():
+    """Flipping any header byte either raises a typed WireError or
+    changes what the stream decodes to — corruption is never silently
+    absorbed."""
+    payload = b"x" * 40
+    frame = framing.pack_frame(3, payload)
+    second = framing.pack_frame(4, b"tail")
+    rng = np.random.default_rng(1)
+    for _ in range(60):
+        pos = int(rng.integers(0, framing.HEADER.size))
+        flip = int(rng.integers(1, 256))
+        buf = bytearray(frame + second)
+        buf[pos] ^= flip
+        reader = _stream_reader(bytes(buf))
+        try:
+            out = [framing.read_frame(reader), framing.read_frame(reader)]
+        except WireError:
+            continue                        # loud typed failure: good
+        assert out != [(3, payload), (4, b"tail")]
+
+
+# ---------------------------------------------------------------------------
+# round-protocol messages
+# ---------------------------------------------------------------------------
+
+def test_message_roundtrip_property():
+    rng = np.random.default_rng(2)
+    for _ in range(20):
+        clients = tuple(
+            msgs.WorkClient(gidx=int(rng.integers(0, 1000)),
+                            key=(int(rng.integers(0, 2**32)),
+                                 int(rng.integers(0, 2**32))),
+                            active=bool(rng.integers(0, 2)),
+                            staleness=int(rng.integers(0, 4)))
+            for _ in range(int(rng.integers(0, 5))))
+        rows = tuple(rng.bytes(int(rng.integers(0, 64)))
+                     for _ in range(int(rng.integers(1, 4))))
+        w = msgs.Work(round_idx=int(rng.integers(0, 100)), dim=16,
+                      rows=rows, clients=clients)
+        assert msgs.Work.unpack(w.pack()) == w
+
+        entries = tuple(
+            msgs.UploadEntry(
+                gidx=int(rng.integers(0, 1000)),
+                src_round=int(rng.integers(0, 100)),
+                staleness=int(rng.integers(0, 4)),
+                frames=tuple((int(rng.integers(0, 3)),
+                              int(rng.integers(0, 8)),
+                              rng.bytes(int(rng.integers(0, 32))))
+                             for _ in range(int(rng.integers(0, 3)))))
+            for _ in range(int(rng.integers(0, 4))))
+        u = msgs.Upload(round_idx=3, entries=entries)
+        assert msgs.Upload.unpack(u.pack()) == u
+
+        dl = msgs.Downlink(
+            round_idx=7, dim=16, rows=rows,
+            clients=tuple(
+                msgs.DownClient(gidx=i, arrive=bool(i % 2),
+                                applied=(int(rng.integers(-1, 4)),))
+                for i in range(3)))
+        assert msgs.Downlink.unpack(dl.pack()) == dl
+
+        acc = rng.random(5).astype(np.float32)
+        ev = msgs.Eval.unpack(msgs.Eval(round_idx=1, acc=acc).pack())
+        assert np.array_equal(ev.acc, acc)
+
+
+def test_message_trailing_and_truncated_bytes_are_loud():
+    buf = msgs.Work(round_idx=0, dim=4, rows=(b"abcd",),
+                    clients=()).pack()
+    with pytest.raises(WireError):
+        msgs.Work.unpack(buf + b"\x00")     # trailing garbage
+    with pytest.raises(WireError):
+        msgs.Work.unpack(buf[:-2])          # truncated payload
+
+
+# ---------------------------------------------------------------------------
+# compression v2: varint+RLE index coding and error feedback
+# ---------------------------------------------------------------------------
+
+def test_vrle_roundtrip_matches_u2_decode():
+    rng = np.random.default_rng(3)
+    for _ in range(20):
+        m = int(rng.integers(8, 300))
+        ref = rng.normal(scale=10.0, size=m).astype(np.float32)
+        vec = ref.copy()
+        nz = rng.choice(m, size=int(rng.integers(0, max(2, m // 10))),
+                        replace=False)
+        vec[nz] += rng.normal(scale=5.0, size=nz.size).astype(np.float32)
+        u2 = CodecConfig("int8", sparse=True)
+        v2 = CodecConfig("int8", sparse=True, index_coding="vrle")
+        out_u2 = codec.decode(codec.encode(vec, u2, ref=ref), m, u2,
+                              ref=ref)
+        out_v2 = codec.decode(codec.encode(vec, v2, ref=ref), m, v2,
+                              ref=ref)
+        assert np.array_equal(out_u2, out_v2)
+
+
+def test_vrle_addresses_vectors_beyond_u2_range():
+    """Varint indices lift the legacy <u2 65535-entry ceiling."""
+    m = 70_000
+    ref = np.zeros(m, np.float32)
+    vec = ref.copy()
+    idx = np.array([5, 6, 7, 66_000, 69_999])
+    vec[idx] = 42.0
+    cfg = CodecConfig("int8", sparse=True, index_coding="vrle")
+    buf = codec.encode(vec, cfg, ref=ref)
+    assert len(buf) < 100                   # 5 entries, not 70k
+    out = codec.decode(buf, m, cfg, ref=ref)
+    tol = codec.roundtrip_tolerance(vec - ref, cfg)
+    assert np.abs(out - vec).max() <= tol + 1e-6
+    assert set(np.nonzero(out)[0]) == set(idx.tolist())
+
+
+def test_vrle_smaller_for_clustered_indices():
+    m = 4096
+    ref = np.zeros(m, np.float32)
+    vec = ref.copy()
+    vec[100:400] = np.linspace(1, 5, 300, dtype=np.float32)  # one run
+    u2 = CodecConfig("int8", sparse=True)
+    v2 = CodecConfig("int8", sparse=True, index_coding="vrle")
+    assert len(codec.encode(vec, v2, ref=ref)) < \
+        len(codec.encode(vec, u2, ref=ref))
+
+
+def test_error_feedback_cancels_quantization_bias():
+    """Over repeated rounds the EF stream's *accumulated* decode error
+    stays bounded near one quantization step, while the plain lossy
+    stream's bias adds up linearly."""
+    cfg = CodecConfig("int4", error_feedback=True)
+    rng = np.random.default_rng(4)
+    vec = rng.normal(scale=10.0, size=64).astype(np.float32)
+    residual = np.zeros_like(vec)
+    ef_sum = np.zeros_like(vec)
+    plain_sum = np.zeros_like(vec)
+    rounds = 32
+    for _ in range(rounds):
+        frame, residual = codec.ef_encode(vec, cfg, residual)
+        ef_sum += codec.decode(frame, 64, cfg)
+        plain_sum += codec.decode(codec.encode(vec, cfg), 64, cfg)
+    target = rounds * vec
+    step = codec.roundtrip_tolerance(vec, cfg)
+    assert np.abs(ef_sum - target).max() <= 2 * step + 1e-4
+    assert np.abs(ef_sum - target).max() < np.abs(plain_sum - target).max()
+
+
+def test_codec_config_v2_validation():
+    with pytest.raises(ValueError, match="requires sparse=True"):
+        CodecConfig("int8", index_coding="vrle")
+    with pytest.raises(ValueError, match="lossy codec"):
+        CodecConfig("float32", error_feedback=True)
+    with pytest.raises(ValueError, match="unknown index_coding"):
+        CodecConfig("int8", sparse=True, index_coding="rle9")
+
+
+# ---------------------------------------------------------------------------
+# RuntimeConfig transport validation
+# ---------------------------------------------------------------------------
+
+def test_runtime_config_transport_validation():
+    with pytest.raises(ValueError, match="unknown transport"):
+        RuntimeConfig(transport="sockets")          # the typo, loudly
+    with pytest.raises(ValueError, match="workers >= 1"):
+        RuntimeConfig(transport="loopback")
+    with pytest.raises(ValueError, match="transport knob"):
+        RuntimeConfig(transport="inprocess", workers=2)
+    with pytest.raises(ValueError, match="sparse"):
+        RuntimeConfig(transport="socket", workers=2, aggregation="async",
+                      codec=CodecConfig("int8", sparse=True))
+
+
+def test_arrival_participation_validation_and_summary():
+    with pytest.raises(ValueError, match="same length"):
+        arrival_participation([1, 2], [0])
+    with pytest.raises(ValueError, match="cannot arrive before"):
+        arrival_participation([1], [-1])
+    s = arrival_participation([3, 5, 9], [0, 2, 0]).summary()
+    assert s["sampled"] == 3 and s["stragglers"] == 1
+    assert s["staleness_hist"] == [2, 0, 1]
+
+
+# ---------------------------------------------------------------------------
+# loopback == in-process: the conformance pin
+# ---------------------------------------------------------------------------
+
+def _assert_runs_equal(strategy, data, cfg, key, rounds=2):
+    """Reports (every pre-transport field), codec-metered byte totals,
+    and final state must be bit-identical between the in-process engine
+    and the loopback transport; the wire gauges are transport-only
+    extras (framed bytes that actually crossed the wire — zero by
+    definition in-process)."""
+    eng = Engine(strategy, data, dataclasses.replace(cfg, rounds=rounds))
+    st_a, reps_a = eng.run(key)
+    tr = TransportEngine(strategy, data,
+                         dataclasses.replace(cfg, rounds=rounds,
+                                             transport="loopback",
+                                             workers=2))
+    st_b, reps_b = tr.run(key)
+    for ra, rb in zip(reps_a, reps_b):
+        assert ra.round_idx == rb.round_idx
+        assert np.array_equal(np.asarray(ra.per_client_accuracy),
+                              np.asarray(rb.per_client_accuracy))
+        assert np.array_equal(np.asarray(ra.assignment),
+                              np.asarray(rb.assignment))
+        assert np.array_equal(np.asarray(ra.cluster_counts),
+                              np.asarray(rb.cluster_counts))
+        assert ra.upload_bytes == rb.upload_bytes
+        assert ra.download_bytes_broadcast == rb.download_bytes_broadcast
+        assert ra.download_bytes_per_client == rb.download_bytes_per_client
+        assert ra.aggregated_uploads == rb.aggregated_uploads
+        assert ra.wire_tx_bytes == 0 and ra.wire_rx_bytes == 0
+        assert rb.wire_tx_bytes > 0 and rb.wire_rx_bytes > 0
+    leaves_a, leaves_b = jax.tree.leaves(st_a), jax.tree.leaves(st_b)
+    assert len(leaves_a) == len(leaves_b)
+    for a, b in zip(leaves_a, leaves_b):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    return reps_b
+
+
+def test_loopback_equals_inprocess_identity_wire():
+    data = _data()
+    _assert_runs_equal(TPFLStrategy(TM_CFG, local_epochs=1), data,
+                       RuntimeConfig(), jax.random.PRNGKey(42))
+
+
+def test_loopback_equals_inprocess_int8_error_feedback():
+    """Lossy wire + EF residual memory: worker-held residuals advance
+    identically to the engine's ``ef_residual`` lane (re-assembled into
+    the loopback final state)."""
+    data = _data()
+    _assert_runs_equal(
+        TPFLStrategy(TM_CFG, local_epochs=1), data,
+        RuntimeConfig(codec=CodecConfig("int8", error_feedback=True)),
+        jax.random.PRNGKey(42), rounds=3)
+
+
+def test_loopback_equals_inprocess_partial_participation():
+    """K-of-N sampling + dropout + stragglers: the sync barrier over
+    real frames (straggler frames are sent and metered, then discarded
+    by the barrier) matches the injected-schedule engine."""
+    data = _data(n_clients=8)
+    _assert_runs_equal(
+        TPFLStrategy(TM_CFG, local_epochs=1), data,
+        RuntimeConfig(scheduler=SchedulerConfig(
+            participation=0.75, dropout=0.2, straggler=0.3)),
+        jax.random.PRNGKey(7))
+
+
+def test_loopback_equals_inprocess_flis_assign_over_wire():
+    """Server-side dynamic assignment runs on the decoded frames the
+    wire actually delivered."""
+    data = _data()
+    _assert_runs_equal(_flis(), data,
+                       RuntimeConfig(codec=CodecConfig("int8")),
+                       jax.random.PRNGKey(3))
+
+
+def test_loopback_async_records_observed_staleness():
+    """Async over the transport is arrival-driven: workers hold
+    straggling uploads and flush them rounds later, and the server
+    records the real arrival lags."""
+    data = _data()
+    cfg = RuntimeConfig(rounds=4, aggregation="async",
+                        transport="loopback", workers=2,
+                        scheduler=SchedulerConfig(straggler=0.5,
+                                                  max_staleness=2))
+    _, reps = TransportEngine(TPFLStrategy(TM_CFG, local_epochs=1),
+                              data, cfg).run(jax.random.PRNGKey(0))
+    obs = [r.observed_staleness for r in reps]
+    assert all(o is not None for o in obs)
+    # something straggled: some round saw an upload with lag >= 1
+    assert any(len(o["staleness_hist"]) > 1 for o in obs)
+    assert all(r.wire_tx_bytes > 0 for r in reps)
+
+
+# ---------------------------------------------------------------------------
+# async × dynamic assignment: buffered FLIS vs a host reference loop
+# ---------------------------------------------------------------------------
+
+def test_async_buffered_flis_matches_host_reference_loop():
+    """The engine's assign-at-aggregation-time path (async + server-side
+    hooks) pinned bit-for-bit against an independent reference loop:
+    explicit numpy buffer, maturity gate, ``strategy.assign`` over the
+    matured entries, weighted clustered mean, ``server_update``."""
+    data = _data()
+    strategy = _flis()
+    cfg = RuntimeConfig(rounds=4, aggregation="async", async_min_uploads=2,
+                        buffer_capacity=32,
+                        scheduler=SchedulerConfig(straggler=0.4,
+                                                  max_staleness=2))
+    key = jax.random.PRNGKey(11)
+    eng = Engine(strategy, data, cfg)
+    st_eng, reps_eng = eng.run(key)
+
+    # -- reference loop ----------------------------------------------------
+    ex = InProcessExecutor()
+    srv_update = resolve_server_update(strategy)
+    n = int(data.x_train.shape[0])
+    cap, d = cfg.buffer_capacity, strategy.vec_dim
+    k_init, k_rounds = jax.random.split(key)
+    cs, server = strategy.init(k_init, n, data)
+    sched = Scheduler(cfg.scheduler, n)
+    bvecs = np.zeros((cap, d), np.float32)
+    bslots = np.full((cap,), -1, np.int32)
+    bready = np.zeros((cap,), np.int32)
+    bweight = np.zeros((cap,), np.float32)
+    bvalid = np.zeros((cap,), bool)
+    bseq = np.zeros((cap,), np.int32)
+    next_seq = 0
+    counts_per_round = []
+    for r in range(cfg.rounds):
+        round_key = jax.random.fold_in(k_rounds, r)
+        part = sched.sample(r, round_key)
+        keys = jax.random.split(round_key, n)[part.idx]
+        sub_cs = jax.tree.map(lambda a: a[part.idx], cs)
+        sub_data = jax.tree.map(lambda a: a[part.idx], data)
+        new_sub, vecs, slots = ex.train(strategy, sub_cs, server.slots,
+                                        sub_data, keys)
+        np_vecs, np_slots = np.asarray(vecs), np.asarray(slots)
+        active = np.asarray(part.active)
+        stale = np.asarray(part.staleness)
+        for c in range(np_vecs.shape[0]):
+            if not active[c]:
+                continue
+            for j in range(np_vecs.shape[1]):
+                if np_slots[c, j] < 0:
+                    continue
+                i = int(np.nonzero(~bvalid)[0][0])   # capacity is ample
+                bvecs[i] = np_vecs[c, j]
+                bslots[i] = np_slots[c, j]
+                bready[i] = r + int(stale[c])
+                bweight[i] = cfg.staleness_discount ** int(stale[c])
+                bvalid[i] = True
+                bseq[i] = next_seq
+                next_seq += 1
+        mature = bvalid & (bready <= r)
+        contrib = mature & (bweight > 0)
+        if int(mature.sum()) >= cfg.async_min_uploads:
+            s = jnp.asarray(np.where(contrib, bslots, -1), jnp.int32)
+            new_s = strategy.assign(server, jnp.asarray(bvecs)[:, None, :],
+                                    s[:, None], jnp.asarray(contrib))
+            s = jnp.where(jnp.asarray(contrib), new_s[:, 0],
+                          -1).astype(jnp.int32)
+            mean = masked_collectives.clustered_weighted_mean(
+                jnp.asarray(bvecs), s,
+                jnp.asarray(np.where(contrib, bweight, 0.0), jnp.float32),
+                strategy.n_slots)
+            counts = jax.nn.one_hot(s, strategy.n_slots,
+                                    dtype=jnp.float32).sum(0)
+            server = srv_update(server, mean, counts)
+            bvalid &= ~mature
+        else:
+            counts = jnp.zeros((strategy.n_slots,), jnp.float32)
+        counts_per_round.append(counts)
+        recv = jnp.asarray(active)
+        applied = applied_slots(slots, counts, recv)
+        merged = ex.apply_merge(strategy, new_sub, applied, server.slots,
+                                sub_cs, recv)
+        cs = merged      # full uniform participation: identity scatter
+
+    for rep, counts in zip(reps_eng, counts_per_round):
+        assert np.array_equal(np.asarray(rep.cluster_counts),
+                              np.asarray(counts))
+    assert np.array_equal(np.asarray(st_eng.server.slots),
+                          np.asarray(server.slots))
+    for a, b in zip(jax.tree.leaves(st_eng.client_state),
+                    jax.tree.leaves(cs)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# error-feedback residual state rides checkpoints
+# ---------------------------------------------------------------------------
+
+def test_ef_residual_checkpoint_resume_bit_identical(tmp_path):
+    data = _data()
+    strat = TPFLStrategy(TM_CFG, local_epochs=1)
+    cfg = RuntimeConfig(rounds=4,
+                        codec=CodecConfig("int8", error_feedback=True))
+    key = jax.random.PRNGKey(5)
+    full = Engine(strat, data, cfg)
+    st_full, reps_full = full.run(key)
+    assert float(jnp.abs(st_full.ef_residual).sum()) > 0
+
+    half = Engine(strat, data, dataclasses.replace(
+        cfg, rounds=2, checkpoint_dir=str(tmp_path), checkpoint_every=2))
+    half.run(key)
+    resumed = checkpointing.restore(
+        checkpointing.latest(tmp_path), half.init(jax.random.PRNGKey(0)))
+    assert resumed.ef_residual.shape == st_full.ef_residual.shape
+    st_res, reps_res = half.run(key, state=resumed, rounds=2)
+
+    for a, b in zip(reps_full[2:], reps_res):
+        assert np.array_equal(np.asarray(a.per_client_accuracy),
+                              np.asarray(b.per_client_accuracy))
+        assert a.upload_bytes == b.upload_bytes
+    assert np.array_equal(np.asarray(st_full.ef_residual),
+                          np.asarray(st_res.ef_residual))
+    assert np.array_equal(np.asarray(st_full.server.slots),
+                          np.asarray(st_res.server.slots))
+
+
+# ---------------------------------------------------------------------------
+# fault injection and retry
+# ---------------------------------------------------------------------------
+
+def test_injected_disconnect_is_retried_and_run_unperturbed():
+    """A disconnect on the server's recv path is retried with backoff;
+    the queued frame is intact, so the run's results are unchanged."""
+    data = _data()
+    strat = TPFLStrategy(TM_CFG, local_epochs=1)
+    cfg = RuntimeConfig(rounds=2, transport="loopback", workers=2)
+    key = jax.random.PRNGKey(0)
+    _, clean = TransportEngine(strat, data, cfg).run(key)
+    faulty = TransportEngine(
+        strat, data, cfg,
+        faults=FaultPlan(disconnect=((0, 0), (1, 2))),
+        retry=RetryPolicy(attempts=3, backoff=0.001))
+    _, reps = faulty.run(key)
+    for ra, rb in zip(clean, reps):
+        assert np.array_equal(np.asarray(ra.per_client_accuracy),
+                              np.asarray(rb.per_client_accuracy))
+        assert ra.upload_bytes == rb.upload_bytes
+
+
+def test_retry_exhaustion_raises_disconnect():
+    data = _data()
+    strat = TPFLStrategy(TM_CFG, local_epochs=1)
+    eng = TransportEngine(
+        strat, data, RuntimeConfig(rounds=1, transport="loopback",
+                                   workers=2),
+        faults=FaultPlan(disconnect=((0, 0), (0, 1), (0, 2))),
+        retry=RetryPolicy(attempts=2, backoff=0.001))
+    with pytest.raises(DisconnectError):
+        eng.run(jax.random.PRNGKey(0))
+
+
+def test_fault_delay_shows_up_as_observed_staleness():
+    """An injected per-client delivery delay (async) surfaces as real
+    arrival lag in the round's observed-staleness section."""
+    data = _data()
+    strat = TPFLStrategy(TM_CFG, local_epochs=1)
+    cfg = RuntimeConfig(rounds=3, aggregation="async",
+                        transport="loopback", workers=2)
+    delayed = TransportEngine(strat, data, cfg,
+                              faults=FaultPlan(delay=((0, 2, 2),)))
+    _, reps = delayed.run(jax.random.PRNGKey(0))
+    # client 2's round-0 upload arrives in round 2 with lag 2
+    hist = reps[2].observed_staleness["staleness_hist"]
+    assert len(hist) >= 3 and hist[2] >= 1
+
+
+def test_fault_drop_removes_upload_from_barrier():
+    data = _data()
+    strat = TPFLStrategy(TM_CFG, local_epochs=1)
+    cfg = RuntimeConfig(rounds=1, transport="loopback", workers=2)
+    key = jax.random.PRNGKey(0)
+    _, clean = TransportEngine(strat, data, cfg).run(key)
+    dropped = TransportEngine(strat, data, cfg,
+                              faults=FaultPlan(drop=((0, 3),)))
+    _, reps = dropped.run(key)
+    assert reps[0].aggregated_uploads < clean[0].aggregated_uploads
+    assert reps[0].upload_bytes < clean[0].upload_bytes
+
+
+def test_fault_plan_and_retry_validation():
+    with pytest.raises(ValueError):
+        RetryPolicy(attempts=0)
+    plan = FaultPlan(delay=((0, 1, 2), (0, 1, 1)))
+    assert plan.delay_for(0, 1) == 3        # matching extras sum
+    assert plan.delay_for(1, 1) == 0
+
+
+# ---------------------------------------------------------------------------
+# socket transport: real multi-process smoke
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_socket_transport_matches_inprocess(tmp_path):
+    """End-to-end over real subprocesses + TCP: the fed_train driver's
+    socket run reproduces the in-process metrics exactly (identity
+    wire)."""
+    from repro.launch import fed_train
+    base = ["--clients", "6", "--rounds", "2", "--clauses", "16",
+            "--local-epochs", "1"]
+    ref = fed_train.main(base)
+    out = fed_train.main(base + ["--transport", "socket",
+                                 "--workers", "2"])
+    assert out["acc_per_round"] == ref["acc_per_round"]
+    assert out["upload_bytes"] == ref["upload_bytes"]
+    assert out["download_bytes_per_client"] == ref["download_bytes_per_client"]
